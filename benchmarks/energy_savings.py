@@ -1,0 +1,58 @@
+"""Paper's main table: energy saved + time overhead per factorization x
+strategy on the 16 x 16 process grid (256 ranks), ARC-cluster power model.
+
+Reproduces the paper's headline numbers:
+  * CP-aware slack reclamation and race-to-halt both save substantial
+    energy at < ~4% slowdown (paper: 3.5% / 3.9% average overhead).
+  * The *algorithmic* schedule (the paper's contribution) matches or beats
+    CP-aware savings with ~zero added overhead, because the plan is
+    precomputed from the task DAG.
+"""
+
+from __future__ import annotations
+
+from repro.core.dag import build_dag
+from repro.core.energy_model import make_processor
+from repro.core.scheduler import CostModel
+from repro.core.strategies import STRATEGIES, evaluate_strategies
+
+GRID = (16, 16)
+N_TILES = 20               # 20 x 20 tiles of 640 -> 12800 matrix per run
+TILE = 640
+
+
+def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID,
+        proc_name: str = "arc_opteron_6128"):
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    rows = []
+    for fact in ("cholesky", "lu", "qr"):
+        graph = build_dag(fact, n_tiles, tile, grid)
+        res = evaluate_strategies(graph, proc, cost)
+        for name in STRATEGIES:
+            r = res[name]
+            rows.append({
+                "factorization": fact, "strategy": name,
+                "makespan_s": r.makespan_s, "energy_j": r.energy_j,
+                "avg_power_w": r.avg_power_w,
+                "slowdown_pct": r.slowdown_pct,
+                "energy_saved_pct": r.energy_saved_pct,
+                "gear_switches": r.switch_count,
+            })
+    return rows
+
+
+def main() -> list[str]:
+    rows = run()
+    out = ["factorization,strategy,makespan_s,energy_j,avg_power_w,"
+           "slowdown_pct,energy_saved_pct,gear_switches"]
+    for r in rows:
+        out.append(f"{r['factorization']},{r['strategy']},"
+                   f"{r['makespan_s']:.4f},{r['energy_j']:.1f},"
+                   f"{r['avg_power_w']:.1f},{r['slowdown_pct']:.2f},"
+                   f"{r['energy_saved_pct']:.2f},{r['gear_switches']}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

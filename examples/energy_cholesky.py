@@ -1,0 +1,70 @@
+"""End-to-end paper scenario: distributed Cholesky with an algorithmic
+energy plan, from DAG to power trace.
+
+    PYTHONPATH=src python examples/energy_cholesky.py [--csv trace.csv]
+
+* builds the 2-D block-cyclic Cholesky DAG on the paper's 16x16 grid,
+* derives the static (algorithmic) DVFS schedule from per-task slack,
+* simulates all four strategies on the ARC cluster power model,
+* ACTUALLY runs the same factorization numerically (shard_map kernel on
+  however many devices this host has) and checks ||L L^T - A||,
+* writes the Fig-2-style 3-node power trace to CSV.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dag import build_dag
+from repro.core.energy_model import make_processor
+from repro.core.scheduler import CostModel, simulate
+from repro.core.strategies import evaluate_strategies, make_plan
+from repro.linalg import distributed as D
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--csv", default=None)
+ap.add_argument("--tiles", type=int, default=24)
+ap.add_argument("--tile-size", type=int, default=16)
+args = ap.parse_args()
+
+# ---------------------------------------------------- energy plan (16x16)
+print("=== strategies on the paper's 16x16 grid ===")
+graph = build_dag("cholesky", args.tiles, 2560, (16, 16))
+proc = make_processor("arc_opteron_6128")
+cost = CostModel()
+for name, r in evaluate_strategies(graph, proc, cost).items():
+    print(f"  {name:14s} time {r.makespan_s:7.3f} s   "
+          f"energy {r.energy_j / 1e3:8.2f} kJ   "
+          f"saved {r.energy_saved_pct:6.2f} %   "
+          f"slowdown {r.slowdown_pct:5.2f} %   "
+          f"switches {r.switch_count}")
+
+# --------------------------------------------- the actual numerical kernel
+print("\n=== the same algorithm, numerically, on this host's devices ===")
+n_dev = jax.device_count()
+q = 2 if n_dev >= 2 else 1
+p = n_dev // q
+mesh = jax.make_mesh((p, q), ("data", "model"))
+n = args.tiles * args.tile_size
+rng = np.random.default_rng(0)
+a = rng.standard_normal((n, n))
+a = (a @ a.T + n * np.eye(n)).astype(np.float32)
+l = np.asarray(D.factorize("cholesky", jnp.asarray(a), args.tile_size, mesh))
+err = np.abs(l @ l.T - a).max() / np.abs(a).max()
+print(f"  mesh {p}x{q}, N={n}: max |L L^T - A| / |A| = {err:.2e}")
+assert err < 1e-3
+
+# ----------------------------------------------------------- power trace
+if args.csv:
+    sched = simulate(graph, proc, cost,
+                     make_plan("algorithmic", graph, proc, cost))
+    times = np.linspace(0, sched.makespan, 500)
+    watts = sched.power_trace(times, nodes=(0, 1, 2))
+    with open(args.csv, "w") as f:
+        f.write("time_s,watts_3nodes\n")
+        for t, w in zip(times, watts):
+            f.write(f"{t:.4f},{w:.1f}\n")
+    print(f"  wrote power trace -> {args.csv}")
+print("done.")

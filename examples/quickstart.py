@@ -1,0 +1,55 @@
+"""Quickstart: the paper's energy machinery + the LM substrate in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Builds the tiled-Cholesky task DAG the paper schedules, computes the
+   per-task slack, and compares the four energy strategies.
+2. Trains a reduced qwen2.5-family model for 20 steps on CPU and generates
+   a few tokens -- the substrate the 10 production configs instantiate.
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, make_smoke
+from repro.core.dag import build_dag
+from repro.core.energy_model import make_processor
+from repro.core.scheduler import CostModel
+from repro.core.strategies import evaluate_strategies
+from repro.models import get_model
+from repro.serve.engine import generate
+from repro.train.data import SyntheticDataset
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+# ---------------------------------------------------------------- 1. paper
+print("=== energy strategies on a 12x12-tile Cholesky, 4x4 grid ===")
+graph = build_dag("cholesky", 12, 512, (4, 4))
+proc = make_processor("amd_opteron_2218")     # the paper's worked example CPU
+res = evaluate_strategies(graph, proc, CostModel())
+for name, r in res.items():
+    print(f"  {name:14s} time {r.makespan_s * 1e3:8.2f} ms   "
+          f"energy {r.energy_j:8.2f} J   saved {r.energy_saved_pct:6.2f} %"
+          f"   slowdown {r.slowdown_pct:5.2f} %")
+
+# ------------------------------------------------------------ 2. substrate
+print("\n=== 20 training steps of a reduced qwen2.5 config (CPU) ===")
+cfg = make_smoke(get_config("qwen2.5-3b"))
+api = get_model(cfg)
+opt_cfg = AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=20)
+state = init_train_state(api, opt_cfg, jax.random.key(0))
+step_fn = jax.jit(make_train_step(api, opt_cfg), donate_argnums=(0, 1))
+data = SyntheticDataset(cfg, batch=8, seq=64)
+
+params, opt = state.params, state.opt
+for step in range(20):
+    params, opt, metrics = step_fn(params, opt, data.batch_at(step))
+    if step % 5 == 0 or step == 19:
+        print(f"  step {step:3d}  loss {float(metrics['loss']):.4f}")
+
+print("\n=== greedy generation from the (briefly) trained model ===")
+prompt = data.batch_at(999)["tokens"][:2, :16]
+out = generate(api, params, {"tokens": prompt}, n_new=12)
+print("  prompt tails :", np.asarray(prompt[:, -4:]).tolist())
+print("  generated    :", np.asarray(out.tokens).tolist())
+print("done.")

@@ -1,0 +1,56 @@
+"""Batched serving across cache families: linear KV (qwen), ring KV +
+logit softcap (gemma2), recurrent states (recurrentgemma), SSD states
+(mamba2).
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-2b]
+
+Serves a batch of 4 prompts with a prefill + autoregressive decode loop on
+reduced configs (CPU-runnable), asserting finite logits and exercising
+exactly the cache layouts the decode_32k / long_500k dry-run cells shard.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, make_smoke
+from repro.models import get_model
+from repro.serve.engine import generate, temperature_sample
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default=None,
+                help="single arch; default: one per cache family")
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--new-tokens", type=int, default=16)
+args = ap.parse_args()
+
+archs = [args.arch] if args.arch else [
+    "qwen2.5-3b",           # linear KV cache
+    "gemma2-2b",            # ring (sliding-window) KV + softcap
+    "recurrentgemma-2b",    # RG-LRU recurrent state + local attn
+    "mamba2-370m",          # SSD state
+]
+
+for arch in archs:
+    cfg = make_smoke(get_config(arch))
+    api = get_model(cfg)
+    params = api.param_tree("init", jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (4, args.prompt_len),
+                                0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.frontend == "audio":
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.key(2), (4, cfg.frontend_len, cfg.d_model))
+    t0 = time.time()
+    out = generate(api, params, batch, n_new=args.new_tokens,
+                   sampler=temperature_sample)
+    dt = time.time() - t0
+    toks = np.asarray(out.tokens)
+    assert np.isfinite(np.asarray(out.prefill_logits)).all(), arch
+    assert toks.shape == (4, args.new_tokens)
+    print(f"{arch:22s} family={cfg.family:7s} "
+          f"prefill+{args.new_tokens}tok x4 reqs in {dt:5.1f}s  "
+          f"sample row0: {toks[0, :8].tolist()}")
+print("done.")

@@ -1,0 +1,56 @@
+"""End-to-end training driver with fault injection.
+
+    PYTHONPATH=src python examples/train_e2e.py            # ~10M params, fast
+    PYTHONPATH=src python examples/train_e2e.py --full     # ~100M params
+
+Demonstrates the production loop end to end:
+  1. trains a LM (reduced stablelm family) for a few hundred steps,
+  2. SIMULATES A NODE FAILURE by abandoning the in-memory state mid-run,
+  3. restarts from the latest atomic checkpoint and continues to the target
+     step -- final loss matches an uninterrupted run bit-for-bit because
+     the data pipeline is a pure function of (seed, step).
+"""
+
+import argparse
+import dataclasses
+import os
+import shutil
+
+import jax
+
+from repro.configs import get_config, make_smoke
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true", help="~100M-param model")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+args = ap.parse_args()
+
+ckpt = args.ckpt_dir
+shutil.rmtree(ckpt, ignore_errors=True)
+
+common = ["--arch", "stablelm-12b", "--smoke", "--ckpt-dir", ckpt,
+          "--ckpt-every", "50", "--energy-every", "100",
+          "--batch", "8", "--seq", "128", "--log-every", "25"]
+if args.full:
+    # ~100M params: the smoke config widened (d_model 512, 8L, 32k vocab
+    # -> 2 x 32768 x 512 + 8 x 12 x 512^2 = ~59M emb + ~25M blocks)
+    common += ["--d-model", "512", "--n-layers", "8", "--vocab", "32768"]
+
+crash_at = args.steps // 2
+print(f"=== phase 1: train to step ~{crash_at}, then 'crash' ===")
+train_main(common + ["--steps", str(args.steps), "--stop-at", str(crash_at)])
+
+print("\n=== phase 2: node failure! restart from latest checkpoint ===")
+out = train_main(common + ["--steps", str(args.steps), "--resume"])
+
+print("\n=== phase 3: uninterrupted reference run (fresh state) ===")
+shutil.rmtree(ckpt, ignore_errors=True)
+ref = train_main(common + ["--steps", str(args.steps)])
+
+diff = abs(out["final_loss"] - ref["final_loss"])
+print(f"\nresumed final loss  {out['final_loss']:.6f}")
+print(f"reference final loss {ref['final_loss']:.6f}   |diff| = {diff:.2e}")
+assert diff < 1e-3, "restart must reproduce the uninterrupted trajectory"
+print("fault-tolerant restart verified.")

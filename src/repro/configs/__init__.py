@@ -1,0 +1,111 @@
+"""Architecture registry: the 10 assigned configs + the paper's own
+factorization workload configs, plus reduced smoke variants and the
+(arch x input-shape) cell table used by the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS: dict[str, str] = {
+    "stablelm-12b": "stablelm_12b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "gemma2-2b": "gemma2_2b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "whisper-small": "whisper_small",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-370m": "mamba2_370m",
+    "internvl2-76b": "internvl2_76b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+# ------------------------------------------------------------- input shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _subquadratic(cfg: ModelConfig) -> bool:
+    """True iff every layer's cost/state is bounded independent of context
+    length (ssd / recurrent / local-window only)."""
+    if cfg.is_encdec:
+        return False
+    kinds = set(cfg.layer_pattern)
+    if "global" in kinds:
+        return False
+    if "local" in kinds and cfg.window is None:
+        return False
+    return True
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not _subquadratic(cfg):
+        return False, "full attention: 500k decode skipped (see DESIGN.md)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every live (arch, shape) dry-run cell."""
+    cells = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = cell_applicable(cfg, shape)
+            if ok:
+                cells.append((arch, shape))
+    return cells
+
+
+# --------------------------------------------------------------- smoke cfgs
+def make_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config: tiny widths, few layers/experts, runnable
+    in seconds on CPU. Pattern period and every structural feature are kept."""
+    period = cfg.pattern_period
+    small_layers = period * 2 + (1 if cfg.n_tail_layers else 0)
+    heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    kv = min(cfg.n_kv_heads, heads) if cfg.n_kv_heads else 0
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=small_layers,
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16 if cfg.n_heads else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        window=min(cfg.window, 32) if cfg.window else None,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        moe_group_size=64,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        lru_width=64 if cfg.lru_width else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        frontend_len=16 if cfg.frontend_len else 0,
+        dtype="float32",
+    )

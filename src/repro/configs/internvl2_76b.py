@@ -1,0 +1,12 @@
+"""internvl2-76b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 (InternViT frontend is a STUB: input_specs provides patch
+embeddings for the 256-token vision prefix).  [arXiv:2404.16821; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256,
+    activation="swiglu", rope_theta=500_000.0,
+    frontend="vision", frontend_len=256,
+)

@@ -1,0 +1,12 @@
+"""whisper-small [audio]: 12L enc + 12L dec, d_model=768 12H d_ff=3072
+vocab=51865; enc-dec, conv frontend is a STUB (input_specs provides the
+post-conv frame embeddings, len 1500).  [arXiv:2212.04356; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab_size=51865,
+    activation="gelu", norm="layernorm", mlp_bias=True, qkv_bias=True,
+    encoder_layers=12, frontend="audio", frontend_len=1500,
+)

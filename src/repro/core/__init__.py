@@ -1,0 +1,36 @@
+"""Core: algorithmic energy saving for parallel Cholesky/LU/QR (the paper).
+
+Public API:
+    build_dag, TaskGraph                    -- factorization task graphs
+    cp_analysis, schedule_slack             -- critical path + slack
+    make_processor, GEAR_TABLES             -- CMOS power model + gears
+    two_gear_split                          -- Ishihara-Yasuura frequency split
+    make_plan, evaluate_strategies          -- the four strategies
+    simulate, CostModel, Schedule           -- schedule simulator
+"""
+
+from .critical_path import CpResult, cp_analysis, schedule_slack
+from .dag import (DAG_BUILDERS, TaskGraph, Task, block_cyclic_owner,
+                  build_cholesky_dag, build_dag, build_lu_dag, build_qr_dag,
+                  factorization_flops)
+from .dvfs import duration_at, plan_energy_j, two_gear_split
+from .energy_model import (GEAR_TABLES, Gear, ProcessorModel, make_processor,
+                           make_tpu_like, max_slack_ratio, strategy_gap_terms,
+                           verify_worked_example)
+from .scheduler import CostModel, RankSegment, Schedule, StrategyPlan, simulate
+from .strategies import (STRATEGIES, StrategyConfig, StrategyResult,
+                         evaluate_strategies, make_plan)
+
+__all__ = [
+    "CpResult", "cp_analysis", "schedule_slack",
+    "DAG_BUILDERS", "TaskGraph", "Task", "block_cyclic_owner",
+    "build_cholesky_dag", "build_dag", "build_lu_dag", "build_qr_dag",
+    "factorization_flops",
+    "duration_at", "plan_energy_j", "two_gear_split",
+    "GEAR_TABLES", "Gear", "ProcessorModel", "make_processor",
+    "make_tpu_like", "max_slack_ratio", "strategy_gap_terms",
+    "verify_worked_example",
+    "CostModel", "RankSegment", "Schedule", "StrategyPlan", "simulate",
+    "STRATEGIES", "StrategyConfig", "StrategyResult",
+    "evaluate_strategies", "make_plan",
+]

@@ -1,0 +1,86 @@
+"""Critical-path and slack analysis over a scheduled task graph.
+
+Two related computations:
+
+1. `cp_analysis(graph, durations, comm)` -- classic earliest/latest times
+   over the DAG alone (infinite processors): gives the critical-path length
+   (a lower bound on any schedule's makespan) and *structural* slack.
+
+2. `schedule_slack(schedule, graph)` -- *realized* local slack of each task
+   in a concrete simulated schedule: the gap between a task's finish and the
+   earliest start among everything that waits on it (DAG successors AND the
+   next task in the same rank's program order, AND end-of-schedule for
+   terminal tasks). Stretching a task into its local slack provably delays
+   no other task's start -- this is the quantity both CP-aware reclamation
+   (measured online, Adagio-style) and the paper's algorithmic schedule
+   (computed offline from this very analysis) reclaim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .dag import TaskGraph
+
+
+@dataclasses.dataclass
+class CpResult:
+    earliest_start: np.ndarray
+    earliest_finish: np.ndarray
+    latest_start: np.ndarray
+    latest_finish: np.ndarray
+    cp_length: float
+    on_cp: np.ndarray          # bool: zero total float
+    total_float: np.ndarray
+
+
+def _edge_delay(graph: TaskGraph, producer: int, consumer: int,
+                comm_time: float) -> float:
+    if graph.tasks[producer].owner == graph.tasks[consumer].owner:
+        return 0.0
+    return comm_time
+
+
+def cp_analysis(graph: TaskGraph, durations: np.ndarray,
+                comm_time: float = 0.0) -> CpResult:
+    n = len(graph.tasks)
+    es = np.zeros(n)
+    # forward pass (tasks are emitted in topological order by construction)
+    for t in graph.tasks:
+        if t.deps:
+            es[t.tid] = max(
+                es[d] + durations[d] + _edge_delay(graph, d, t.tid, comm_time)
+                for d in t.deps
+            )
+    ef = es + durations
+    cp_len = float(ef.max()) if n else 0.0
+    lf = np.full(n, cp_len)
+    for t in reversed(graph.tasks):     # backward pass
+        for d in t.deps:
+            lf[d] = min(lf[d], lf[t.tid] - durations[t.tid]
+                        - _edge_delay(graph, d, t.tid, comm_time))
+    ls = lf - durations
+    tf = ls - es
+    return CpResult(es, ef, ls, lf, cp_len, tf <= 1e-12, tf)
+
+
+def schedule_slack(start: np.ndarray, finish: np.ndarray,
+                   graph: TaskGraph, comm_time: float = 0.0) -> np.ndarray:
+    """Realized local slack per task in a simulated schedule."""
+    n = len(graph.tasks)
+    makespan = float(finish.max()) if n else 0.0
+    slack = np.full(n, np.inf)
+    # DAG successors: producer must deliver by successor's start
+    for t in graph.tasks:
+        for d in t.deps:
+            avail = start[t.tid] - _edge_delay(graph, d, t.tid, comm_time)
+            slack[d] = min(slack[d], avail - finish[d])
+    # same-rank program order: finishing later would push the next local task
+    for rank_tasks in graph.tasks_by_rank():
+        for a, b in zip(rank_tasks[:-1], rank_tasks[1:]):
+            slack[a] = min(slack[a], start[b] - finish[a])
+    # terminal tasks may stretch to the makespan
+    slack[np.isinf(slack)] = makespan - finish[np.isinf(slack)]
+    return np.maximum(slack, 0.0)

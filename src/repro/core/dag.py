@@ -1,0 +1,200 @@
+"""Task DAGs for tiled Cholesky, LU, and QR factorizations.
+
+The paper's central object: the *statically known* task graph of a blocked
+dense factorization over a 2-D block-cyclic tile layout. Every task carries
+
+    kind        -- POTRF/TRSM/SYRK/GEMM (Cholesky), GETRF/TRSM_ROW/TRSM_COL/
+                   GEMM (LU), GEQRT/UNMQR/TSQRT/SSRFB (QR, flat tree)
+    (k, i, j)   -- iteration and tile indices
+    owner       -- rank under the (P x Q) block-cyclic map (owner computes)
+    flops       -- analytic flop count for a b x b tile
+    deps        -- task ids (data dependencies; the scheduler adds the
+                   same-rank program-order edge itself)
+    out_tile    -- tile written (for transfer-size modeling on cross-rank
+                   edges: a consumer on another rank pays tile_bytes/bw + lat)
+
+Because the DAG, ownership, and costs are known before execution, the DVFS
+schedule can be computed *algorithmically* -- that is the paper's thesis; all
+of core/strategies.py consumes this graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+# Relative efficiency of each kernel kind at peak gear (fraction of peak
+# flop-rate a tuned kernel of that kind achieves; GEMM-like ops run near
+# peak, panel ops are memory/latency bound). Used by the cost model.
+KIND_EFFICIENCY: dict[str, float] = {
+    "POTRF": 0.30, "GETRF": 0.25, "GEQRT": 0.25,
+    "TRSM": 0.75, "TRSM_ROW": 0.75, "TRSM_COL": 0.75,
+    "SYRK": 0.85, "GEMM": 0.90, "UNMQR": 0.80, "TSQRT": 0.35, "SSRFB": 0.85,
+}
+
+# Panel kinds sit on (or next to) the critical path of iteration k.
+PANEL_KINDS = frozenset({"POTRF", "GETRF", "GEQRT", "TSQRT"})
+
+
+@dataclasses.dataclass
+class Task:
+    tid: int
+    kind: str
+    k: int
+    i: int
+    j: int
+    owner: int
+    flops: float
+    deps: list[int]
+    out_tile: tuple[int, int]
+
+
+@dataclasses.dataclass
+class TaskGraph:
+    name: str                      # "cholesky" | "lu" | "qr"
+    n_tiles: int                   # T: matrix is (T*b) x (T*b)
+    tile_size: int                 # b
+    grid: tuple[int, int]          # (P, Q) process grid
+    tasks: list[Task]
+    dtype_bytes: int = 8           # fp64, as in the paper's ScaLAPACK runs
+
+    @property
+    def n_ranks(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+    @property
+    def tile_bytes(self) -> int:
+        return self.tile_size * self.tile_size * self.dtype_bytes
+
+    def successors(self) -> list[list[int]]:
+        succ: list[list[int]] = [[] for _ in self.tasks]
+        for t in self.tasks:
+            for d in t.deps:
+                succ[d].append(t.tid)
+        return succ
+
+    def tasks_by_rank(self) -> list[list[int]]:
+        """Program order per rank (tasks are emitted in SPMD loop order)."""
+        per = [[] for _ in range(self.n_ranks)]
+        for t in self.tasks:
+            per[t.owner].append(t.tid)
+        return per
+
+    def total_flops(self) -> float:
+        return sum(t.flops for t in self.tasks)
+
+
+def block_cyclic_owner(i: int, j: int, grid: tuple[int, int]) -> int:
+    p, q = grid
+    return (i % p) * q + (j % q)
+
+
+class _Builder:
+    def __init__(self, grid: tuple[int, int]):
+        self.grid = grid
+        self.tasks: list[Task] = []
+        self.last_writer: dict[tuple[int, int], int] = {}
+
+    def add(self, kind: str, k: int, i: int, j: int, flops: float,
+            reads: list[tuple[int, int]], writes: tuple[int, int],
+            extra_deps: tuple[int, ...] = ()) -> int:
+        tid = len(self.tasks)
+        deps: list[int] = []
+        for tile in reads + [writes]:      # read-after-write + write-after-write
+            w = self.last_writer.get(tile)
+            if w is not None and w not in deps:
+                deps.append(w)
+        for d in extra_deps:
+            if d not in deps:
+                deps.append(d)
+        self.tasks.append(Task(tid, kind, k, i, j,
+                               block_cyclic_owner(*writes, self.grid),
+                               flops, deps, writes))
+        self.last_writer[writes] = tid
+        return tid
+
+
+def build_cholesky_dag(n_tiles: int, tile_size: int,
+                       grid: tuple[int, int]) -> TaskGraph:
+    """Right-looking tiled Cholesky (lower)."""
+    b = float(tile_size)
+    bd = _Builder(grid)
+    for k in range(n_tiles):
+        bd.add("POTRF", k, k, k, b**3 / 3.0, [], (k, k))
+        for i in range(k + 1, n_tiles):
+            bd.add("TRSM", k, i, k, b**3, [(k, k)], (i, k))
+        for i in range(k + 1, n_tiles):
+            bd.add("SYRK", k, i, i, b**3, [(i, k)], (i, i))
+            for j in range(k + 1, i):
+                bd.add("GEMM", k, i, j, 2.0 * b**3, [(i, k), (j, k)], (i, j))
+    return TaskGraph("cholesky", n_tiles, tile_size, grid, bd.tasks)
+
+
+def build_lu_dag(n_tiles: int, tile_size: int,
+                 grid: tuple[int, int]) -> TaskGraph:
+    """Right-looking tiled LU (block variant; pivoting confined to panel)."""
+    b = float(tile_size)
+    bd = _Builder(grid)
+    for k in range(n_tiles):
+        bd.add("GETRF", k, k, k, 2.0 * b**3 / 3.0, [], (k, k))
+        for j in range(k + 1, n_tiles):    # U row: L_kk^-1 applied
+            bd.add("TRSM_ROW", k, k, j, b**3, [(k, k)], (k, j))
+        for i in range(k + 1, n_tiles):    # L column: U_kk^-1 applied
+            bd.add("TRSM_COL", k, i, k, b**3, [(k, k)], (i, k))
+        for i in range(k + 1, n_tiles):
+            for j in range(k + 1, n_tiles):
+                bd.add("GEMM", k, i, j, 2.0 * b**3, [(i, k), (k, j)], (i, j))
+    return TaskGraph("lu", n_tiles, tile_size, grid, bd.tasks)
+
+
+def build_qr_dag(n_tiles: int, tile_size: int,
+                 grid: tuple[int, int]) -> TaskGraph:
+    """Tiled Householder QR with a flat reduction tree (PLASMA-style).
+
+    GEQRT(k)        factor diagonal tile
+    UNMQR(k, j)     apply V_kk to row-k tiles
+    TSQRT(i, k)     couple tile (i,k) with the R of (k,k)  [sequential in i]
+    SSRFB(i, j, k)  apply the (i,k) reflectors to rows i and k of column j
+    """
+    b = float(tile_size)
+    bd = _Builder(grid)
+    for k in range(n_tiles):
+        geqrt = bd.add("GEQRT", k, k, k, (4.0 / 3.0) * b**3, [], (k, k))
+        for j in range(k + 1, n_tiles):
+            bd.add("UNMQR", k, k, j, 2.0 * b**3, [(k, k)], (k, j),
+                   extra_deps=(geqrt,))
+        prev_ts = geqrt
+        for i in range(k + 1, n_tiles):
+            prev_ts = bd.add("TSQRT", k, i, k, (10.0 / 3.0) * b**3,
+                             [(k, k)], (i, k), extra_deps=(prev_ts,))
+            for j in range(k + 1, n_tiles):
+                # updates both (k,j) and (i,j): register the write on (i,j)
+                # and mark the task as the last writer of (k,j) too, so the
+                # next SSRFB down column j is correctly serialized.
+                tid = bd.add("SSRFB", k, i, j, 4.0 * b**3,
+                             [(i, k), (k, j)], (i, j))
+                bd.last_writer[(k, j)] = tid
+    return TaskGraph("qr", n_tiles, tile_size, grid, bd.tasks)
+
+
+DAG_BUILDERS: dict[str, Callable[[int, int, tuple[int, int]], TaskGraph]] = {
+    "cholesky": build_cholesky_dag,
+    "lu": build_lu_dag,
+    "qr": build_qr_dag,
+}
+
+
+def build_dag(name: str, n_tiles: int, tile_size: int,
+              grid: tuple[int, int]) -> TaskGraph:
+    return DAG_BUILDERS[name](n_tiles, tile_size, grid)
+
+
+def factorization_flops(name: str, n: int) -> float:
+    """Analytic flop count of the full n x n factorization."""
+    if name == "cholesky":
+        return n**3 / 3.0
+    if name == "lu":
+        return 2.0 * n**3 / 3.0
+    if name.startswith("qr"):       # qr | qr-cholqr2 (same useful flops)
+        return 4.0 * n**3 / 3.0
+    raise ValueError(name)

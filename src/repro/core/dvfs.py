@@ -1,0 +1,72 @@
+"""DVFS gear selection: slack -> frequency plan.
+
+Given a task with duration `d` at the top gear and usable slack `s`, the
+energy-optimal single frequency is f_m = f_h * d / (d + s) (eliminate the
+slack exactly). Real processors expose a discrete gear table, so f_m is
+realized with the two-adjacent-gear split of Ishihara & Yasuura (1998):
+run part of the task at the bracketing higher gear and the rest at the
+bracketing lower gear such that the task finishes exactly at d + s.
+
+Frequency sensitivity: a task's runtime does not always scale 1/f (memory-
+bound phases don't). We model d(f) = d_h * (beta * f_h / f + (1 - beta))
+with beta = 1 for compute-bound kernels (the paper's assumption) and
+beta < 1 available for memory-bound kinds.
+"""
+
+from __future__ import annotations
+
+from .energy_model import Gear, ProcessorModel
+
+Segment = tuple[Gear, float]      # (gear, seconds)
+
+
+def duration_at(d_top: float, f_top: float, f: float, beta: float = 1.0) -> float:
+    """Task duration at frequency f, given duration d_top at f_top."""
+    if f <= 0:
+        raise ValueError("frequency must be positive")
+    return d_top * (beta * f_top / f + (1.0 - beta))
+
+
+def two_gear_split(proc: ProcessorModel, d_top: float, slack: float,
+                   beta: float = 1.0) -> list[Segment]:
+    """Frequency plan filling [0, d_top + slack] with the least energy.
+
+    Returns a list of (gear, seconds) segments whose total *work* equals the
+    task and whose total time is <= d_top + slack (equality when the slack
+    is reclaimable within the gear table's range).
+    """
+    top = proc.gears[0]
+    if d_top <= 0.0:
+        return []
+    if slack <= 1e-15:
+        return [(top, d_top)]
+    target = d_top + slack
+    # time the task would take entirely at the lowest gear
+    t_floor = duration_at(d_top, top.freq_ghz, proc.f_min, beta)
+    if t_floor <= target + 1e-15:
+        # even the lowest gear cannot absorb all the slack: run at f_min,
+        # residual slack stays idle (the caller halts during it).
+        return [(proc.gears[-1], t_floor)]
+    # effective continuous frequency that lands exactly on target
+    # beta*f_h/f + (1-beta) = target/d_top  =>  f = beta*f_h / (target/d - (1-beta))
+    denom = target / d_top - (1.0 - beta)
+    f_m = beta * top.freq_ghz / denom
+    g_hi, g_lo = proc.bracketing_gears(f_m)
+    if g_hi.index == g_lo.index:
+        return [(g_hi, duration_at(d_top, top.freq_ghz, g_hi.freq_ghz, beta))]
+    # split work fraction w at g_hi, (1-w) at g_lo so total time == target
+    t_hi_full = duration_at(d_top, top.freq_ghz, g_hi.freq_ghz, beta)
+    t_lo_full = duration_at(d_top, top.freq_ghz, g_lo.freq_ghz, beta)
+    w = (target - t_lo_full) / (t_hi_full - t_lo_full)
+    w = min(max(w, 0.0), 1.0)
+    segs: list[Segment] = []
+    if w > 1e-12:
+        segs.append((g_hi, w * t_hi_full))
+    if 1.0 - w > 1e-12:
+        segs.append((g_lo, (1.0 - w) * t_lo_full))
+    return segs
+
+
+def plan_energy_j(proc: ProcessorModel, segs: list[Segment]) -> float:
+    """Active-core energy of a frequency plan (excludes nodal constant)."""
+    return sum(proc.core_power_w(g, active=True) * t for g, t in segs)

@@ -1,0 +1,258 @@
+"""The paper's technique applied to LM training/serving steps.
+
+The factorization paper's thesis is that a *statically known* execution DAG
+lets the DVFS/energy plan be derived offline, with zero runtime detection
+cost. An XLA-compiled training step has exactly that property: the HLO
+schedule is fixed at compile time, so per-step busy intervals of each
+hardware lane (MXU compute, HBM DMA, ICI collectives) are known before the
+first step runs. This module transposes the paper's analysis:
+
+    CPU core            ->  chip "lane" (mxu / hbm / ici)
+    task slack          ->  lane slack = step_time - lane_busy_time
+                            (the dry-run's three roofline terms ARE the
+                            per-lane busy times; the dominant lane has
+                            zero slack -- it is the critical path)
+    race-to-halt        ->  lane idles at idle-power outside its busy time
+    CP-aware reclaim    ->  lane stretched to run at f = busy/step of peak
+    algorithmic (paper) ->  the same stretch plan, but computed offline
+                            from the compiled step (no detection overhead,
+                            pre-armed transitions) -- possible *because*
+                            the XLA schedule is static, exactly the
+                            paper's argument for factorization DAGs
+
+Two device power models are evaluated (DESIGN.md S3.2):
+  * `tpu_like`  -- no DVFS ladder: stretching is impossible; only
+    race-to-halt (clock/power-gating idle lanes) exists. This is how real
+    TPUs behave.
+  * `dvfs_ladder` -- a hypothetical accelerator exposing the paper-era CPU
+    gear ladders (scaled): lets us reproduce the paper's E(S2)-E(S1)
+    comparison on an LM step and show the gap narrowing as V(f) flattens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .energy_model import GEAR_TABLES
+
+# Per-chip lane power split (TPU-v5e-class estimates; peak_w sums with
+# p_const to ~250 W active, idles to ~65 W -- consistent with the
+# make_tpu_like() nodal model in energy_model.py).
+LANES = ("mxu", "hbm", "ici")
+
+
+@dataclasses.dataclass(frozen=True)
+class LanePower:
+    peak_w: float
+    idle_w: float
+
+
+DEFAULT_LANES: dict[str, LanePower] = {
+    "mxu": LanePower(peak_w=120.0, idle_w=12.0),
+    "hbm": LanePower(peak_w=55.0, idle_w=22.0),   # refresh floor
+    "ici": LanePower(peak_w=20.0, idle_w=4.0),
+}
+P_CONST_W = 55.0          # board, host link, fans -- unaffected by scaling
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProfile:
+    """Per-lane busy seconds of one compiled step (= roofline terms)."""
+    arch: str
+    shape: str
+    mxu_s: float
+    hbm_s: float
+    ici_s: float
+    overlap: float = 1.0   # 1.0 = lanes fully overlap (XLA async);
+                           # 0.0 = fully serialized phases
+
+    @property
+    def lane_busy(self) -> dict[str, float]:
+        return {"mxu": self.mxu_s, "hbm": self.hbm_s, "ici": self.ici_s}
+
+    @property
+    def step_s(self) -> float:
+        busy = self.lane_busy
+        lo = max(busy.values())                   # perfect overlap
+        hi = sum(busy.values())                   # fully serial
+        return hi + (lo - hi) * self.overlap
+
+    @property
+    def critical_lane(self) -> str:
+        return max(self.lane_busy, key=lambda k: self.lane_busy[k])
+
+    def slack(self) -> dict[str, float]:
+        t = self.step_s
+        return {k: t - v for k, v in self.lane_busy.items()}
+
+
+def profile_from_dryrun(rec: dict, overlap: float = 1.0) -> StepProfile:
+    """Build a StepProfile from one dryrun.json record."""
+    return StepProfile(arch=rec["arch"], shape=rec["shape"],
+                       mxu_s=rec["compute_s"], hbm_s=rec["memory_s"],
+                       ici_s=rec["collective_s"], overlap=overlap)
+
+
+# ------------------------------------------------------------ gear physics
+
+def _norm_gear_ladder(table_name: str) -> list[tuple[float, float]]:
+    """(f/f_max, V/V_max) ladder from a published CPU gear table."""
+    gears = GEAR_TABLES[table_name]
+    f0, v0 = gears[0]
+    return [(f / f0, v / v0) for f, v in gears]
+
+
+def voltage_at(freq_ratio: float, ladder: list[tuple[float, float]]) -> float:
+    """V/V_max at f/f_max, interpolating adjacent published gears."""
+    r = min(max(freq_ratio, ladder[-1][0]), 1.0)
+    for (fh, vh), (fl, vl) in zip(ladder[:-1], ladder[1:]):
+        if fl <= r <= fh:
+            w = 0.0 if fh == fl else (r - fl) / (fh - fl)
+            return vl + w * (vh - vl)
+    return ladder[0][1]
+
+
+def dynamic_power_ratio(freq_ratio: float,
+                        ladder: list[tuple[float, float]] | None) -> float:
+    """P_dyn(f)/P_dyn(f_max) = (f/f_max) * (V/V_max)^2.
+
+    ladder=None models a voltage-flat device (modern CMOS limit / TPU):
+    dynamic power is linear in f, so stretching a task saves *nothing*
+    over race-to-halt on dynamic energy -- the paper's core observation.
+    """
+    if ladder is None:
+        return freq_ratio
+    return freq_ratio * voltage_at(freq_ratio, ladder) ** 2
+
+
+# ------------------------------------------------------------- strategies
+
+@dataclasses.dataclass
+class LaneEnergy:
+    strategy: str
+    step_s: float
+    energy_j: float
+    per_lane_j: dict[str, float]
+    avg_power_w: float
+    saved_vs_original_pct: float
+
+
+# Runtime overhead fractions (same roles as core/strategies.py)
+CP_DETECT_OVERHEAD = 0.005     # online profiling/plan computation per step
+MONITOR_OVERHEAD = 0.001       # completion monitoring (race-to-halt)
+
+
+def step_energy(profile: StepProfile,
+                strategy: str,
+                lanes: dict[str, LanePower] | None = None,
+                ladder_name: str | None = None) -> LaneEnergy:
+    """Energy of one step under a strategy.
+
+    ladder_name: None -> voltage-flat device (tpu_like); else a
+    GEAR_TABLES key -> hypothetical DVFS accelerator with that V(f) curve.
+    """
+    lanes = lanes or DEFAULT_LANES
+    ladder = None if ladder_name is None else _norm_gear_ladder(ladder_name)
+    t = profile.step_s
+    busy = profile.lane_busy
+
+    if strategy == "original":
+        step = t
+        per_lane = {k: lp.peak_w * step for k, lp in lanes.items()}
+    elif strategy == "race_to_halt":
+        step = t * (1.0 + MONITOR_OVERHEAD)
+        per_lane = {
+            k: lanes[k].peak_w * busy[k] + lanes[k].idle_w * (step - busy[k])
+            for k in lanes
+        }
+    elif strategy in ("cp_aware", "algorithmic"):
+        ovh = CP_DETECT_OVERHEAD if strategy == "cp_aware" else 0.0
+        step = t * (1.0 + ovh)
+        per_lane = {}
+        for k, lp in lanes.items():
+            if busy[k] <= 0.0:
+                per_lane[k] = lp.idle_w * step
+                continue
+            r = min(busy[k] / step, 1.0)           # stretch into all slack
+            # floor: ladders bottom out (f_min/f_max); below it, run at the
+            # floor gear then halt for the remainder (two-phase plan)
+            r_floor = ladder[-1][0] if ladder else 0.10
+            r_eff = max(r, r_floor)
+            run_s = busy[k] / r_eff                # time at the low gear
+            dyn_peak = lp.peak_w - lp.idle_w
+            p_run = lp.idle_w + dyn_peak * dynamic_power_ratio(r_eff, ladder)
+            per_lane[k] = p_run * run_s + lp.idle_w * max(step - run_s, 0.0)
+    else:
+        raise ValueError(strategy)
+
+    e = sum(per_lane.values()) + P_CONST_W * step
+    return LaneEnergy(strategy, step, e, per_lane, e / step, 0.0)
+
+
+STRATEGIES = ("original", "race_to_halt", "cp_aware", "algorithmic")
+
+
+def evaluate_step(profile: StepProfile,
+                  device: str = "tpu_like") -> dict[str, LaneEnergy]:
+    """All four strategies on one step profile.
+
+    device: "tpu_like" (no ladder) or a GEAR_TABLES key.
+    """
+    ladder_name = None if device == "tpu_like" else device
+    out: dict[str, LaneEnergy] = {}
+    ref = None
+    for s in STRATEGIES:
+        r = step_energy(profile, s, ladder_name=ladder_name)
+        if s == "original":
+            ref = r.energy_j
+        r.saved_vs_original_pct = 100.0 * (1.0 - r.energy_j / ref)
+        out[s] = r
+    return out
+
+
+def strategy_gap_pct(profile: StepProfile, device: str = "tpu_like") -> float:
+    """(E_race_to_halt - E_algorithmic) / E_original * 100 -- the residual
+    advantage of slack reclamation over halting. The paper predicts this
+    shrinks toward ~0 as V(f) flattens; on a voltage-flat device it is
+    <= 0 (race-to-halt wins outright once overheads are counted)."""
+    r = evaluate_step(profile, device)
+    return (r["race_to_halt"].energy_j - r["algorithmic"].energy_j) \
+        / r["original"].energy_j * 100.0
+
+
+# -------------------------------------------------- per-step phase timeline
+
+def phase_timeline(profile: StepProfile, n_phases: int,
+                   strategy: str = "race_to_halt",
+                   lanes: dict[str, LanePower] | None = None,
+                   samples_per_phase: int = 8):
+    """Fig-2-style power trace of one step under a strategy.
+
+    The step is split into n_phases equal compute phases (layer groups)
+    with the lane busy times spread uniformly; between phases the
+    non-critical lanes idle/stretch per the strategy. Returns
+    (times, watts) arrays for plotting/CSV.
+    """
+    import numpy as np
+
+    lanes = lanes or DEFAULT_LANES
+    t = profile.step_s
+    busy = profile.lane_busy
+    res = step_energy(profile, strategy)
+    times = np.linspace(0.0, res.step_s, n_phases * samples_per_phase)
+    watts = np.full_like(times, P_CONST_W)
+    for k, lp in lanes.items():
+        duty = min(busy[k] / t, 1.0)
+        if strategy == "original":
+            watts += lp.peak_w
+            continue
+        # each phase: lane active for `duty` of the phase, then idles
+        phase_pos = (times / res.step_s * n_phases) % 1.0
+        active = phase_pos < duty
+        if strategy == "race_to_halt":
+            watts += np.where(active, lp.peak_w, lp.idle_w)
+        else:  # stretched: constant reduced power all phase
+            e = res.per_lane_j[k]
+            watts += e / res.step_s
+    return times, watts

@@ -1,0 +1,249 @@
+"""Distributed schedule simulator: task graph + frequency plans -> timelines,
+power traces, and nodal energy.
+
+Execution semantics mirror the SPMD factorization codes the paper measures:
+each rank executes *its own tasks in program order* (owner computes); a task
+starts when (a) the rank is free and (b) every dependency's output has
+arrived (cross-rank edges pay tile_bytes/bandwidth + latency). This is an
+event-driven list schedule; with per-rank program order fixed, it is
+deterministic.
+
+Gear mechanics simulated:
+  * per-task frequency plans (list of (gear, seconds) segments),
+  * gear-switch stalls: switching costs `switch_latency_s`; a stall delays
+    the rank unless the switch was issued during a wait (`hidden` policy --
+    possible only when the schedule is known in advance, i.e. the paper's
+    algorithmic strategy, or proactively predicted, i.e. CP-aware),
+  * idle gears: what a rank runs at while waiting (race-to-halt & friends
+    drop to f_min; `original` stays at the top gear),
+  * per-task runtime overhead (CP-detection / completion-monitoring cost).
+
+Energy = sum over per-rank piecewise-constant power segments
+       + gear-switch energies
+       + nodal constant power * makespan * n_nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .dag import KIND_EFFICIENCY, TaskGraph
+from .dvfs import Segment
+from .energy_model import Gear, ProcessorModel
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Analytic task/communication cost model (rank == core)."""
+
+    flops_per_cycle: float = 4.0            # fp64 FMA pipes per core
+    kind_efficiency: dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(KIND_EFFICIENCY))
+    # frequency sensitivity per kind (beta); default: compute-bound
+    freq_sensitivity: dict[str, float] = dataclasses.field(default_factory=dict)
+    comm_bandwidth_gbs: float = 5.0         # 40 Gb/s InfiniBand
+    comm_latency_s: float = 5e-6
+
+    def beta(self, kind: str) -> float:
+        return self.freq_sensitivity.get(kind, 1.0)
+
+    def duration_top(self, flops: float, kind: str, proc: ProcessorModel) -> float:
+        rate = (proc.f_max * 1e9 * self.flops_per_cycle
+                * self.kind_efficiency.get(kind, 0.8))
+        return flops / rate
+
+    def comm_time(self, graph: TaskGraph) -> float:
+        return graph.tile_bytes / (self.comm_bandwidth_gbs * 1e9) \
+            + self.comm_latency_s
+
+
+@dataclasses.dataclass
+class RankSegment:
+    t0: float
+    t1: float
+    gear: Gear
+    active: bool          # computing vs idle/waiting
+
+
+@dataclasses.dataclass
+class Schedule:
+    graph: TaskGraph
+    proc: ProcessorModel
+    start: np.ndarray
+    finish: np.ndarray
+    rank_segments: list[list[RankSegment]]
+    switch_count: int
+    switch_energy_j: float
+    cores_per_node: int = 16
+
+    @property
+    def makespan(self) -> float:
+        return float(self.finish.max()) if len(self.finish) else 0.0
+
+    @property
+    def n_nodes(self) -> int:
+        return max(1, self.graph.n_ranks // self.cores_per_node)
+
+    def core_energy_j(self) -> float:
+        e = 0.0
+        for segs in self.rank_segments:
+            for s in segs:
+                e += self.proc.core_power_w(s.gear, s.active) * (s.t1 - s.t0)
+        return e
+
+    def total_energy_j(self) -> float:
+        return (self.core_energy_j() + self.switch_energy_j
+                + self.n_nodes * self.proc.p_const_watts * self.makespan)
+
+    def power_trace(self, times: np.ndarray,
+                    nodes: Sequence[int] | None = None) -> np.ndarray:
+        """Total power (W) of the given nodes sampled at `times`."""
+        if nodes is None:
+            nodes = range(self.n_nodes)
+        ranks: list[int] = []
+        for nd in nodes:
+            ranks.extend(range(nd * self.cores_per_node,
+                               min((nd + 1) * self.cores_per_node,
+                                   self.graph.n_ranks)))
+        watts = np.full(times.shape, float(len(list(nodes))) *
+                        self.proc.p_const_watts)
+        for r in ranks:
+            segs = self.rank_segments[r]
+            if not segs:
+                continue
+            t0s = np.array([s.t0 for s in segs])
+            idx = np.searchsorted(t0s, times, side="right") - 1
+            idx = np.clip(idx, 0, len(segs) - 1)
+            p = np.array([self.proc.core_power_w(s.gear, s.active)
+                          for s in segs])
+            inside = (times >= segs[0].t0) & (times <= segs[-1].t1)
+            watts = watts + np.where(inside, p[idx], p[-1] * 0 +
+                                     self.proc.core_power_w(
+                                         segs[-1].gear, False))
+        return watts
+
+
+@dataclasses.dataclass
+class StrategyPlan:
+    """Everything a strategy decides; consumed by `simulate`."""
+
+    name: str
+    task_segments: list[list[Segment]]       # per task: [(gear, seconds)]
+    idle_gear: Gear                           # gear while waiting
+    per_task_overhead: np.ndarray             # seconds of runtime overhead
+    hide_switch_in_wait: bool                 # pre-armed switches (offline plan)
+    min_halt_window_s: float = 0.0            # don't downshift for tiny gaps
+
+
+def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
+             plan: StrategyPlan) -> Schedule:
+    n = len(graph.tasks)
+    comm = cost.comm_time(graph)
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    done = np.zeros(n, dtype=bool)
+
+    per_rank = graph.tasks_by_rank()
+    ptr = [0] * graph.n_ranks
+    rank_free = [0.0] * graph.n_ranks
+    rank_gear: list[Gear] = [proc.gears[0]] * graph.n_ranks
+    segments: list[list[RankSegment]] = [[] for _ in range(graph.n_ranks)]
+    switch_count = 0
+    switch_energy = 0.0
+    t_sw = proc.switch_latency_s
+    halt_win = max(plan.min_halt_window_s, 2.0 * t_sw)
+
+    remaining = n
+    while remaining:
+        # pick the feasible rank whose next task can start earliest
+        best_rank, best_start = -1, np.inf
+        for r in range(graph.n_ranks):
+            if ptr[r] >= len(per_rank[r]):
+                continue
+            tid = per_rank[r][ptr[r]]
+            t = graph.tasks[tid]
+            ready = rank_free[r]
+            feasible = True
+            for d in t.deps:
+                if not done[d]:
+                    feasible = False
+                    break
+                arr = finish[d] + (comm if graph.tasks[d].owner != r else 0.0)
+                ready = max(ready, arr)
+            if feasible and ready < best_start:
+                best_rank, best_start = r, ready
+        if best_rank < 0:   # cannot happen on a valid program order
+            raise RuntimeError("deadlock in schedule simulation")
+
+        r = best_rank
+        tid = per_rank[r][ptr[r]]
+        segs = plan.task_segments[tid]
+        first_gear = segs[0][0] if segs else rank_gear[r]
+        t_now = rank_free[r]
+        wait = best_start - t_now
+
+        # ---- waiting period handling (idle gear + switches) -------------
+        if wait > 1e-15:
+            if (plan.idle_gear.index != rank_gear[r].index
+                    and wait >= halt_win):
+                # downshift for the wait
+                switch_count += 1
+                switch_energy += proc.switch_energy_j(rank_gear[r],
+                                                      plan.idle_gear)
+                segments[r].append(RankSegment(t_now, best_start,
+                                               plan.idle_gear, False))
+                rank_gear[r] = plan.idle_gear
+            else:
+                segments[r].append(RankSegment(t_now, best_start,
+                                               rank_gear[r], False))
+
+        # ---- gear switch into the task's first segment ------------------
+        t_exec = best_start
+        if first_gear.index != rank_gear[r].index:
+            switch_count += 1
+            switch_energy += proc.switch_energy_j(rank_gear[r], first_gear)
+            hidden = plan.hide_switch_in_wait and wait >= t_sw
+            if not hidden:
+                segments[r].append(RankSegment(t_exec, t_exec + t_sw,
+                                               first_gear, False))
+                t_exec += t_sw
+            rank_gear[r] = first_gear
+
+        # ---- runtime overhead (detection / monitoring) -------------------
+        ovh = float(plan.per_task_overhead[tid])
+        if ovh > 0.0:
+            segments[r].append(RankSegment(t_exec, t_exec + ovh,
+                                           rank_gear[r], True))
+            t_exec += ovh
+
+        # ---- execute the task's frequency segments -----------------------
+        start[tid] = t_exec
+        for gear, dt in segs:
+            if gear.index != rank_gear[r].index:
+                switch_count += 1
+                switch_energy += proc.switch_energy_j(rank_gear[r], gear)
+                # mid-task switches are always planned -> no stall modeled
+                rank_gear[r] = gear
+            segments[r].append(RankSegment(t_exec, t_exec + dt, gear, True))
+            t_exec += dt
+        finish[tid] = t_exec
+        rank_free[r] = t_exec
+        done[tid] = True
+        ptr[r] += 1
+        remaining -= 1
+
+    # trailing idle until global makespan (ranks that finish early)
+    makespan = float(finish.max()) if n else 0.0
+    for r in range(graph.n_ranks):
+        if rank_free[r] < makespan - 1e-15:
+            gear = plan.idle_gear
+            if gear.index != rank_gear[r].index:
+                switch_count += 1
+                switch_energy += proc.switch_energy_j(rank_gear[r], gear)
+            segments[r].append(RankSegment(rank_free[r], makespan, gear, False))
+
+    return Schedule(graph, proc, start, finish, segments,
+                    switch_count, switch_energy)

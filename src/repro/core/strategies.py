@@ -1,0 +1,161 @@
+"""The four energy strategies evaluated by the paper.
+
+ * original        -- peak gear everywhere, idle at peak gear.
+ * race_to_halt    -- peak gear while computing, lowest gear while idle;
+                      *reactive*: pays a wake-up gear-switch stall and a
+                      per-task completion-monitoring overhead.
+ * cp_aware        -- online CP-aware slack reclamation (Adagio-style):
+                      stretches off-CP tasks into their measured slack with
+                      the two-gear split; pays a per-task detection overhead.
+ * algorithmic     -- THE PAPER: identical slack reclamation *computed
+                      offline* from the factorization's known task DAG and
+                      cost model: zero runtime detection overhead, gear
+                      switches pre-armed during waits (no wake-up stall),
+                      plus scheduled-communication low gear during waits.
+
+All strategies other than `original` halt (lowest gear) during waits --
+communication slack handling is shared, as in the paper's experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .critical_path import schedule_slack
+from .dag import TaskGraph
+from .dvfs import two_gear_split
+from .energy_model import ProcessorModel
+from .scheduler import CostModel, Schedule, StrategyPlan, simulate
+
+STRATEGIES = ("original", "race_to_halt", "cp_aware", "algorithmic")
+
+
+@dataclasses.dataclass
+class StrategyConfig:
+    # fraction of each task spent on online CP/slack detection (cp_aware)
+    cp_detect_overhead: float = 0.005
+    # fraction of each task spent on completion monitoring (race_to_halt)
+    monitor_overhead: float = 0.001
+    # fraction of realized local slack a strategy dares to reclaim (< 1.0
+    # guards against cost-model error in the online strategy; the
+    # algorithmic plan knows the DAG exactly and uses everything)
+    cp_aware_slack_use: float = 0.9
+    algorithmic_slack_use: float = 1.0
+    # ignore slacks too small to be worth a switch
+    min_reclaim_s: float = 500e-6
+
+
+def _top_gear_segments(graph: TaskGraph, proc: ProcessorModel,
+                       cost: CostModel) -> list[list]:
+    top = proc.gears[0]
+    return [[(top, cost.duration_top(t.flops, t.kind, proc))]
+            for t in graph.tasks]
+
+
+def _baseline_schedule(graph: TaskGraph, proc: ProcessorModel,
+                       cost: CostModel) -> Schedule:
+    """Pure peak-gear schedule with no overheads (the timing oracle)."""
+    plan = StrategyPlan(
+        name="baseline",
+        task_segments=_top_gear_segments(graph, proc, cost),
+        idle_gear=proc.gears[0],
+        per_task_overhead=np.zeros(len(graph.tasks)),
+        hide_switch_in_wait=True,
+    )
+    return simulate(graph, proc, cost, plan)
+
+
+def _reclaimed_segments(graph: TaskGraph, proc: ProcessorModel,
+                        cost: CostModel, base: Schedule,
+                        slack_use: float, min_reclaim_s: float) -> list[list]:
+    slack = schedule_slack(base.start, base.finish, graph,
+                           cost.comm_time(graph))
+    segs = []
+    for t in graph.tasks:
+        d = cost.duration_top(t.flops, t.kind, proc)
+        s = float(slack[t.tid]) * slack_use
+        if s < min_reclaim_s:
+            segs.append([(proc.gears[0], d)])
+        else:
+            segs.append(two_gear_split(proc, d, s, cost.beta(t.kind)))
+    return segs
+
+
+def make_plan(name: str, graph: TaskGraph, proc: ProcessorModel,
+              cost: CostModel,
+              cfg: StrategyConfig | None = None) -> StrategyPlan:
+    cfg = cfg or StrategyConfig()
+    n = len(graph.tasks)
+    top, low = proc.gears[0], proc.gears[-1]
+    durs = np.array([cost.duration_top(t.flops, t.kind, proc)
+                     for t in graph.tasks])
+
+    if name == "original":
+        return StrategyPlan("original", _top_gear_segments(graph, proc, cost),
+                            idle_gear=top,
+                            per_task_overhead=np.zeros(n),
+                            hide_switch_in_wait=True)
+
+    if name == "race_to_halt":
+        return StrategyPlan("race_to_halt",
+                            _top_gear_segments(graph, proc, cost),
+                            idle_gear=low,
+                            per_task_overhead=durs * cfg.monitor_overhead,
+                            hide_switch_in_wait=False)  # reactive wake-up
+
+    base = _baseline_schedule(graph, proc, cost)
+
+    if name == "cp_aware":
+        segs = _reclaimed_segments(graph, proc, cost, base,
+                                   cfg.cp_aware_slack_use, cfg.min_reclaim_s)
+        return StrategyPlan("cp_aware", segs, idle_gear=low,
+                            per_task_overhead=durs * cfg.cp_detect_overhead,
+                            hide_switch_in_wait=True)
+
+    if name == "algorithmic":
+        segs = _reclaimed_segments(graph, proc, cost, base,
+                                   cfg.algorithmic_slack_use,
+                                   cfg.min_reclaim_s)
+        return StrategyPlan("algorithmic", segs, idle_gear=low,
+                            per_task_overhead=np.zeros(n),
+                            hide_switch_in_wait=True)
+
+    raise ValueError(f"unknown strategy {name!r}; choose from {STRATEGIES}")
+
+
+@dataclasses.dataclass
+class StrategyResult:
+    name: str
+    makespan_s: float
+    energy_j: float
+    avg_power_w: float
+    slowdown_pct: float        # vs original
+    energy_saved_pct: float    # vs original
+    switch_count: int
+    schedule: Schedule
+
+
+def evaluate_strategies(graph: TaskGraph, proc: ProcessorModel,
+                        cost: CostModel,
+                        names: tuple[str, ...] = STRATEGIES,
+                        cfg: StrategyConfig | None = None,
+                        ) -> dict[str, StrategyResult]:
+    results: dict[str, StrategyResult] = {}
+    ref_time = ref_energy = None
+    for name in names:
+        sched = simulate(graph, proc, cost, make_plan(name, graph, proc,
+                                                      cost, cfg))
+        t, e = sched.makespan, sched.total_energy_j()
+        if name == "original":
+            ref_time, ref_energy = t, e
+        results[name] = StrategyResult(
+            name=name, makespan_s=t, energy_j=e,
+            avg_power_w=e / t if t else 0.0,
+            slowdown_pct=100.0 * (t / ref_time - 1.0) if ref_time else 0.0,
+            energy_saved_pct=100.0 * (1.0 - e / ref_energy)
+            if ref_energy else 0.0,
+            switch_count=sched.switch_count,
+            schedule=sched)
+    return results

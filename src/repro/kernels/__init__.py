@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots, with jnp oracles.
+
+Layout (per repo convention):
+    <name>.py  -- pl.pallas_call + BlockSpec kernels (gemm, syrk, trsm,
+                  potrf, flash_attention)
+    ops.py     -- jit'd dispatch wrappers (pallas | interpret | jnp)
+    ref.py     -- pure-jnp oracles every kernel is validated against
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .gemm import gemm_pallas
+from .potrf import potrf_pallas
+from .syrk import syrk_pallas
+from .trsm import trsm_pallas
+
+__all__ = ["ops", "ref", "gemm_pallas", "syrk_pallas", "trsm_pallas",
+           "potrf_pallas", "flash_attention_pallas"]

@@ -1,0 +1,137 @@
+"""Pallas TPU FlashAttention-2 (forward) with GQA / causal / sliding-window /
+logit-softcap support.
+
+Grid (B*Hq, Sq/bq, Skv/bk); the KV axis is innermost ("arbitrary") so the
+running max / denominator / output accumulator stay VMEM-resident per query
+block (online softmax). GQA is handled in the K/V BlockSpec index maps
+(query head -> kv head), so no repeated-KV materialization ever happens.
+Fully-masked KV blocks are skipped under `pl.when` (causal: upper-right
+blocks; sliding window: lower-left blocks), which is where the FLOP savings
+of local attention come from.
+
+Default blocks 512(q) x 512(kv) x head_dim: q/k/v blocks + fp32 accumulator
+fit VMEM for head_dim <= 256 with double buffering; MXU dims 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128          # TPU vector lane count for 2-D scratch
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int | None,
+               softcap: float | None, k_steps: int, bq: int, bk: int,
+               offset: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq + offset          # absolute position of first query
+    k_start = ki * bk
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + bq - 1
+    if window is not None:
+        live &= k_start + bk - 1 > q_start - window
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.iota(jnp.int32, bq)[:, None]
+        kpos = k_start + jax.lax.iota(jnp.int32, bk)[None, :]
+        mask = jnp.bool_(jnp.ones((bq, bk), jnp.bool_))
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_ref[:, 0]                        # (bq,)
+        l_prev = l_ref[:, 0]
+        m_next = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_next), 0.0, m_next)
+        alpha = jnp.where(jnp.isneginf(m_prev), 0.0,
+                          jnp.exp(m_prev - m_safe))
+        p = jnp.exp(s - m_safe[:, None])            # masked entries -> 0
+        l_next = alpha * l_prev + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[...] = jnp.broadcast_to(m_next[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_next[:, None], l_ref.shape)
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        l = l_ref[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           softcap: float | None = None,
+                           scale: float | None = None,
+                           bq: int = 512, bk: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; returns [B, Hq, Sq, D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    k_steps = skv // bk
+
+    def kv_row(bh):
+        return (bh // hq) * hkv + (bh % hq) // group
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, k_steps=k_steps, bq=bq, bk=bk, offset=skv - sq)
+
+    of = pl.pallas_call(
+        kernel,
+        grid=(b * hq, sq // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (kv_row(bh), ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (kv_row(bh), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="repro_flash_attention",
+    )(qf, kf, vf)
+    return of.reshape(b, hq, sq, d)

@@ -1,0 +1,190 @@
+"""Dispatch layer: Pallas kernels on TPU, pure-jnp paths elsewhere.
+
+Backend selection:
+    "pallas"     real TPU lowering (Mosaic)
+    "interpret"  Pallas interpret mode -- kernel body runs on CPU (tests)
+    "jnp"        pure-jnp reference/chunked paths (CPU runs + dry-run
+                 lowering, so compiled HLO contains real, analyzable FLOPs)
+Default: "pallas" on TPU backends, "jnp" otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .gemm import gemm_pallas
+from .potrf import potrf_pallas
+from .syrk import syrk_pallas
+from .trsm import trsm_pallas
+
+_BACKEND: str | None = None          # None = auto
+
+
+def set_backend(name: str | None) -> None:
+    global _BACKEND
+    assert name in (None, "pallas", "interpret", "jnp"), name
+    _BACKEND = name
+
+
+def backend() -> str:
+    if _BACKEND is not None:
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+@contextmanager
+def use_backend(name: str):
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _pallas_kwargs() -> dict:
+    return {"interpret": backend() == "interpret"}
+
+
+# ----------------------------------------------------------------- BLAS-3
+def gemm(a, b, c=None, *, alpha: float = 1.0, beta: float = 1.0):
+    if backend() == "jnp":
+        return ref.gemm_ref(a, b, c, alpha, beta)
+    return gemm_pallas(a, b, c, alpha=alpha, beta=beta, **_pallas_kwargs())
+
+
+def syrk(a, c, *, alpha: float = -1.0, beta: float = 1.0):
+    if backend() == "jnp":
+        return ref.syrk_ref(a, c, alpha, beta)
+    return syrk_pallas(a, c, alpha=alpha, beta=beta, **_pallas_kwargs())
+
+
+def trsm(l, b, *, unit_diag: bool = False):
+    """X @ L^T = B."""
+    if backend() == "jnp":
+        return ref.trsm_ref(l, b, unit_diag=unit_diag)
+    return trsm_pallas(l, b, unit_diag=unit_diag, **_pallas_kwargs())
+
+
+# --------------------------------------------------------------- panel ops
+def potrf(a):
+    if backend() == "jnp":
+        return ref.potrf_ref(a)
+    return potrf_pallas(a, **_pallas_kwargs())
+
+
+def getrf(a):
+    """Unblocked LU of the diagonal tile (jnp on all backends: latency-bound
+    panel op; the Pallas win lives in the trailing update)."""
+    return ref.getrf_nopiv_ref(a)
+
+
+def geqrt(a):
+    """Householder panel factorization (V, T, R); jnp on all backends
+    (unrolled columns for small tiles, fori_loop for production widths)."""
+    return ref.householder_qr(a)
+
+
+def apply_reflector(v, t, c):
+    """C := (I - V T V^T)^T C. Three GEMMs; routed through the GEMM kernel
+    when shapes are MXU-tileable, else jnp."""
+    if backend() == "jnp" or c.shape[1] % 128 != 0 or v.shape[0] % 128 != 0:
+        return ref.apply_block_reflector_ref(v, t, c)
+    w = gemm(v.T, c, alpha=1.0, beta=0.0)
+    tw = ref.gemm_ref(t.T, w)                      # (b,b) tiny
+    return gemm(v, tw, c, alpha=-1.0, beta=1.0)
+
+
+# ------------------------------------------------------------- attention
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    q_chunk: int = 1024, k_chunk: int = 1024):
+    """FlashAttention: Pallas kernel on TPU, chunked-scan jnp elsewhere."""
+    if backend() == "jnp":
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale,
+                                 q_chunk=q_chunk, k_chunk=k_chunk)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  **_pallas_kwargs())
+
+
+def _dividing_chunk(s: int, c: int) -> int:
+    """Largest chunk <= c that divides s (1500 with c=1024 -> 750)."""
+    c = min(c, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "q_chunk", "k_chunk"))
+def attention_chunked(q, k, v, *, causal: bool = True,
+                      window: int | None = None, softcap: float | None = None,
+                      scale: float | None = None, q_chunk: int = 1024,
+                      k_chunk: int = 1024):
+    """Memory-bounded online-softmax attention in pure jnp (double scan).
+
+    Numerically the same online-softmax recurrence as the Pallas kernel;
+    never materializes more than (q_chunk x k_chunk) logits per (b, h). The
+    kv-step is rematerialized on backward (flash-style training memory).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale_ = scale if scale is not None else d ** -0.5
+    q_chunk = _dividing_chunk(sq, q_chunk)
+    k_chunk = _dividing_chunk(skv, k_chunk)
+    nq, nk = sq // q_chunk, skv // k_chunk
+    offset = skv - sq
+
+    qg = q.reshape(b, hkv, group, nq, q_chunk, d).astype(jnp.float32)
+    kc = k.reshape(b, hkv, nk, k_chunk, d).astype(jnp.float32)
+    vc = v.reshape(b, hkv, nk, k_chunk, d).astype(jnp.float32)
+    kc = jnp.moveaxis(kc, 2, 0)        # (nk, b, hkv, k_chunk, d)
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    def q_block(qi, qblk):             # qblk: (b, hkv, group, q_chunk, d)
+        qpos = offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, ki = xs
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kb) * scale_
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_next = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isneginf(m_next), 0.0, m_next)
+            alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            p = jnp.exp(s - m_safe[..., None])
+            l_next = alpha * l + p.sum(axis=-1)
+            acc_next = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb)
+            return (m_next, l_next, acc_next), None
+
+        init = (jnp.full((b, hkv, group, q_chunk), -jnp.inf),
+                jnp.zeros((b, hkv, group, q_chunk)),
+                jnp.zeros((b, hkv, group, q_chunk, d)))
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), init, (kc, vc, jnp.arange(nk)))
+        denom = jnp.where(l == 0.0, 1.0, l)
+        return acc / denom[..., None]
+
+    qg = jnp.moveaxis(qg, 3, 0)        # (nq, b, hkv, group, q_chunk, d)
+    out = jax.lax.map(lambda xs: q_block(*xs), (jnp.arange(nq), qg))
+    out = jnp.moveaxis(out, 0, 3)      # (b, hkv, group, nq, q_chunk, d)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Pallas TPU POTRF: Cholesky of a single SPD tile (lower), in-VMEM.
+
+The diagonal panel task. One grid step; the whole tile lives in VMEM and is
+factored by b masked rank-1 column sweeps (right-looking unblocked
+algorithm, identical to kernels.ref.potrf_unblocked_ref). Latency-bound by
+construction -- the paper's DAG cost model rates POTRF at ~0.3 of peak,
+which is exactly what a VPU-bound sweep over an MXU-sized tile gives.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _potrf_kernel(a_ref, l_ref):
+    a = a_ref[...].astype(jnp.float32)
+    n = a.shape[0]
+    rows = jax.lax.iota(jnp.int32, n)
+    l0 = jnp.where(rows[:, None] >= rows[None, :], a, 0.0)   # tril
+
+    def col(j, l):
+        pivot = jnp.sqrt(l[j, j])
+        colv = jnp.where(rows > j, l[:, j] / pivot, 0.0)
+        colv = jnp.where(rows == j, pivot, colv)
+        l = jnp.where(rows[None, :] == j, colv[:, None], l)
+        mask = (rows[None, :] > j) & (rows[:, None] >= rows[None, :])
+        return l - jnp.where(mask, colv[:, None] * colv[None, :], 0.0)
+
+    l = jax.lax.fori_loop(0, n, col, l0)
+    l_ref[...] = jnp.where(rows[:, None] >= rows[None, :], l,
+                           0.0).astype(l_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def potrf_pallas(a: jax.Array, *, interpret: bool = False) -> jax.Array:
+    n = a.shape[0]
+    assert a.shape == (n, n)
+    return pl.pallas_call(
+        _potrf_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="repro_potrf",
+    )(a)

@@ -1,0 +1,248 @@
+"""Pure-jnp reference oracles for every Pallas kernel and tile op.
+
+These are the ground truth the Pallas kernels are validated against
+(tests run the kernels in interpret mode and assert_allclose vs these),
+and the CPU execution path of the whole framework.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+# ----------------------------------------------------------------- BLAS-3
+def gemm_ref(a: jax.Array, b: jax.Array, c: jax.Array | None = None,
+             alpha: float = 1.0, beta: float = 1.0) -> jax.Array:
+    """C := alpha * A @ B + beta * C."""
+    out = alpha * (a @ b)
+    if c is not None:
+        out = out + beta * c
+    return out
+
+
+def syrk_ref(a: jax.Array, c: jax.Array, alpha: float = -1.0,
+             beta: float = 1.0) -> jax.Array:
+    """Symmetric rank-k update (lower): C := alpha * A @ A^T + beta * C.
+
+    Only the lower triangle is meaningful; we compute the full product and
+    let the caller use the lower part (cheap and MXU-friendly).
+    """
+    return alpha * (a @ a.T) + beta * c
+
+
+def trsm_ref(l: jax.Array, b: jax.Array, *, side: str = "right",
+             trans: bool = True, unit_diag: bool = False) -> jax.Array:
+    """Triangular solve with a LOWER-triangular L.
+
+    side="right", trans=True : X solves X @ L^T = B   (Cholesky panel)
+    side="left",  trans=False: X solves L @ X = B     (LU row update)
+    """
+    if side == "right":
+        # X L^T = B  <=>  L X^T = B^T
+        xt = solve_triangular(l, b.T, lower=True,
+                              trans="T" if not trans else "N",
+                              unit_diagonal=unit_diag)
+        return xt.T
+    return solve_triangular(l, b, lower=True,
+                            trans="T" if trans else "N",
+                            unit_diagonal=unit_diag)
+
+
+def trsm_upper_right_ref(u: jax.Array, b: jax.Array) -> jax.Array:
+    """X solves X @ U = B with U upper triangular (LU column update)."""
+    xt = solve_triangular(u.T, b.T, lower=True)
+    return xt.T
+
+
+# --------------------------------------------------------------- panel ops
+def potrf_ref(a: jax.Array) -> jax.Array:
+    """Cholesky of an SPD tile (lower)."""
+    return jnp.linalg.cholesky(a)
+
+
+def potrf_unblocked_ref(a: jax.Array) -> jax.Array:
+    """Column-by-column unblocked Cholesky -- mirrors the Pallas kernel's
+    algorithm exactly (used to pin down its numerics)."""
+    n = a.shape[0]
+    l = jnp.tril(a)
+
+    def col(j, l):
+        pivot = jnp.sqrt(l[j, j])
+        colv = l[:, j] / pivot
+        colv = jnp.where(jnp.arange(n) >= j, colv, 0.0).at[j].set(pivot)
+        l = l.at[:, j].set(colv)
+        # trailing update: l[:, j+1:] -= colv * colv[j+1:]^T (lower part)
+        mask = (jnp.arange(n)[None, :] > j) & \
+               (jnp.arange(n)[:, None] >= jnp.arange(n)[None, :])
+        upd = jnp.outer(colv, colv)
+        return l - jnp.where(mask, upd, 0.0)
+
+    l = jax.lax.fori_loop(0, n, col, l, unroll=False)
+    return jnp.tril(l)
+
+
+def getrf_nopiv_ref(a: jax.Array) -> jax.Array:
+    """Unblocked LU without pivoting; returns packed LU (unit-lower L)."""
+    n = a.shape[0]
+
+    def col(k, m):
+        pivot = m[k, k]
+        lcol = m[:, k] / pivot
+        lcol = jnp.where(jnp.arange(n) > k, lcol, m[:, k])
+        m = m.at[:, k].set(lcol)
+        mask = (jnp.arange(n)[:, None] > k) & (jnp.arange(n)[None, :] > k)
+        upd = jnp.outer(lcol, m[k, :])
+        return m - jnp.where(mask, upd, 0.0)
+
+    return jax.lax.fori_loop(0, n, col, a)
+
+
+def householder_qr_ref(a: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compact-WY Householder QR of an m x n tile (m >= n).
+
+    Returns (V, T, R): Q = I - V @ T @ V^T (T upper triangular),
+    V unit-lower-trapezoidal, R upper triangular n x n.
+    """
+    m, n = a.shape
+    dt = a.dtype
+    V = jnp.zeros((m, n), dt)
+    T = jnp.zeros((n, n), dt)
+    R = a
+    rows = jnp.arange(m)
+    for j in range(n):                       # static tile width
+        x = jnp.where(rows >= j, R[:, j], 0.0)
+        normx = jnp.linalg.norm(x)
+        sign_xj = jnp.where(x[j] >= 0, 1.0, -1.0)
+        alpha = -sign_xj * normx
+        # guard the zero column edge case
+        alpha = jnp.where(normx == 0, -1.0, alpha)
+        v = x.at[j].add(-alpha)
+        vnorm = jnp.linalg.norm(v)
+        v = jnp.where(vnorm > 0, v / vnorm, v)
+        beta = 2.0
+        # R := (I - beta v v^T) R
+        R = R - beta * jnp.outer(v, v @ R)
+        # accumulate compact WY: T[:j, j] = -beta * T[:j,:j] @ (V[:, :j]^T v)
+        tcol = -beta * (T[:, :] @ (V.T @ v))
+        tcol = jnp.where(jnp.arange(n) < j, tcol, 0.0).at[j].set(beta)
+        T = T.at[:, j].set(tcol)
+        V = V.at[:, j].set(v)
+    return V, T, jnp.triu(R[:n, :])
+
+
+def householder_qr_loop(a: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """fori_loop compact-WY Householder QR (same math as householder_qr_ref,
+    one HLO while-loop instead of n unrolled columns -- the path the
+    distributed QR uses for production tile widths, where unrolling b
+    columns would explode the module)."""
+    m, n = a.shape
+    dt = a.dtype
+    rows = jnp.arange(m)
+
+    def col(j, carry):
+        V, T, R = carry
+        x = jnp.where(rows >= j, R[:, j], 0.0)
+        normx = jnp.linalg.norm(x)
+        xj = jnp.take(x, j)
+        sign_xj = jnp.where(xj >= 0, 1.0, -1.0)
+        alpha = jnp.where(normx == 0, -1.0, -sign_xj * normx)
+        v = x.at[j].add(-alpha)
+        vnorm = jnp.linalg.norm(v)
+        v = jnp.where(vnorm > 0, v / vnorm, v)
+        beta = jnp.asarray(2.0, dt)
+        R = R - beta * jnp.outer(v, v @ R)
+        tcol = -beta * (T @ (V.T @ v))
+        tcol = jnp.where(jnp.arange(n) < j, tcol, 0.0).at[j].set(beta)
+        T = T.at[:, j].set(tcol)
+        V = V.at[:, j].set(v)
+        return V, T, R
+
+    # carries derive from `a` (not fresh zeros) so their varying-manual-axes
+    # type matches the body's outputs under shard_map (scan-vma rule)
+    V0 = a * jnp.asarray(0.0, dt)
+    T0 = a[:n, :] * jnp.asarray(0.0, dt)
+    V, T, R = jax.lax.fori_loop(0, n, col, (V0, T0, a))
+    return V, T, jnp.triu(R[:n, :])
+
+
+def householder_qr(a: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Dispatch: unrolled columns for test-size tiles, while-loop above."""
+    if a.shape[1] <= 64:
+        return householder_qr_ref(a)
+    return householder_qr_loop(a)
+
+
+def cholqr2(a: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """CholeskyQR2 panel factorization with Yamamoto's compact-WY
+    reconstruction -- the TPU-native panel QR (EXPERIMENTS.md S-Perf/qr).
+
+    The column-by-column Householder panel streams the m x b panel b times
+    (hopelessly HBM-bound at production tile sizes); CholeskyQR2 touches it
+    ~4 times, all through MXU-shaped b x b matmuls:
+
+        [Q, R] = cholqr(cholqr(A));   A = Q (R2 R1)
+        W = Q - E1,  T~ = (I - Q_top)^-T   =>   Q_full = I - W T~ W^T
+
+    Returns (W, T~, R) with the SAME contract as householder_qr: applying
+    C - W T~^T (W^T C) realizes Q_full^T C, so the distributed trailing
+    update is unchanged. Caveat: I - Q_top must be nonsingular (fails only
+    when the panel is already upper-triangular with positive diagonal --
+    see tests); production fallback is householder_qr.
+    """
+    m, b = a.shape
+
+    def _cholqr(s):
+        g = s.T @ s
+        r = jnp.linalg.cholesky(g).T                   # upper
+        q = trsm_upper_right_ref(r, s)                 # Q = S R^-1
+        return q, r
+
+    q1, r1 = _cholqr(a)
+    q, r2 = _cholqr(q1)
+    r = r2 @ r1
+    w = q.at[:b].add(-jnp.eye(b, dtype=a.dtype))
+    t_til = jnp.linalg.inv(jnp.eye(b, dtype=a.dtype) - q[:b]).T
+    return w, t_til, r
+
+
+def apply_block_reflector_ref(v: jax.Array, t: jax.Array,
+                              c: jax.Array) -> jax.Array:
+    """C := (I - V T V^T)^T C = C - V T^T V^T C   (applies Q^T)."""
+    w = v.T @ c
+    return c - v @ (t.T @ w)
+
+
+# ------------------------------------------------------------- attention
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  softcap: float | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Naive full-materialization attention oracle.
+
+    q: [B, Hq, Sq, D], k/v: [B, Hkv, Skv, D] (GQA: Hq % Hkv == 0).
+    `window`: sliding-window size (local attention); None = full.
+    `softcap`: Gemma-2 logit soft-capping: cap * tanh(logits / cap).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kx) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode-friendly)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(mask[None, None], probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vx)

@@ -1,0 +1,69 @@
+"""Pallas TPU SYRK: C := beta * C + alpha * A @ A^T (lower-symmetric).
+
+Cholesky's trailing update. Grid (M/bm, M/bn, K/bk); output tiles strictly
+above the block diagonal are passed through untouched (symmetry makes them
+dead), halving MXU work versus a plain GEMM of the same shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _syrk_kernel(a_ref, at_ref, c_ref, o_ref, acc_ref, *,
+                 alpha: float, beta: float, k_steps: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i >= j)          # lower (block) triangle only
+    def _mac():
+        acc_ref[...] += jnp.dot(a_ref[...], at_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        live = alpha * acc_ref[...] + beta * c_ref[...].astype(jnp.float32)
+        o_ref[...] = jnp.where(i >= j, live,
+                               c_ref[...].astype(jnp.float32)
+                               ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "bm", "bk",
+                                             "interpret"))
+def syrk_pallas(a: jax.Array, c: jax.Array, *, alpha: float = -1.0,
+                beta: float = 1.0, bm: int = 256, bk: int = 256,
+                interpret: bool = False) -> jax.Array:
+    m, k = a.shape
+    assert c.shape == (m, m)
+    bm, bk = min(bm, m), min(bk, k)
+    assert m % bm == 0 and k % bk == 0
+    k_steps = k // bk
+    grid = (m // bm, m // bm, k_steps)
+    kernel = functools.partial(_syrk_kernel, alpha=alpha, beta=beta,
+                               k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # A^T streamed as row-blocks of A transposed inside the kernel
+            # via a second view of A with swapped index map
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bm), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), c.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="repro_syrk",
+    )(a, a.T, c)

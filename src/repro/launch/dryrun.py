@@ -1,0 +1,362 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS_EXTRA", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, print memory/cost analysis, and persist the
+roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch mamba2-370m --shape train_4k
+    python -m repro.launch.dryrun --all                    # every live cell
+    python -m repro.launch.dryrun --all --mesh multi_pod   # 2x16x16
+    python -m repro.launch.dryrun --all --out results/dryrun.json
+
+Success here proves the distribution config is coherent: sharding
+mismatches, compile-time OOM, or unsupported collectives all surface as
+hard failures. The compiled artifact's cost analysis feeds EXPERIMENTS.md
+S-Roofline (launch/roofline.py)."""
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import re             # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+
+from repro.configs import SHAPES, all_cells, cell_applicable, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_chips  # noqa: E402
+from repro.launch.specs import make_cell                     # noqa: E402
+from repro.sharding.rules import use_sharding                # noqa: E402
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?(%?[\w.\-]+) = (.+)$")
+_OPERAND_REF_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[16,4096,5120]{2,1,0}' -> bytes; sums every shape expression in
+    the string (tuples / multiple operands), ignoring non-dtype brackets."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved through each collective op family, summed over
+    the module. Operand sizes are parsed from the instruction body (XLA
+    prints operand shapes inline); `*-start` variants are counted, their
+    `*-done` halves are not (avoids double counting async pairs)."""
+    sizes: dict[str, int] = {}
+    per_op: dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        sizes[name.lstrip("%")] = _shape_bytes(body.split(" ", 1)[0])
+        for op in COLLECTIVE_OPS:
+            marker = None
+            for cand in (f" {op}(", f" {op}-start("):
+                if cand in body:
+                    marker = cand
+                    break
+            if marker is None:
+                continue
+            operand_str = body.split(marker, 1)[1]
+            operand_str = operand_str.split("),", 1)[0]   # strip attributes
+            operand_bytes = _shape_bytes(operand_str)
+            if operand_bytes == 0:                        # name-only operands
+                for ref in _OPERAND_REF_RE.findall(operand_str):
+                    operand_bytes += sizes.get(ref, 0)
+            per_op[op] += operand_bytes
+            break
+    return per_op
+
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_dev: float) -> dict[str, float]:
+    """Three-term roofline from *per-device* quantities (the SPMD module is
+    the per-device program; multiplying by chips and dividing by chips*peak
+    cancels)."""
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k])
+    terms["step_s_lower_bound"] = max(terms["compute_s"], terms["memory_s"],
+                                      terms["collective_s"])
+    return terms
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+             hlo_out: str | None = None, cfg=None, rules=None,
+             opt_cfg=None) -> dict:
+    shape = SHAPES[shape_name]
+    cell = make_cell(arch, shape, mesh, cfg=cfg, rules=rules, opt_cfg=opt_cfg)
+    t0 = time.time()
+    with use_sharding(mesh, cell.rules):
+        jitted = jax.jit(cell.fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if hlo_out:
+        with open(hlo_out, "w") as f:
+            f.write(hlo)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(sum(coll.values()))
+    chips = n_chips(mesh)
+    cfg_ = cell.cfg
+
+    # 6*N*D model flops (D = tokens for train incl. backward 3x factor;
+    # decode/prefill use forward-only 2*N*D)
+    n_active = cfg_.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch * 1
+        model_flops = 2.0 * n_active * tokens
+
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": {k: v for k, v in coll.items() if v},
+        "model_flops_global": model_flops,
+        "useful_flop_ratio": (model_flops / (flops_dev * chips)
+                              if flops_dev else 0.0),
+        **roofline_terms(flops_dev, bytes_dev, coll_dev),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                out[f"mem_{attr}"] = int(v)
+    if verbose:
+        print(f"[dryrun] {arch:22s} {shape_name:12s} mesh={out['mesh']:9s} "
+              f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+              f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+              f"coll/dev={coll_dev:.3e} -> {out['bottleneck']}")
+        if mem is not None:
+            print(f"         memory_analysis: "
+                  f"args={out.get('mem_argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temps={out.get('mem_temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"out={out.get('mem_output_size_in_bytes', 0)/2**30:.2f}GiB")
+    return out
+
+
+def _write_out(out_path: str | None, results: list[dict]) -> None:
+    """Append results to a JSON file, replacing stale same-cell entries."""
+    if not out_path or not results:
+        return
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    prior = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            prior = json.load(f)
+    seen = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+    prior = [r for r in prior
+             if (r["arch"], r["shape"], r["mesh"]) not in seen]
+    with open(out_path, "w") as f:
+        json.dump(prior + results, f, indent=1)
+    print(f"[dryrun] wrote {len(results)} results -> {out_path}")
+
+
+def run_fact_cell(name: str, n: int, tile: int, mesh, *,
+                  verbose: bool = True, hlo_out: str | None = None,
+                  dtype=None) -> dict:
+    """Dry-run one distributed factorization (the paper's own workload) on
+    the production mesh: lower + compile the full unrolled shard_map
+    factorization, extract roofline terms."""
+    import jax.numpy as jnp
+
+    from repro.core.dag import factorization_flops
+    from repro.linalg.distributed import dryrun_cell
+
+    dtype = dtype or jnp.float32
+    fn, args, in_sh, out_sh = dryrun_cell(name, n, tile, mesh, dtype)
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=(0,)).lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if hlo_out:
+        with open(hlo_out, "w") as f:
+            f.write(hlo)
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(sum(coll.values()))
+    chips = n_chips(mesh)
+    model_flops = factorization_flops(name, n)
+    out = {
+        "arch": f"fact-{name}", "shape": f"n{n}_b{tile}",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips, "kind": "factorization",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": {k: v for k, v in coll.items() if v},
+        "model_flops_global": model_flops,
+        "useful_flop_ratio": (model_flops / (flops_dev * chips)
+                              if flops_dev else 0.0),
+        **roofline_terms(flops_dev, bytes_dev, coll_dev),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                out[f"mem_{attr}"] = int(v)
+    if verbose:
+        print(f"[dryrun] fact-{name:8s} N={n} b={tile} mesh={out['mesh']:9s} "
+              f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+              f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+              f"coll/dev={coll_dev:.3e} -> {out['bottleneck']} "
+              f"useful={out['useful_flop_ratio']:.2f}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--fact",
+                    choices=("cholesky", "lu", "qr", "qr-cholqr2"),
+                    help="dry-run a distributed factorization instead")
+    ap.add_argument("--n", type=int, default=163840,
+                    help="--fact matrix dimension (paper: 160000->163840)")
+    ap.add_argument("--tile", type=int, default=2560,
+                    help="--fact tile size")
+    ap.add_argument("--mesh", choices=("single_pod", "multi_pod", "both"),
+                    default="single_pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append results to this JSON")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    meshes = {"single_pod": False, "multi_pod": True}
+    mesh_names = (["single_pod", "multi_pod"] if args.mesh == "both"
+                  else [args.mesh])
+
+    if args.fact:
+        results, failures = [], []
+        for mesh_name in mesh_names:
+            mesh = make_production_mesh(multi_pod=meshes[mesh_name])
+            # multi-pod: the factorization grid is ("data","model") inside
+            # each pod; the pod axis runs independent instances (the paper's
+            # workload is a single-grid job -- pod axis stays batch-like)
+            if meshes[mesh_name]:
+                import jax as _jax
+                mesh = _jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+            hlo_out = None
+            if args.hlo_dir:
+                os.makedirs(args.hlo_dir, exist_ok=True)
+                hlo_out = os.path.join(
+                    args.hlo_dir,
+                    f"fact-{args.fact}_n{args.n}_{mesh_name}.hlo")
+            try:
+                results.append(run_fact_cell(args.fact, args.n, args.tile,
+                                             mesh, hlo_out=hlo_out))
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((args.fact, args.n, mesh_name, repr(e)))
+        _write_out(args.out, results)
+        if failures:
+            raise SystemExit(1)
+        return
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        ok, why = cell_applicable(get_config(args.arch), args.shape)
+        if not ok:
+            print(f"SKIP {args.arch} x {args.shape}: {why}")
+            return
+        cells = [(args.arch, args.shape)]
+
+    results, failures = [], []
+    for mesh_name in mesh_names:
+        mesh = make_production_mesh(multi_pod=meshes[mesh_name])
+        for arch, shape in cells:
+            hlo_out = None
+            if args.hlo_dir:
+                os.makedirs(args.hlo_dir, exist_ok=True)
+                hlo_out = os.path.join(
+                    args.hlo_dir, f"{arch}_{shape}_{mesh_name}.hlo")
+            try:
+                results.append(run_cell(arch, shape, mesh, hlo_out=hlo_out))
+            except Exception as e:  # noqa: BLE001 -- report, then fail at exit
+                traceback.print_exc()
+                failures.append((arch, shape, mesh_name, repr(e)))
+        del mesh
+
+    _write_out(args.out, results)
+
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+        raise SystemExit(1)
+    print(f"[dryrun] all {len(results)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

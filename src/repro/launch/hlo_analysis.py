@@ -1,0 +1,389 @@
+"""Trip-count-aware analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE -- a
+``jax.lax.scan`` over 40 layer groups contributes its body a single time,
+so flop/byte totals for scanned models are undercounted by orders of
+magnitude (and collective bytes inside scanned bodies likewise). This
+module parses ``compiled.as_text()`` into a computation call graph,
+infers while-loop trip counts from their condition computations
+(jax-lowered loops compare an induction var starting at 0 against a
+constant with direction=LT), and propagates execution multipliers:
+
+    ENTRY                      x1
+    while body/condition       x trip_count x caller
+    fusion / call / to_apply   x caller
+    conditional branches       x caller      (upper bound: both branches)
+
+Per-computation costs, then multiplied through the graph:
+
+  * flops       -- dot ops: 2 x |out| x prod(contracting dims); convolution
+                   handled approximately; elementwise ignored (documented:
+                   matmul-dominated workloads; this matches the MXU term).
+  * hbm bytes   -- for every instruction at fusion *boundaries* (fusion
+                   internals move through registers/VMEM): |out| + sum
+                   |operands|, skipping no-data ops (tuple/gte/parameter/
+                   constant/bitcast). A buffer-level HBM traffic model --
+                   deliberately different from cost_analysis's
+                   "bytes accessed", which double-counts fused operands.
+  * collectives -- ring-model bytes per device and per family, with the
+                   replica-group size G: all-gather counts (G-1)/G x |out|,
+                   all-reduce 2(G-1)/G x |in|, reduce-scatter (G-1)/G x
+                   |in|, all-to-all (G-1)/G x |in|, collective-permute
+                   |in|. Groups that span more than one pod's chips are
+                   split out as DCN traffic (cross-pod links are not ICI).
+
+The result feeds the roofline terms in launch/roofline.py; raw
+cost_analysis numbers are kept alongside for comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->.*\{")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.+)$")
+_ATTR_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
+_ATTR_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_ATTR_BRANCH = re.compile(r"branch_computations=\{([^}]*)\}")
+_ATTR_TF = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# s32 normally; s64 when the program was built under jax_enable_x64
+_CONST_S32_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_NO_DATA_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency",
+})
+
+
+def _shape_list(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        total += _DTYPE_BYTES[dt] * math.prod(dims) if dims else _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str          # type portion of the body
+    body: str              # full body text
+    operands: list[str]    # referenced instruction names
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.out_type)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list[Instr] = dataclasses.field(default_factory=list)
+
+    def by_name(self) -> dict[str, Instr]:
+        return {i.name: i for i in self.instrs}
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        # body = "<type> <opcode>(<operands>), attrs..."
+        # the type may be a tuple: find the opcode as the first word
+        # followed by '(' after the leading type expression.
+        op_m = re.search(r"\s([a-z][\w\-]*)\(", body)
+        if not op_m:
+            continue
+        opcode = op_m.group(1)
+        out_type = body[:op_m.start()].strip()
+        paren = body[op_m.end():]
+        depth, i = 1, 0
+        while i < len(paren) and depth:
+            if paren[i] == "(":
+                depth += 1
+            elif paren[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = paren[:i - 1]
+        operands = _OPERAND_RE.findall(operand_str)
+        cur.instrs.append(Instr(name, opcode, out_type, body, operands))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+# ------------------------------------------------------------- call graph
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count of a jax-lowered while: the s32[] constant its condition
+    compares against (induction variables start at 0, direction=LT)."""
+    vals = []
+    for ins in cond.instrs:
+        vals.extend(int(v) for v in _CONST_S32_RE.findall(ins.body))
+    if not vals:
+        return 1
+    return max(vals)        # the loop bound dominates any stray constants
+
+
+def computation_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    if entry is None:
+        return mult
+
+    import collections
+    pending = collections.deque([(entry, 1.0)])
+    while pending:
+        name, m = pending.popleft()
+        if name not in comps:
+            continue
+        mult[name] = mult.get(name, 0.0) + m
+        for ins in comps[name].instrs:
+            if ins.opcode == "while":
+                b = _ATTR_BODY.search(ins.body)
+                c = _ATTR_COND.search(ins.body)
+                trips = _trip_count(comps[c.group(1)]) if c and \
+                    c.group(1) in comps else 1
+                if b:
+                    pending.append((b.group(1), m * trips))
+                if c:
+                    pending.append((c.group(1), m * (trips + 1)))
+            else:
+                for pat in (_ATTR_CALLS, _ATTR_APPLY, _ATTR_TF):
+                    for g in pat.findall(ins.body):
+                        pending.append((g, m))
+                br = _ATTR_BRANCH.search(ins.body)
+                if br:
+                    for g in _OPERAND_RE.findall(br.group(1)):
+                        pending.append((g, m))
+    return mult
+
+
+# ----------------------------------------------------------------- costs
+
+def _dot_flops(ins: Instr, table: dict[str, Instr]) -> float:
+    shapes = _shape_list(ins.out_type)
+    if not shapes:
+        return 0.0
+    out_elems = math.prod(shapes[0][1]) if shapes[0][1] else 1
+    cd = _CDIMS_RE.search(ins.body)
+    if not cd or not ins.operands:
+        return 2.0 * out_elems            # unknown contraction: assume 1
+    lhs = table.get(ins.operands[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    lhs_shapes = _shape_list(lhs.out_type)
+    if not lhs_shapes:
+        return 2.0 * out_elems
+    dims = lhs_shapes[0][1]
+    k = 1
+    for d in (int(x) for x in cd.group(1).split(",") if x):
+        if d < len(dims):
+            k *= dims[d]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, table: dict[str, Instr]) -> float:
+    shapes = _shape_list(ins.out_type)
+    if not shapes or len(ins.operands) < 2:
+        return 0.0
+    out_elems = math.prod(shapes[0][1]) if shapes[0][1] else 1
+    ker = table.get(ins.operands[1])
+    if ker is None:
+        return 2.0 * out_elems
+    kshapes = _shape_list(ker.out_type)
+    kelems = math.prod(kshapes[0][1]) if kshapes and kshapes[0][1] else 1
+    # 2 * |out| * kernel_elems / out_features (approximate)
+    out_feat = shapes[0][1][-1] if shapes[0][1] else 1
+    return 2.0 * out_elems * max(kelems // max(out_feat, 1), 1)
+
+
+def _group_size(ins: Instr, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(ins.body)
+    if m:
+        return len([x for x in m.group(1).split(",") if x])
+    m = _GROUPS_IOTA_RE.search(ins.body)
+    if m:
+        return int(m.group(2))            # [n_groups, group_size]
+    return default
+
+
+def _group_spans_pods(ins: Instr, chips_per_pod: int) -> bool:
+    """True if any replica group mixes devices from different pods."""
+    m = _GROUPS_BRACE_RE.search(ins.body)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        return len({i // chips_per_pod for i in ids}) > 1
+    m = _GROUPS_IOTA_RE.search(ins.body)
+    if m:
+        # iota groups [G, S] <= [N]: group g = {g*S .. g*S+S-1} after the
+        # permutation; without decoding the permutation, a group larger
+        # than a pod must span pods; smaller iota groups are contiguous
+        # in the (pod-major) device order produced by make_mesh.
+        return int(m.group(2)) > chips_per_pod
+    return False
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0               # ring-model, per device
+    dcn_bytes: float = 0.0               # cross-pod portion
+    coll_bytes_raw: float = 0.0          # operand bytes (dryrun parity)
+    per_collective: dict = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "ici_bytes": self.ici_bytes,
+            "dcn_bytes": self.dcn_bytes,
+            "coll_bytes_raw": self.coll_bytes_raw,
+            "per_collective": dict(self.per_collective),
+            "n_while": self.n_while,
+        }
+
+
+# computations reached through `calls=` (fusions): flops counted, bytes not
+def _fusion_callees(comps: dict[str, Computation]) -> set[str]:
+    out: set[str] = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.opcode == "fusion":
+                m = _ATTR_CALLS.search(ins.body)
+                if m:
+                    out.add(m.group(1))
+    return out
+
+
+def analyze(text: str, *, n_devices: int = 1,
+            chips_per_pod: int = 256) -> HloCost:
+    comps = parse_module(text)
+    mult = computation_multipliers(comps)
+    fusion_internal = _fusion_callees(comps)
+    cost = HloCost()
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        table = comp.by_name()
+        in_fusion = comp.name in fusion_internal
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                cost.n_while += 1
+                c = _ATTR_COND.search(ins.body)
+                if c and c.group(1) in comps:
+                    cost.trip_counts[ins.name] = _trip_count(comps[c.group(1)])
+                continue
+            if op == "dot":
+                cost.dot_flops += m * _dot_flops(ins, table)
+            elif op == "convolution":
+                cost.dot_flops += m * _conv_flops(ins, table)
+            elif op == "triangular-solve":
+                # X [.., n, k] vs triangular [.., n, n]: ~ n^2 k flops
+                shapes = _shape_list(ins.out_type)
+                if shapes and shapes[0][1]:
+                    dims = shapes[0][1]
+                    tri = table.get(ins.operands[0]) if ins.operands else None
+                    n_tri = (_shape_list(tri.out_type)[0][1][-1]
+                             if tri and _shape_list(tri.out_type) else dims[-1])
+                    cost.dot_flops += m * math.prod(dims) * n_tri
+            elif op == "cholesky":
+                shapes = _shape_list(ins.out_type)
+                if shapes and shapes[0][1]:
+                    dims = shapes[0][1]
+                    n_ = dims[-1]
+                    batch = math.prod(dims[:-2]) if len(dims) > 2 else 1
+                    cost.dot_flops += m * batch * n_ ** 3 / 3.0
+            # ---- collectives ------------------------------------------
+            base = op.removesuffix("-start")
+            if base in COLLECTIVES:
+                op_bytes = sum(table[o].out_bytes for o in ins.operands
+                               if o in table)
+                if op_bytes == 0:      # operands w/o inline defs: use out
+                    op_bytes = ins.out_bytes
+                out_bytes = ins.out_bytes
+                g = _group_size(ins, n_devices)
+                frac = (g - 1) / g if g > 1 else 0.0
+                if base == "all-gather":
+                    moved = frac * out_bytes
+                elif base == "all-reduce":
+                    moved = 2.0 * frac * op_bytes
+                elif base == "reduce-scatter":
+                    moved = frac * op_bytes
+                elif base == "all-to-all":
+                    moved = frac * op_bytes
+                else:                                  # collective-permute
+                    moved = float(op_bytes)
+                cost.coll_bytes_raw += m * op_bytes
+                key = base
+                cost.per_collective[key] = cost.per_collective.get(key, 0.0) \
+                    + m * moved
+                if _group_spans_pods(ins, chips_per_pod) and \
+                        n_devices > chips_per_pod:
+                    cost.dcn_bytes += m * moved
+                else:
+                    cost.ici_bytes += m * moved
+                # collectives also touch HBM
+            # ---- HBM traffic at fusion boundaries ----------------------
+            if in_fusion or op in _NO_DATA_OPS or op == "while":
+                continue
+            b = ins.out_bytes
+            for o in ins.operands:
+                if o in table:
+                    b += table[o].out_bytes
+            cost.hbm_bytes += m * b
+    return cost
+
+
+def analyze_file(path: str, **kw) -> HloCost:
+    with open(path) as f:
+        return analyze(f.read(), **kw)

@@ -1,0 +1,129 @@
+"""Roofline report: three terms per (arch x shape x mesh) cell.
+
+Reads results/dryrun.json (raw cost_analysis numbers captured at compile
+time) and results/hlo/*.hlo (the compiled modules), reruns the trip-count-
+aware analyzer, and emits per-cell:
+
+    compute_s     dot_flops / (197 TFLOP/s bf16)        [per chip]
+    memory_s      hbm_bytes / (819 GB/s)                [per chip]
+    collective_s  ici_bytes / (50 GB/s)  [+ dcn_bytes / (25 GB/s) x-pod]
+    bottleneck    argmax of the three
+    MODEL_FLOPS   6 N D (train) / 2 N D (inference), N = active params
+    useful ratio  MODEL_FLOPS / (dot_flops x chips)
+    roofline_frac compute_s / max(all three)  -- how compute-bound the
+                  step is; 1.0 = at the compute roofline
+
+Usage:
+    python -m repro.launch.roofline --json results/dryrun.json \
+        --hlo-dir results/hlo --out results/roofline.json [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .hlo_analysis import analyze_file
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s per link
+DCN_BW = 25e9              # cross-pod (not an assignment constant; only
+                           # used for collectives whose groups span pods)
+
+MESH_DIR = {"16x16": "single_pod", "2x16x16": "multi_pod"}
+
+
+def corrected_terms(rec: dict, hlo_dir: str) -> dict | None:
+    mesh_name = MESH_DIR.get(rec["mesh"])
+    if mesh_name is None:
+        return None
+    path = os.path.join(hlo_dir, f"{rec['arch']}_{rec['shape']}_{mesh_name}.hlo")
+    if not os.path.exists(path):
+        return None
+    cost = analyze_file(path, n_devices=rec["chips"],
+                        chips_per_pod=256)
+    compute_s = cost.dot_flops / PEAK_FLOPS
+    memory_s = cost.hbm_bytes / HBM_BW
+    collective_s = cost.ici_bytes / ICI_BW + cost.dcn_bytes / DCN_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=lambda k: terms[k])
+    bound = max(terms.values())
+    chips = rec["chips"]
+    model = rec.get("model_flops_global", 0.0)
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "step_s_lower_bound": bound,
+        "dot_flops_per_device": cost.dot_flops,
+        "hbm_bytes_per_device": cost.hbm_bytes,
+        "ici_bytes_per_device": cost.ici_bytes,
+        "dcn_bytes_per_device": cost.dcn_bytes,
+        "per_collective": cost.per_collective,
+        "useful_flop_ratio": (model / (cost.dot_flops * chips)
+                              if cost.dot_flops else 0.0),
+        "roofline_frac": compute_s / bound if bound else 0.0,
+        "n_while": cost.n_while,
+    }
+
+
+def build(json_path: str, hlo_dir: str) -> list[dict]:
+    with open(json_path) as f:
+        records = json.load(f)
+    out = []
+    for rec in records:
+        corr = corrected_terms(rec, hlo_dir)
+        row = dict(rec)
+        if corr is not None:
+            row["corrected"] = corr
+        out.append(row)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s"
+    return f"{x * 1e3:6.1f}ms"
+
+
+def markdown_table(rows: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | bottleneck"
+        " | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh or "corrected" not in r:
+            continue
+        c = r["corrected"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(c['compute_s'])} "
+            f"| {fmt_s(c['memory_s'])} | {fmt_s(c['collective_s'])} "
+            f"| {fmt_s(c['step_s_lower_bound'])} "
+            f"| {c['bottleneck'].removesuffix('_s')} "
+            f"| {c['useful_flop_ratio']:.2f} | {c['roofline_frac']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    rows = build(args.json, args.hlo_dir)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[roofline] wrote {len(rows)} rows -> {args.out}")
+    if args.markdown:
+        for mesh in ("16x16", "2x16x16"):
+            print(f"\n### mesh {mesh}\n")
+            print(markdown_table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

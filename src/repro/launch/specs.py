@@ -1,0 +1,228 @@
+"""Input specs + sharding derivation for every (architecture x shape) cell.
+
+`input_specs(arch, shape)` returns ShapeDtypeStruct stand-ins for every
+model input -- weak-type-correct, shardable, no device allocation -- and
+`make_cell(...)` assembles the (step_fn, args, in_shardings, out_shardings,
+donate) tuple that both the dry-run and the roofline consume.
+
+Workload kinds:
+    train    -> train_step(params, opt_state, batch)
+    prefill  -> prefill(params, batch, cache)
+    decode   -> decode_step(params, token, cache, pos)  with a seq_len cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs import ShapeSpec, get_config
+from repro.models import ModelApi, get_model
+from repro.models.config import ModelConfig
+from repro.sharding.rules import Rules, make_rules, spec_for
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step, train_state_specs
+
+from .mesh import data_axes, mesh_axis_sizes
+
+_TUPLE = lambda x: isinstance(x, tuple)  # noqa: E731
+
+
+# ----------------------------------------------------------------- helpers
+def adapt_rules_for_batch(rules: Rules, mesh: Mesh, global_batch: int) -> Rules:
+    """Shrink the batch mapping to the largest prefix of the data axes that
+    divides global_batch (long_500k has batch=1: fully replicated)."""
+    sizes = mesh_axis_sizes(mesh)
+    axes = rules.get("batch") or ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept: list[str] = []
+    prod = 1
+    for ax in axes:
+        if global_batch % (prod * sizes[ax]) == 0:
+            kept.append(ax)
+            prod *= sizes[ax]
+        else:
+            break
+    out = dict(rules)
+    out["batch"] = tuple(kept) if kept else None
+    out["moe_groups"] = out["batch"]
+    return out
+
+
+def shardings_of(tree_axes, rules: Rules, mesh: Mesh):
+    """Logical-axes pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, spec_for(ax, rules)),
+        tree_axes, is_leaf=_TUPLE)
+
+
+def _batch_axes(cfg: ModelConfig, kind: str) -> dict:
+    """Logical axes of the input batch dict (matches data.py layout)."""
+    if kind == "train":
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.frontend == "audio":
+            axes["audio_embeds"] = ("batch", None, None)
+        if cfg.frontend == "vision":
+            axes["vision_embeds"] = ("batch", None, None)
+        return axes
+    if kind == "prefill":
+        axes = {"tokens": ("batch", None)}
+        if cfg.frontend == "audio":
+            axes["audio_embeds"] = ("batch", None, None)
+        if cfg.frontend == "vision":
+            axes["vision_embeds"] = ("batch", None, None)
+        return axes
+    raise ValueError(kind)
+
+
+def _batch_abstract(cfg: ModelConfig, shape: ShapeSpec, kind: str) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if kind == "train":
+        out = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:
+        out = {"tokens": tok}
+    if cfg.frontend == "audio":
+        out["audio_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        n_pre = min(cfg.frontend_len or 0, s // 2) or 1
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, n_pre, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(arch: str, shape_name: str,
+                shapes: dict[str, ShapeSpec] | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step."""
+    from repro.configs import SHAPES
+    cfg = get_config(arch)
+    shape = (shapes or SHAPES)[shape_name]
+    api = get_model(cfg)
+    if shape.kind == "train":
+        return _batch_abstract(cfg, shape, "train")
+    if shape.kind == "prefill":
+        return _batch_abstract(cfg, shape, "prefill")
+    # decode: one new token against a seq_len cache
+    return {
+        "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "cache": api.init_cache(shape.global_batch, shape.seq_len, "abstract"),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------- cells
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) combination."""
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    rules: Rules
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                         mesh: Mesh) -> int:
+    """Gradient-accumulation factor so the remat layer-boundary activations
+    (layers x per-device-batch x seq x d_model, bf16) stay under ~8 GiB of
+    a 16 GiB v5e HBM. Powers of two only; must divide the per-device batch."""
+    if shape.kind != "train":
+        return 1
+    sizes = mesh_axis_sizes(mesh)
+    dp = 1
+    for ax in data_axes(mesh):
+        dp *= sizes[ax]
+    per_dev_b = max(shape.global_batch // dp, 1)
+    layers = cfg.n_layers + cfg.encoder_layers
+    act_gb = layers * per_dev_b * shape.seq_len * cfg.d_model * 2 / 2**30
+    n = 1
+    while act_gb / n > 8.0 and n < min(16, per_dev_b):
+        n *= 2
+    return n
+
+
+def make_cell(arch: str, shape: ShapeSpec, mesh: Mesh, *,
+              opt_cfg: AdamWConfig | None = None,
+              cfg: ModelConfig | None = None,
+              rules: Rules | None = None,
+              n_microbatches: int | None = None) -> Cell:
+    cfg = cfg or get_config(arch)
+    api = get_model(cfg)
+    if rules is None:
+        rules = make_rules(cfg, mesh, workload=shape.kind,
+                           seq_len=shape.seq_len)
+    rules = adapt_rules_for_batch(rules, mesh, shape.global_batch)
+
+    params_abs = api.param_tree("abstract")
+    params_axes = api.param_tree("axes")
+    params_shard = shardings_of(params_axes, rules, mesh)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or default_opt_for(cfg)
+        pspec, opt_spec = train_state_specs(api, opt_cfg, rules)
+        opt_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_spec,
+                                 is_leaf=lambda x: isinstance(x, PartitionSpec))
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+        batch_abs = _batch_abstract(cfg, shape, "train")
+        batch_shard = shardings_of(_batch_axes(cfg, "train"), rules, mesh)
+        if n_microbatches is None:
+            n_microbatches = default_microbatches(cfg, shape, mesh)
+        step = make_train_step(api, opt_cfg, n_microbatches=n_microbatches)
+        metrics_shard = {"loss": repl, "grad_norm": repl, "lr": repl}
+        return Cell(arch, shape, cfg, step,
+                    (params_abs, opt_abs, batch_abs),
+                    (params_shard, opt_shard, batch_shard),
+                    (params_shard, opt_shard, metrics_shard),
+                    donate_argnums=(0, 1), rules=rules)
+
+    cache_abs = api.init_cache(shape.global_batch, shape.seq_len, "abstract")
+    cache_axes = api.init_cache(shape.global_batch, shape.seq_len, "axes")
+    cache_shard = shardings_of(cache_axes, rules, mesh)
+
+    if shape.kind == "prefill":
+        batch_abs = _batch_abstract(cfg, shape, "prefill")
+        batch_shard = shardings_of(_batch_axes(cfg, "prefill"), rules, mesh)
+
+        def prefill_step(params, batch, cache):
+            return api.prefill(params, batch, cache)
+
+        return Cell(arch, shape, cfg, prefill_step,
+                    (params_abs, batch_abs, cache_abs),
+                    (params_shard, batch_shard, cache_shard),
+                    None, donate_argnums=(2,), rules=rules)
+
+    # decode
+    token_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    batch_spec = spec_for(("batch", None), rules)
+    token_shard = NamedSharding(mesh, batch_spec)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, token, cache, pos):
+        return api.decode_step(params, token, cache, pos)
+
+    return Cell(arch, shape, cfg, decode,
+                (params_abs, token_abs, cache_abs, pos_abs),
+                (params_shard, token_shard, cache_shard, repl),
+                None, donate_argnums=(2,), rules=rules)
+
+
+def default_opt_for(cfg: ModelConfig) -> AdamWConfig:
+    """Optimizer-state dtype policy: the two ~300B-class archs need bf16
+    moments + no master copy to fit a 256-chip pod (EXPERIMENTS.md S-Dry-run
+    memory table); everything else trains with fp32 state."""
+    big = cfg.param_count() > 60e9
+    if big:
+        return AdamWConfig(m_dtype="bfloat16", v_dtype="bfloat16",
+                           master_dtype=None)
+    return AdamWConfig()

@@ -1,0 +1,12 @@
+"""Dense factorization substrate: blocked + tiled + distributed
+Cholesky / LU / QR in JAX (the paper's target workloads)."""
+
+from .blocked import cholesky_blocked, lu_blocked_nopiv, qr_blocked
+from .tiled import (TiledMatrix, tiled_cholesky, tiled_lu, tiled_qr,
+                    tiles_to_dense, dense_to_tiles)
+
+__all__ = [
+    "cholesky_blocked", "lu_blocked_nopiv", "qr_blocked",
+    "TiledMatrix", "tiled_cholesky", "tiled_lu", "tiled_qr",
+    "tiles_to_dense", "dense_to_tiles",
+]

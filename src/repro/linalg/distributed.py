@@ -1,0 +1,332 @@
+"""Distributed 2-D block-cyclic factorizations under shard_map.
+
+The paper's experimental substrate: ScaLAPACK-style Cholesky / LU / QR over
+a P x Q process grid (the paper's own runs use 16 x 16 = 256 processes).
+Mapping onto TPU-native constructs (DESIGN.md S3.4):
+
+    MPI rank (p, q)          -> mesh device at ("data"=p, "model"=q)
+    block-cyclic tile owner  -> tile (i, j) lives on device (i % P, j % Q)
+    panel broadcast (row)    -> masked psum over the "model" axis
+    panel broadcast (col)    -> all_gather over the "data" axis
+    QR tall-panel apply      -> psum of partial V^T C products over "data"
+                                (the TSQR-free distributed Householder apply)
+
+Layout.  A global tile array [T, T, b, b] is reordered so that *block*
+sharding of the reordered array equals *cyclic* sharding of the original
+(i -> (i % P) * (T//P) + i // P); `shard_map` over ("data", "model") then
+hands every device its [T/P, T/Q, b, b] cyclic tile set. Inside the kernel,
+global indices are recovered from `lax.axis_index`.
+
+Algorithm (per iteration k, fully static Python loop -- the DAG the energy
+core schedules is literally this unrolled loop):
+
+  1. row-bcast:  devices in column k % Q contribute their column-k tiles;
+     a masked psum over "model" gives every device the panel tiles for its
+     own row subset (the MPI row broadcast).
+  2. col-bcast:  all_gather over "data" assembles the full panel on every
+     device (the MPI column broadcast).
+  3. panel math: POTRF/GETRF/GEQRT of the (stacked) panel is computed
+     REDUNDANTLY on every device -- the replicated-panel variant: on TPU,
+     b^3 of redundant compute is far cheaper than serializing a panel tree
+     over ICI (hardware adaptation of the paper's CPU panel, DESIGN.md S3).
+  4. trailing update: batched masked GEMM over the local trailing tiles
+     (one einsum over [Tp', Tq', b, b] -- MXU-shaped, no per-tile loop).
+
+The trailing slice [li0:, lj0:] is the *static union* over ranks of tiles
+with (gi > k, gj > k), so the update einsum shrinks as k advances even
+though per-rank indices are dynamic; the residual waste is <= one tile
+row/column per rank (see EXPERIMENTS.md S-Perf for the measured effect).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ref
+
+# ---------------------------------------------------------------- layout
+
+def cyclic_perm(t: int, p: int) -> jnp.ndarray:
+    """Permutation sending global tile index i to its block-sharded slot."""
+    i = jnp.arange(t)
+    return (i % p) * (t // p) + i // p
+
+
+def to_block_cyclic(tiles: jax.Array, grid: tuple[int, int]) -> jax.Array:
+    """[T, T, b, b] global tiles -> reordered so block sharding == cyclic."""
+    t = tiles.shape[0]
+    pr, pc = grid
+    rp = jnp.argsort(cyclic_perm(t, pr))
+    cp = jnp.argsort(cyclic_perm(t, pc))
+    return tiles[rp][:, cp]
+
+
+def from_block_cyclic(tiles: jax.Array, grid: tuple[int, int]) -> jax.Array:
+    t = tiles.shape[0]
+    pr, pc = grid
+    return tiles[cyclic_perm(t, pr)][:, cyclic_perm(t, pc)]
+
+
+# --------------------------------------------------------- panel assembly
+
+def _gather_panel_col(tiles, k, t, pr, pc):
+    """Full factor-column k ([T, b, b], global order) on every device.
+
+    tiles: local [Tp, Tq, b, b]. Two hops: masked psum over "model" (row
+    broadcast), all_gather over "data" (column broadcast).
+    """
+    q = jax.lax.axis_index("model")
+    lj = k // pc                                  # local col of global col k
+    cand = tiles[:, lj]                           # [Tp, b, b]
+    mine = jnp.where(q == (k % pc), cand, jnp.zeros_like(cand))
+    rows_mine = jax.lax.psum(mine, "model")       # row bcast: my rows' tiles
+    gathered = jax.lax.all_gather(rows_mine, "data")   # [P, Tp, b, b]
+    # global row i lives at gathered[i % P, i // P]
+    gi = jnp.arange(t)
+    return gathered[gi % pr, gi // pr], rows_mine
+
+
+def _gather_panel_row(tiles, k, t, pr, pc):
+    """Full factor-row k ([T, b, b]) on every device (LU's U panel)."""
+    p = jax.lax.axis_index("data")
+    li = k // pr
+    cand = tiles[li]                              # [Tq, b, b]
+    mine = jnp.where(p == (k % pr), cand, jnp.zeros_like(cand))
+    cols_mine = jax.lax.psum(mine, "data")        # col bcast
+    gathered = jax.lax.all_gather(cols_mine, "model")  # [Q, Tq, b, b]
+    gj = jnp.arange(t)
+    return gathered[gj % pc, gj // pc], cols_mine
+
+
+def _local_rows(panel_full, pr, axis_name="data"):
+    """Select a device's own rows from a [T, ...] global-order panel."""
+    p = jax.lax.axis_index(axis_name)
+    t = panel_full.shape[0]
+    li = jnp.arange(t // pr)
+    return jnp.take(panel_full, li * pr + p, axis=0)
+
+
+def _local_cols(panel_full, pc):
+    q = jax.lax.axis_index("model")
+    t = panel_full.shape[0]
+    lj = jnp.arange(t // pc)
+    return jnp.take(panel_full, lj * pc + q, axis=0)
+
+
+def _trail_start(k: int, p: int) -> int:
+    """Smallest local index that can hold a global index > k (static)."""
+    return max(0, (k + 2 - p) // p)
+
+
+# ------------------------------------------------------------- Cholesky
+
+def _cholesky_kernel(tiles, *, t: int, pr: int, pc: int):
+    """Local kernel: tiles [Tp, Tq, b, b] (full symmetric matrix in, lower
+    factor out -- upper tiles are garbage and zeroed by the wrapper)."""
+    p = jax.lax.axis_index("data")
+    q = jax.lax.axis_index("model")
+    tp, tq = t // pr, t // pc
+    gi_l = jnp.arange(tp) * pr + p                # my global rows  [Tp]
+    gj_l = jnp.arange(tq) * pc + q                # my global cols  [Tq]
+
+    for k in range(t):
+        panel, _ = _gather_panel_col(tiles, k, t, pr, pc)   # [T, b, b]
+        # --- redundant panel factorization -------------------------------
+        lkk = ref.potrf_ref(panel[k])
+        if k + 1 < t:
+            lpan = jax.vmap(lambda a: ref.trsm_ref(lkk, a))(panel[k + 1:])
+            panel_f = jnp.concatenate([lkk[None], lpan], axis=0)  # rows k..T
+        else:
+            panel_f = lkk[None]
+        # --- write the factored column back into my tiles ----------------
+        lj = k // pc
+        col_rows = jnp.take(panel_f, jnp.clip(gi_l - k, 0, t - 1 - k), axis=0)
+        write = (q == (k % pc)) & (gi_l >= k)
+        tiles = tiles.at[:, lj].set(
+            jnp.where(write[:, None, None], col_rows, tiles[:, lj]))
+        # --- trailing update over the static union slice ------------------
+        if k + 1 == t:
+            break
+        li0, lj0 = _trail_start(k, pr), _trail_start(k, pc)
+        lrow = jnp.take(panel_f, jnp.clip(gi_l[li0:] - k, 0, t - 1 - k),
+                        axis=0)                    # [Tp', b, b]
+        lcol = jnp.take(panel_f, jnp.clip(gj_l[lj0:] - k, 0, t - 1 - k),
+                        axis=0)                    # [Tq', b, b]
+        upd = jnp.einsum("iab,jcb->ijac", lrow, lcol,
+                         preferred_element_type=tiles.dtype)
+        mask = (gi_l[li0:, None] > k) & (gj_l[None, lj0:] > k)
+        tiles = tiles.at[li0:, lj0:].add(
+            jnp.where(mask[..., None, None], -upd, 0.0))
+    return tiles
+
+
+def _lu_kernel(tiles, *, t: int, pr: int, pc: int):
+    """Right-looking LU without pivoting (packed L\\U tiles)."""
+    p = jax.lax.axis_index("data")
+    q = jax.lax.axis_index("model")
+    tp, tq = t // pr, t // pc
+    gi_l = jnp.arange(tp) * pr + p
+    gj_l = jnp.arange(tq) * pc + q
+    b = tiles.shape[-1]
+    eye = jnp.eye(b, dtype=tiles.dtype)
+
+    for k in range(t):
+        colp, _ = _gather_panel_col(tiles, k, t, pr, pc)
+        lu_kk = ref.getrf_nopiv_ref(colp[k])
+        l_kk = jnp.tril(lu_kk, -1) + eye
+        u_kk = jnp.triu(lu_kk)
+        if k + 1 < t:
+            lpan = jax.vmap(lambda a: ref.trsm_upper_right_ref(u_kk, a))(
+                colp[k + 1:])                     # L column below diag
+            col_f = jnp.concatenate([lu_kk[None], lpan], axis=0)
+        else:
+            col_f = lu_kk[None]
+        # write the L column (and packed diag) back
+        lj = k // pc
+        col_rows = jnp.take(col_f, jnp.clip(gi_l - k, 0, t - 1 - k), axis=0)
+        write = (q == (k % pc)) & (gi_l >= k)
+        tiles = tiles.at[:, lj].set(
+            jnp.where(write[:, None, None], col_rows, tiles[:, lj]))
+        if k + 1 == t:
+            break
+        # U row: needs the updated row k (TRSM with L_kk)
+        rowp, _ = _gather_panel_row(tiles, k, t, pr, pc)
+        urow = jax.vmap(lambda a: ref.trsm_ref(
+            l_kk, a, side="left", trans=False, unit_diag=True))(rowp[k + 1:])
+        row_f = jnp.concatenate([u_kk[None], urow], axis=0)   # cols k..T
+        li = k // pr
+        row_cols = jnp.take(row_f, jnp.clip(gj_l - k, 0, t - 1 - k), axis=0)
+        writer = (p == (k % pr)) & (gj_l > k)     # diag already written
+        tiles = tiles.at[li].set(
+            jnp.where(writer[:, None, None], row_cols, tiles[li]))
+        # trailing update: A[i, j] -= L[i, k] @ U[k, j]
+        li0, lj0 = _trail_start(k, pr), _trail_start(k, pc)
+        lrow = jnp.take(col_f, jnp.clip(gi_l[li0:] - k, 0, t - 1 - k), axis=0)
+        ucol = jnp.take(row_f, jnp.clip(gj_l[lj0:] - k, 0, t - 1 - k), axis=0)
+        upd = jnp.einsum("iab,jbc->ijac", lrow, ucol,
+                         preferred_element_type=tiles.dtype)
+        mask = (gi_l[li0:, None] > k) & (gj_l[None, lj0:] > k)
+        tiles = tiles.at[li0:, lj0:].add(
+            jnp.where(mask[..., None, None], -upd, 0.0))
+    return tiles
+
+
+def _qr_kernel(tiles, *, t: int, pr: int, pc: int,
+               panel: str = "householder"):
+    """QR with a replicated tall panel + distributed compact-WY apply.
+
+    Per iteration: the full panel column (rows k..T-1, one b-wide block) is
+    assembled on every device and factorized redundantly (compact WY); the
+    trailing update C := (I - V T V^T)^T C runs distributed -- each device
+    row holds a slice of V and C, the inner product W = V^T C is a psum
+    over "data", and the rank-b correction is applied locally. Returns R in
+    the upper triangle (V is consumed; tests validate R^T R == A^T A).
+
+    panel: "householder" (PLASMA-faithful, HBM-bound at big b) or
+    "cholqr2" (CholeskyQR2 + Yamamoto WY reconstruction, ~4 panel passes;
+    the S-Perf hillclimbed variant). Both produce identical trailing-update
+    structure -- only the panel math differs.
+    """
+    p = jax.lax.axis_index("data")
+    q = jax.lax.axis_index("model")
+    tp, tq = t // pr, t // pc
+    gi_l = jnp.arange(tp) * pr + p
+    gj_l = jnp.arange(tq) * pc + q
+    b = tiles.shape[-1]
+    panel_qr = ref.cholqr2 if panel == "cholqr2" else ref.householder_qr
+
+    for k in range(t):
+        panel_col, _ = _gather_panel_col(tiles, k, t, pr, pc)   # [T, b, b]
+        m = (t - k) * b
+        stacked = panel_col[k:].reshape(m, b)
+        v_full, t_mat, r_kk = panel_qr(stacked)
+        # write R_kk at the diagonal owner, zero the column below
+        lj = k // pc
+        new_col = jnp.where((gi_l == k)[:, None, None], r_kk[None],
+                            jnp.where((gi_l > k)[:, None, None],
+                                      jnp.zeros((), tiles.dtype),
+                                      tiles[:, lj]))
+        tiles = tiles.at[:, lj].set(
+            jnp.where(q == (k % pc), new_col, tiles[:, lj]))
+        if k + 1 == t:
+            break
+        # my V rows: global row gi maps to stacked rows (gi - k) * b ...
+        vt = v_full.reshape(t - k, b, b)                     # per-tile V
+        v_mine = jnp.take(vt, jnp.clip(gi_l - k, 0, t - 1 - k), axis=0)
+        v_mine = jnp.where((gi_l >= k)[:, None, None], v_mine, 0.0)  # [Tp,b,b]
+        # distributed apply to trailing local columns
+        lj0 = _trail_start(k, pc)
+        c = tiles[:, lj0:]                                   # [Tp, Tq', b, b]
+        w_part = jnp.einsum("iab,ijac->jbc", v_mine, c)      # [Tq', b, b]
+        w = jax.lax.psum(w_part, "data")                     # V^T C
+        y = jnp.einsum("ab,jbc->jac", t_mat.T, w)            # T^T W
+        corr = jnp.einsum("iab,jbc->ijac", v_mine, y)
+        cmask = (gj_l[None, lj0:] > k) & (gi_l[:, None] >= k)
+        tiles = tiles.at[:, lj0:].add(
+            jnp.where(cmask[..., None, None], -corr, 0.0))
+    return tiles
+
+
+_KERNELS = {
+    "cholesky": _cholesky_kernel,
+    "lu": _lu_kernel,
+    "qr": _qr_kernel,
+    "qr-cholqr2": functools.partial(_qr_kernel, panel="cholqr2"),
+}
+
+
+# ------------------------------------------------------------- public API
+
+def distributed_factorize(name: str, tiles_bc: jax.Array, mesh: Mesh):
+    """Factorize a block-cyclic-reordered tile array on a ("data","model")
+    mesh. tiles_bc: [T, T, b, b] (see to_block_cyclic). Returns the factor
+    tiles in the same block-cyclic order."""
+    pr, pc = (dict(zip(mesh.axis_names, mesh.devices.shape))["data"],
+              dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
+    t = tiles_bc.shape[0]
+    assert t % pr == 0 and t % pc == 0, (t, pr, pc)
+    kern = functools.partial(_KERNELS[name], t=t, pr=pr, pc=pc)
+    spec = P("data", "model", None, None)
+    fn = jax.shard_map(kern, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    return fn(tiles_bc)
+
+
+def factorize(name: str, a: jax.Array, tile: int, mesh: Mesh) -> jax.Array:
+    """End-to-end: dense [N, N] -> factor [N, N] on the mesh.
+
+    cholesky -> lower L; lu -> packed L\\U (no pivoting); qr -> R (upper).
+    """
+    n = a.shape[0]
+    assert n % tile == 0
+    t = n // tile
+    tiles = a.reshape(t, tile, t, tile).transpose(0, 2, 1, 3)
+    grid = (dict(zip(mesh.axis_names, mesh.devices.shape))["data"],
+            dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
+    bc = to_block_cyclic(tiles, grid)
+    bc = jax.device_put(bc, NamedSharding(mesh, P("data", "model")))
+    out_bc = distributed_factorize(name, bc, mesh)
+    out = from_block_cyclic(out_bc, grid)
+    dense = out.transpose(0, 2, 1, 3).reshape(n, n)
+    if name == "cholesky":
+        return jnp.tril(dense)
+    if name.startswith("qr"):
+        return jnp.triu(dense)
+    return dense
+
+
+def dryrun_cell(name: str, n: int, tile: int, mesh: Mesh, dtype=jnp.float32):
+    """(fn, abstract args, shardings) for lowering on the production mesh."""
+    t = n // tile
+    kern = functools.partial(
+        _KERNELS[name], t=t,
+        pr=dict(zip(mesh.axis_names, mesh.devices.shape))["data"],
+        pc=dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
+    spec = P("data", "model", None, None)
+    fn = jax.shard_map(kern, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    abstract = jax.ShapeDtypeStruct((t, t, tile, tile), dtype)
+    shard = NamedSharding(mesh, spec)
+    return fn, (abstract,), (shard,), shard

@@ -1,0 +1,126 @@
+"""Tile-task factorizations that execute core/dag.py graphs 1:1.
+
+A `TiledMatrix` stores the matrix as a [T, T, b, b] array of tiles. The
+tiled factorizations run exactly the task kinds the energy DAG schedules
+(POTRF/TRSM/SYRK/GEMM etc.), through the kernels.ops dispatch layer (Pallas
+on TPU, pure jnp on CPU) -- so the thing the energy scheduler reasons about
+is the thing that actually runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass
+class TiledMatrix:
+    tiles: jnp.ndarray          # [T, T, b, b]
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def tile_size(self) -> int:
+        return self.tiles.shape[2]
+
+
+def dense_to_tiles(a, tile: int) -> TiledMatrix:
+    n = a.shape[0]
+    assert n % tile == 0
+    t = n // tile
+    tiles = a.reshape(t, tile, t, tile).transpose(0, 2, 1, 3)
+    return TiledMatrix(tiles)
+
+
+def tiles_to_dense(tm: TiledMatrix):
+    t, _, b, _ = tm.tiles.shape
+    return tm.tiles.transpose(0, 2, 1, 3).reshape(t * b, t * b)
+
+
+def tiled_cholesky(tm: TiledMatrix) -> TiledMatrix:
+    """Right-looking tiled Cholesky; mirrors build_cholesky_dag task order."""
+    t = tm.n_tiles
+    tiles = tm.tiles
+    for k in range(t):
+        lkk = ops.potrf(tiles[k, k])                       # POTRF(k)
+        tiles = tiles.at[k, k].set(lkk)
+        for i in range(k + 1, t):                          # TRSM(i, k)
+            tiles = tiles.at[i, k].set(ops.trsm(lkk, tiles[i, k]))
+        for i in range(k + 1, t):
+            tiles = tiles.at[i, i].set(                    # SYRK(i, k)
+                ops.syrk(tiles[i, k], tiles[i, i]))
+            for j in range(k + 1, i):                      # GEMM(i, j, k)
+                tiles = tiles.at[i, j].set(
+                    ops.gemm(tiles[i, k], tiles[j, k].T,
+                             tiles[i, j], alpha=-1.0))
+    # zero strict upper tiles, lower-triangularize diagonal tiles
+    for i in range(t):
+        tiles = tiles.at[i, i].set(jnp.tril(tiles[i, i]))
+        for j in range(i + 1, t):
+            tiles = tiles.at[i, j].set(jnp.zeros_like(tiles[i, j]))
+    return TiledMatrix(tiles)
+
+
+def tiled_lu(tm: TiledMatrix) -> TiledMatrix:
+    """Right-looking tiled LU (no pivoting), packed LU tiles."""
+    t = tm.n_tiles
+    tiles = tm.tiles
+    b = tm.tile_size
+    eye = jnp.eye(b, dtype=tiles.dtype)
+    for k in range(t):
+        lu_kk = ops.getrf(tiles[k, k])                     # GETRF(k)
+        tiles = tiles.at[k, k].set(lu_kk)
+        l_kk = jnp.tril(lu_kk, -1) + eye
+        u_kk = jnp.triu(lu_kk)
+        for j in range(k + 1, t):                          # TRSM_ROW(k, j)
+            tiles = tiles.at[k, j].set(
+                ref.trsm_ref(l_kk, tiles[k, j], side="left", trans=False,
+                             unit_diag=True))
+        for i in range(k + 1, t):                          # TRSM_COL(i, k)
+            tiles = tiles.at[i, k].set(
+                ref.trsm_upper_right_ref(u_kk, tiles[i, k]))
+        for i in range(k + 1, t):
+            for j in range(k + 1, t):                      # GEMM(i, j, k)
+                tiles = tiles.at[i, j].set(
+                    ops.gemm(tiles[i, k], tiles[k, j],
+                             tiles[i, j], alpha=-1.0))
+    return TiledMatrix(tiles)
+
+
+def tiled_qr(tm: TiledMatrix) -> TiledMatrix:
+    """Tiled Householder QR with flat reduction tree (returns R tiles).
+
+    GEQRT/UNMQR factor+apply the diagonal tile's reflectors; TSQRT/SSRFB
+    couple each sub-diagonal tile with the running R. Only R is kept
+    (Q is validated via R^T R == A^T A in tests, the standard identity).
+    """
+    t = tm.n_tiles
+    tiles = tm.tiles
+    b = tm.tile_size
+    for k in range(t):
+        v, tt, rkk = ops.geqrt(tiles[k, k])                # GEQRT(k)
+        tiles = tiles.at[k, k].set(rkk)
+        for j in range(k + 1, t):                          # UNMQR(k, j)
+            tiles = tiles.at[k, j].set(
+                ops.apply_reflector(v, tt, tiles[k, j]))
+        for i in range(k + 1, t):                          # TSQRT(i, k)
+            stacked = jnp.concatenate([tiles[k, k], tiles[i, k]], axis=0)
+            v2, t2, r2 = ops.geqrt(stacked)
+            tiles = tiles.at[k, k].set(r2)
+            tiles = tiles.at[i, k].set(jnp.zeros_like(tiles[i, k]))
+            for j in range(k + 1, t):                      # SSRFB(i, j, k)
+                c = jnp.concatenate([tiles[k, j], tiles[i, j]], axis=0)
+                c = ops.apply_reflector(v2, t2, c)
+                tiles = tiles.at[k, j].set(c[:b])
+                tiles = tiles.at[i, j].set(c[b:])
+    # R: zero everything below the diagonal tiles
+    for i in range(t):
+        tiles = tiles.at[i, i].set(jnp.triu(tiles[i, i]))
+        for j in range(i):
+            tiles = tiles.at[i, j].set(jnp.zeros_like(tiles[i, j]))
+    return TiledMatrix(tiles)

@@ -1,0 +1,50 @@
+"""Unified model API: family dispatch between the decoder-only LM and the
+encoder-decoder (whisper) backbones."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from . import encdec, lm
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    param_tree: Callable          # (mode, key=None) -> params
+    loss_fn: Callable             # (params, batch) -> scalar
+    prefill: Callable             # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable         # (params, token, cache, pos) -> (logits, cache)
+    init_cache: Callable          # (batch, max_len, mode) -> cache
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encdec:
+        return ModelApi(
+            cfg=cfg,
+            param_tree=lambda mode, key=None: encdec.param_tree(cfg, mode, key),
+            loss_fn=lambda params, batch: encdec.loss_fn(params, batch, cfg),
+            prefill=lambda params, batch, cache: encdec.prefill(
+                params, batch["tokens"], batch["audio_embeds"], cfg, cache),
+            decode_step=lambda params, token, cache, pos: encdec.decode_step(
+                params, token, cache, pos, cfg),
+            init_cache=lambda batch, max_len, mode="init": encdec.init_cache(
+                cfg, batch, max_len, mode),
+        )
+    return ModelApi(
+        cfg=cfg,
+        param_tree=lambda mode, key=None: lm.param_tree(cfg, mode, key),
+        loss_fn=lambda params, batch: lm.loss_fn(params, batch, cfg),
+        prefill=lambda params, batch, cache: lm.prefill(
+            params, batch["tokens"], cfg, cache,
+            vision_embeds=batch.get("vision_embeds")),
+        decode_step=lambda params, token, cache, pos: lm.decode_step(
+            params, token, cache, pos, cfg),
+        init_cache=lambda batch, max_len, mode="init": lm.init_cache(
+            cfg, batch, max_len, mode),
+    )
+
+
+__all__ = ["ModelApi", "ModelConfig", "get_model", "lm", "encdec"]

@@ -1,0 +1,144 @@
+"""Model configuration shared by every assigned architecture."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | audio | hybrid | ssm | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                     # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- attention features ---
+    qkv_bias: bool = False           # qwen2.5
+    attn_softcap: float | None = None     # gemma2
+    final_softcap: float | None = None    # gemma2
+    window: int | None = None        # sliding-window size for "local" layers
+    rope_theta: float = 10_000.0
+    # per-layer kinds, cycled: "global" | "local" | "recurrent" | "ssd"
+    layer_pattern: tuple[str, ...] = ("global",)
+
+    # --- MLP ---
+    activation: str = "swiglu"       # swiglu | geglu | gelu | relu2
+    mlp_bias: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 4096       # tokens per dispatch group
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+
+    # --- RG-LRU (recurrentgemma) ---
+    lru_width: int = 0
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    frontend: str | None = None      # "audio" | "vision" (stub embeddings)
+    frontend_len: int = 0            # stub sequence length
+
+    # --- norms / embedding ---
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    post_norm: bool = False          # gemma2 sandwich norms
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma: x *= sqrt(d)
+
+    # --- numerics / compile strategy ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+
+    # ---------------------------------------------------------------- utils
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.pattern_period
+
+    @property
+    def n_tail_layers(self) -> int:
+        return self.n_layers % self.pattern_period
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_kind(self, layer_idx: int) -> str:
+        return self.layer_pattern[layer_idx % self.pattern_period]
+
+    # parameter count (weights only), for 6ND model-flop accounting
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            if kind in ("global", "local"):
+                attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+                    + self.n_heads * hd * d
+            elif kind == "recurrent":
+                w = self.lru_width or d
+                attn = 2 * d * w + w * d + 3 * w   # in/out proj + gates
+            elif kind == "ssd":
+                inner = self.ssm_expand * d
+                attn = d * (2 * inner + 2 * self.ssm_state) + inner * d
+            else:
+                attn = 0
+            gated = self.activation in ("swiglu", "geglu")
+            ff_mult = 3 if gated else 2
+            if self.is_moe:
+                mlp = self.n_experts * ff_mult * d * f + d * self.n_experts
+            else:
+                mlp = ff_mult * d * f
+            if kind == "ssd":
+                mlp = 0                    # mamba blocks replace the MLP
+            total += attn + mlp
+        if self.encoder_layers:
+            # encoder stack: self-attn + mlp; decoder adds cross-attn
+            enc = self.encoder_layers * (
+                d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                + self.n_heads * hd * d + 2 * d * f)
+            cross = self.n_layers * (
+                d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                + self.n_heads * hd * d)
+            total += enc + cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        gated = self.activation in ("swiglu", "geglu")
+        ff_mult = 3 if gated else 2
+        dense_total = self.param_count()
+        moe_all = self.n_layers * self.n_experts * ff_mult * d * f
+        moe_active = self.n_layers * self.top_k * ff_mult * d * f
+        return int(dense_total - moe_all + moe_active)

@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub: the
+conv-downsampled frame embeddings arrive precomputed via input_specs, per
+the assignment). LayerNorm + GELU MLPs + learned positions, bidirectional
+encoder, causal decoder with cross-attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constraint as cst
+
+from . import layers as L
+from .config import ModelConfig
+from .params import ParamFactory
+
+
+def _xattn_params(pf: ParamFactory, cfg: ModelConfig,
+                  groups: tuple[int, ...]):
+    """Cross-attention: q from decoder, k/v from encoder output."""
+    return L.attention_params(pf, cfg, groups)
+
+
+def param_tree(cfg: ModelConfig, mode: str, key=None):
+    pf = ParamFactory(mode, key, dtype=jnp.dtype(cfg.dtype))
+    v, d = cfg.vocab_size, cfg.d_model
+    enc_g, dec_g = cfg.encoder_layers, cfg.n_layers
+    params = {
+        "embed": pf.param((v, d), ("wvocab", "wembed"), scale=0.02),
+        "enc_pos": pf.param((cfg.frontend_len, d), (None, "wembed"),
+                            scale=0.01),
+        "enc": {
+            "attn": L.attention_params(pf, cfg, (enc_g,)),
+            "norm1": L.norm_params(pf, cfg, (enc_g,)),
+            "mlp": L.mlp_params(pf, cfg, (enc_g,)),
+            "norm2": L.norm_params(pf, cfg, (enc_g,)),
+        },
+        "enc_final_norm": L.norm_params(pf, cfg, ()),
+        "dec": {
+            "self_attn": L.attention_params(pf, cfg, (dec_g,)),
+            "norm1": L.norm_params(pf, cfg, (dec_g,)),
+            "cross_attn": _xattn_params(pf, cfg, (dec_g,)),
+            "norm_x": L.norm_params(pf, cfg, (dec_g,)),
+            "mlp": L.mlp_params(pf, cfg, (dec_g,)),
+            "norm2": L.norm_params(pf, cfg, (dec_g,)),
+        },
+        "final_norm": L.norm_params(pf, cfg, ()),
+    }
+    return params
+
+
+def encode(params, audio_embeds, cfg: ModelConfig):
+    """audio_embeds: [B, frontend_len, D] (stub frontend output)."""
+    x = audio_embeds.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"]
+    x = cst(x, ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        y, _ = L.attention_block(lp["attn"], h, cfg, kind="global",
+                                 causal=False, use_rope=False)
+        x = x + y
+        h = L.apply_norm(lp["norm2"], x, cfg)
+        x = x + L.mlp_block(lp["mlp"], h, cfg)
+        return x, None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_, x, params["enc"])
+    return L.apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def _cross_attend(lp, x, enc_out, cfg, xkv=None):
+    """Cross-attention; xkv: precomputed (k, v) from the encoder output."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"]).transpose(0, 2, 1, 3)
+    if xkv is None:
+        k = jnp.einsum("bsd,dhe->bshe", enc_out, lp["wk"]).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,dhe->bshe", enc_out, lp["wv"]).transpose(0, 2, 1, 3)
+    else:
+        k, v = xkv
+    out = L.decode_attend(q, k, v, valid_len=k.shape[2], causal=False)
+    y = jnp.einsum("bshe,hed->bsd", out.transpose(0, 2, 1, 3), lp["wo"])
+    return cst(y, ("batch", "seq", "embed")), (k, v)
+
+
+def _decoder_block(lp, x, enc_out, cfg, cache=None, pos=None, xkv=None):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    y, new_kv = L.attention_block(lp["self_attn"], h, cfg, kind="global",
+                                  cache=cache, pos=pos, use_rope=True)
+    x = x + y
+    h = L.apply_norm(lp["norm_x"], x, cfg)
+    y, xkv_out = _cross_attend(lp["cross_attn"], h, enc_out, cfg, xkv=xkv)
+    x = x + y
+    h = L.apply_norm(lp["norm2"], x, cfg)
+    x = x + L.mlp_block(lp["mlp"], h, cfg)
+    return cst(x, ("batch", "seq", "embed")), new_kv, xkv_out
+
+
+def hidden_states(params, tokens, audio_embeds, cfg: ModelConfig):
+    """Teacher-forcing decoder hidden states (training)."""
+    enc_out = encode(params, audio_embeds, cfg)
+    x = params["embed"][tokens]
+    x = cst(x, ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        x, _, _ = _decoder_block(lp, x, enc_out, cfg)
+        return x, None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_, x, params["dec"])
+    return L.apply_norm(params["final_norm"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, loss_chunk: int = 512,
+            z_loss: float = 1e-4):
+    h, _ = hidden_states(params, batch["tokens"], batch["audio_embeds"], cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    w = params["embed"]
+    b, s, d = h.shape
+    c = min(loss_chunk, s)
+    hc = h.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, s // c, c).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx, mx = args
+        logits = jnp.einsum("bcd,vd->bcv", hx, w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], -1)[..., 0]
+        return ((lse - gold + z_loss * lse**2) * mx).sum(), mx.sum()
+
+    sums, cnts = jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc, mc))
+    return sums.sum() / jnp.maximum(cnts.sum(), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               mode: str = "init"):
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    gl = cfg.n_layers
+
+    def mk(shape, dtype, axes):
+        if mode == "axes":
+            return axes
+        if mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    self_ax = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+    cross_ax = ("layers", "batch", "kv_heads", None, "head_dim")
+    return {
+        "self": {"k": mk((gl, batch, cfg.n_kv_heads, max_len, hd), dt,
+                         self_ax),
+                 "v": mk((gl, batch, cfg.n_kv_heads, max_len, hd), dt,
+                         self_ax)},
+        "cross": {"k": mk((gl, batch, cfg.n_kv_heads, cfg.frontend_len, hd),
+                          dt, cross_ax),
+                  "v": mk((gl, batch, cfg.n_kv_heads, cfg.frontend_len, hd),
+                          dt, cross_ax)},
+    }
+
+
+def prefill(params, tokens, audio_embeds, cfg: ModelConfig, cache):
+    """Encoder + teacher-forced decoder prefill; fills self/cross caches."""
+    enc_out = encode(params, audio_embeds, cfg)
+    x = params["embed"][tokens]
+
+    def body(x, xs):
+        lp, sc = xs
+        xn, new_kv, xkv = _decoder_block(lp, x, enc_out, cfg, cache=sc)
+        return xn, (new_kv, {"k": xkv[0], "v": xkv[1]})
+
+    x, (new_self, new_cross) = jax.lax.scan(
+        body, x, (params["dec"], cache["self"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"])
+    return logits, {"self": new_self, "cross": new_cross}
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig):
+    x = params["embed"][token]                  # [B, 1, D]
+
+    def body(x, xs):
+        lp, sc, cc = xs
+        xn, new_kv, _ = _decoder_block(lp, x, None, cfg, cache=sc, pos=pos,
+                                       xkv=(cc["k"], cc["v"]))
+        return xn, new_kv
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec"], cache["self"], cache["cross"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"])
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,609 @@
+"""Layer primitives for every assigned architecture family.
+
+Pure functions over explicit parameter pytrees (no module framework).
+Activation/weight sharding is annotated with logical axes through
+repro.sharding.constraint (no-ops outside a sharding context).
+
+Conventions:
+    x            [B, S, D] activations, compute dtype = params dtype
+    numerics     softmax/norms/recurrences in float32
+    caches       dicts of arrays; "global" attn: linear cache [B,Hkv,Smax,hd],
+                 "local" attn: ring cache [B,Hkv,W,hd], recurrent/ssd: states
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sharding import constraint as cst
+from repro.sharding.rules import (column_parallel_ag, row_parallel_rs,
+                                  rule_is_model, sp_gather_seq)
+
+from .config import ModelConfig
+from .params import ParamFactory
+
+# =========================================================== small pieces
+
+def rms_norm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_params(pf: ParamFactory, cfg: ModelConfig, groups: tuple[int, ...]):
+    lead = tuple(groups)
+    lax_ = ("layers",) * len(groups)
+    p = {"scale": pf.param(lead + (cfg.d_model,), lax_ + (None,),
+                           init="zeros" if cfg.norm == "rmsnorm" else "ones")}
+    if cfg.norm == "layernorm":
+        p["bias"] = pf.param(lead + (cfg.d_model,), lax_ + (None,),
+                             init="zeros")
+    return p
+
+
+def rope(x, positions, theta):
+    """x: [B, S, H, hd]; positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None]
+        ang = ang[:, :, None, :]                       # [1, S, 1, half]
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None]
+        ang = ang[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+# ============================================================== attention
+
+def attention_params(pf: ParamFactory, cfg: ModelConfig,
+                     groups: tuple[int, ...]):
+    d, hq, hkv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+    g = tuple(groups)
+    gl = ("layers",) * len(groups)
+    p = {
+        "wq": pf.param(g + (d, hq, hd), gl + ("wembed", "wheads", "whead_dim")),
+        "wk": pf.param(g + (d, hkv, hd), gl + ("wembed", "wkv", "whead_dim")),
+        "wv": pf.param(g + (d, hkv, hd), gl + ("wembed", "wkv", "whead_dim")),
+        "wo": pf.param(g + (hq, hd, d), gl + ("wheads", "whead_dim", "wembed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pf.param(g + (hq, hd), gl + ("wheads", "whead_dim"),
+                           init="zeros")
+        p["bk"] = pf.param(g + (hkv, hd), gl + ("wkv", "whead_dim"),
+                           init="zeros")
+        p["bv"] = pf.param(g + (hkv, hd), gl + ("wkv", "whead_dim"),
+                           init="zeros")
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, *, use_rope=True):
+    # SP: one seq all-gather feeds the projections inside a single
+    # shard_map; the dgrad partials reduce-scatter through its transpose.
+    # Projections whose head count doesn't TP-shard (GQA kv on a wide TP
+    # axis) take the plain einsum against the gathered stream instead.
+    if rule_is_model("heads") and rule_is_model("kv_heads"):
+        q, k, v = column_parallel_ag(
+            x, [p["wq"], p["wk"], p["wv"]], ["bsd,dhe->bshe"] * 3, "heads")
+    elif rule_is_model("heads"):
+        (q,) = column_parallel_ag(x, [p["wq"]], ["bsd,dhe->bshe"], "heads")
+        xg = sp_gather_seq(x)
+        k = jnp.einsum("bsd,dhe->bshe", xg, p["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", xg, p["wv"])
+    else:
+        xg = sp_gather_seq(x)
+        q = jnp.einsum("bsd,dhe->bshe", xg, p["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", xg, p["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", xg, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = cst(q, ("batch", "seq", "heads", "head_dim"))
+    k = cst(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = cst(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _out_proj(p, attn_out):
+    # attn_out: [B, S, Hq, hd]; the head-contracted partial sums land
+    # reduce-scattered (explicit shard_map psum_scatter, bf16) onto the
+    # sequence-sharded residual stream when SP is on, else all-reduced.
+    return row_parallel_rs(attn_out, p["wo"], "bshe,hed->bsd", "heads")
+
+
+def attention_block(p, x, cfg: ModelConfig, *, kind: str, causal: bool = True,
+                    cache=None, pos=None, positions=None, use_rope=True):
+    """Full/local attention; returns (y, new_cache)."""
+    b, s, _ = x.shape
+    window = cfg.window if kind == "local" else None
+    if positions is None:
+        if pos is None:
+            positions = jnp.arange(s)
+        else:
+            positions = pos + jnp.arange(s)              # decode: scalar pos
+    q, k, v = _qkv(p, x, cfg, positions, use_rope=use_rope)
+    qh = q.transpose(0, 2, 1, 3)                          # [B, H, S, hd]
+
+    if cache is None:
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        kh = cst(kh, ("batch", "kv_heads", "kv_seq", "head_dim"))
+        vh = cst(vh, ("batch", "kv_heads", "kv_seq", "head_dim"))
+        out = ops.flash_attention(qh, kh, vh, causal=causal, window=window,
+                                  softcap=cfg.attn_softcap)
+        return _out_proj(p, out.transpose(0, 2, 1, 3)), None
+
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if kind == "local":
+        new_cache, out = _local_cached_attention(
+            qh, kh, vh, cache, pos, s, cfg)
+    else:
+        new_cache, out = _global_cached_attention(
+            qh, kh, vh, cache, pos, s, cfg, causal)
+    return _out_proj(p, out.transpose(0, 2, 1, 3)), new_cache
+
+
+def _global_cached_attention(qh, kh, vh, cache, pos, s, cfg, causal):
+    """Linear cache [B, Hkv, Smax, hd]; prefill writes [0:s), decode at pos."""
+    if pos is None:                                       # prefill
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], kh.astype(cache["k"].dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], vh.astype(cache["v"].dtype), (0, 0, 0, 0))
+        valid = jnp.asarray(s, jnp.int32)
+    else:                                                 # decode (s tokens)
+        z = jnp.zeros((), jnp.int32)
+        p32 = jnp.asarray(pos, jnp.int32)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], kh.astype(cache["k"].dtype), (z, z, p32, z))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], vh.astype(cache["v"].dtype), (z, z, p32, z))
+        valid = pos + s
+    kc = cst(kc, ("batch", "kv_heads", "kv_seq", "head_dim"))
+    vc = cst(vc, ("batch", "kv_heads", "kv_seq", "head_dim"))
+    out = decode_attend(qh, kc, vc, valid_len=valid, causal=causal,
+                        softcap=cfg.attn_softcap)
+    return {"k": kc, "v": vc}, out
+
+
+def _local_cached_attention(qh, kh, vh, cache, pos, s, cfg):
+    """Ring cache [B, Hkv, W, hd]: slot(p) = p mod W."""
+    w = cache["k"].shape[2]
+    if pos is None:                                       # prefill
+        # write the last min(s, w) positions into their ring slots
+        slots = jnp.arange(w)
+        p_i = (s - 1) - ((s - 1 - slots) % w)             # abs pos per slot
+        valid = p_i >= 0
+        src = jnp.clip(p_i, 0, s - 1)
+        kc = jnp.where(valid[None, None, :, None], kh[:, :, src, :], 0.0)
+        vc = jnp.where(valid[None, None, :, None], vh[:, :, src, :], 0.0)
+        kc = kc.astype(cache["k"].dtype)
+        vc = vc.astype(cache["v"].dtype)
+        # attention itself: full-seq local flash
+        out = ops.flash_attention(qh, kh, vh, causal=True, window=cfg.window,
+                                  softcap=cfg.attn_softcap)
+        return {"k": kc, "v": vc}, out
+    # decode: write token at slot pos % w
+    slot = jnp.asarray(pos % w, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    kc = jax.lax.dynamic_update_slice(cache["k"],
+                                      kh.astype(cache["k"].dtype),
+                                      (z, z, slot, z))
+    vc = jax.lax.dynamic_update_slice(cache["v"],
+                                      vh.astype(cache["v"].dtype),
+                                      (z, z, slot, z))
+    slots = jnp.arange(w)
+    p_i = pos - ((pos - slots) % w)                       # abs pos per slot
+    mask = (p_i >= 0) & (p_i <= pos) & (p_i > pos - cfg.window)
+    out = _masked_single_attend(qh, kc, vc, mask, cfg.attn_softcap)
+    return {"k": kc, "v": vc}, out
+
+
+def decode_attend(qh, kc, vc, *, valid_len, causal=True, softcap=None):
+    """Attention of [B,H,s,hd] queries against a length-masked cache.
+
+    Queries sit at absolute positions valid_len-s .. valid_len-1.
+    """
+    s = qh.shape[2]
+    skv = kc.shape[2]
+    kpos = jnp.arange(skv)[None, :]
+    qpos = (valid_len - s) + jnp.arange(s)[:, None]
+    mask = kpos < valid_len
+    if causal:
+        mask = mask & (kpos <= qpos)
+    else:
+        mask = jnp.broadcast_to(mask, (s, skv))
+    return _masked_attend(qh, kc, vc, mask, softcap)
+
+
+def _masked_attend(qh, kc, vc, mask, softcap):
+    """mask: [s, skv] (shared over batch/heads)."""
+    b, hq, s, hd = qh.shape
+    hkv = kc.shape[1]
+    group = hq // hkv
+    qg = qh.reshape(b, hkv, group, s, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhkd->bhgsk", qg,
+                        kc.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgsk,bhkd->bhgsd", probs, vc.astype(jnp.float32))
+    return out.reshape(b, hq, s, hd).astype(qh.dtype)
+
+
+def _masked_single_attend(qh, kc, vc, mask_1d, softcap):
+    return _masked_attend(qh, kc, vc, mask_1d[None, :], softcap)
+
+
+# ==================================================================== MLP
+
+def mlp_params(pf: ParamFactory, cfg: ModelConfig, groups: tuple[int, ...]):
+    d, f = cfg.d_model, cfg.d_ff
+    g = tuple(groups)
+    gl = ("layers",) * len(groups)
+    gated = cfg.activation in ("swiglu", "geglu")
+    p = {"w1": pf.param(g + (d, f), gl + ("wembed", "wff")),
+         "w2": pf.param(g + (f, d), gl + ("wff", "wembed"))}
+    if gated:
+        p["w3"] = pf.param(g + (d, f), gl + ("wembed", "wff"))
+    if cfg.mlp_bias:
+        p["b1"] = pf.param(g + (f,), gl + ("wff",), init="zeros")
+        p["b2"] = pf.param(g + (d,), gl + (None,), init="zeros")
+    return p
+
+
+def _act(h, kind: str):
+    if kind in ("swiglu",):
+        return jax.nn.silu(h)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(h)
+    if kind == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_block(p, x, cfg: ModelConfig):
+    # SP: one seq all-gather feeds w1 (and w3) inside a single shard_map
+    # (Megatron-SP column side); w2 reduce-scatters back onto the
+    # sequence-sharded residual stream (row side).
+    gated = cfg.activation in ("swiglu", "geglu")
+    ws = [p["w1"], p["w3"]] if gated else [p["w1"]]
+    outs = column_parallel_ag(x, ws, ["bsd,df->bsf"] * len(ws), "act_ff")
+    h = outs[0]
+    if cfg.mlp_bias:
+        h = h + p["b1"]
+    h = cst(h, ("batch", "seq", "act_ff"))
+    h = _act(h, cfg.activation)
+    if gated:
+        h = h * outs[1]
+    y = row_parallel_rs(h, p["w2"], "bsf,fd->bsd", "act_ff")
+    if cfg.mlp_bias:
+        y = y + p["b2"]
+    return cst(y, ("batch", "res_seq", "embed"))
+
+
+# ==================================================================== MoE
+
+def moe_params(pf: ParamFactory, cfg: ModelConfig, groups: tuple[int, ...]):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    g = tuple(groups)
+    gl = ("layers",) * len(groups)
+    p = {"router": pf.param(g + (d, e), gl + ("wembed", "wexperts")),
+         "w1": pf.param(g + (e, d, f), gl + ("wexperts", "wembed",
+                                             "wexpert_ff")),
+         "w2": pf.param(g + (e, f, d), gl + ("wexperts", "wexpert_ff",
+                                             "wembed"))}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w3"] = pf.param(g + (e, d, f), gl + ("wexperts", "wembed",
+                                                "wexpert_ff"))
+    return p
+
+
+def moe_block(p, x, cfg: ModelConfig):
+    """GShard-style capacity dispatch, scanned over token groups.
+
+    Returns (y, aux_loss). Dispatch tensors live one group at a time
+    ([gs, E, C] bf16), so memory stays flat however long the sequence is.
+    """
+    b, s, d = x.shape
+    t = b * s
+    gs = min(cfg.moe_group_size, t)
+    assert t % gs == 0, (t, gs)
+    n_groups = t // gs
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(math.ceil(gs * k / e * cfg.capacity_factor)), 1)
+
+    xt = x.reshape(n_groups, gs, d)
+    xt = cst(xt, ("moe_groups", None, "embed"))
+
+    def one_group(xg):
+        gates = jnp.einsum("td,de->te", xg.astype(jnp.float32),
+                           p["router"].astype(jnp.float32))
+        probs = jax.nn.softmax(gates, axis=-1)
+        topw, topi = jax.lax.top_k(probs, k)
+        topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
+        # aux loss stats
+        me = probs.mean(axis=0)                                   # [E]
+        ce = jnp.zeros((e,)).at[topi.reshape(-1)].add(1.0) / (gs * k)
+        aux = e * jnp.sum(me * ce)
+
+        dispatch = jnp.zeros((gs, e, cap), jnp.bfloat16)
+        combine = jnp.zeros((gs, e, cap), jnp.float32)
+        # fill per routing rank; capacity is claimed in token order
+        used = jnp.zeros((gs, e), jnp.float32)
+        for kk in range(k):
+            oh = jax.nn.one_hot(topi[:, kk], e, dtype=jnp.float32)  # [gs,E]
+            # slot index: tokens already queued for this expert (earlier
+            # tokens this rank + all earlier ranks)
+            prior = jnp.cumsum(oh, axis=0) - oh + used.sum(0)[None, :]
+            slot = prior.astype(jnp.int32)
+            keep = (oh > 0) & (slot < cap)
+            slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) \
+                * keep[..., None]                                 # [gs,E,C]
+            dispatch = dispatch + slot_oh.astype(jnp.bfloat16)
+            combine = combine + slot_oh * topw[:, kk][:, None, None]
+            used = used + oh * keep
+        # expert compute. When experts TP-shard (EP), xe/out are forced to
+        # the expert-sharded layout; when they don't (mixtral: 8 experts on
+        # a 16-wide axis -> TP inside each expert's d_ff), leave xe/out
+        # UNCONSTRAINED: the w2 contraction's partial sums then flow through
+        # the (linear) combine einsum and are reduced once on the [gs, d]
+        # output instead of on the ExCxd expert buffer -- E*C/gs ~ 2.5x
+        # fewer bytes per reduction (S-Perf iteration mixtral/1).
+        ep = rule_is_model("act_experts")
+        xe = jnp.einsum("tec,td->ecd", dispatch, xg.astype(jnp.bfloat16))
+        # non-EP: xe deliberately left UNCONSTRAINED -- pinning it
+        # replicated (to suppress the partitioner's token-contraction
+        # split) was tried and REFUTED: collective 90.9s -> 214.6s
+        # (EXPERIMENTS.md S-Perf mixtral/iter-3).
+        if ep:
+            xe = cst(xe, ("act_experts", None, "embed"))
+        h = jnp.einsum("ecd,edf->ecf", xe, p["w1"])
+        h = cst(h, ("act_experts", None, "act_ff"))
+        h = _act(h, cfg.activation)
+        if "w3" in p:
+            h = h * jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+        out = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+        if ep:
+            out = cst(out, ("act_experts", None, "embed"))
+        y = jnp.einsum("tec,ecd->td", combine.astype(jnp.bfloat16),
+                       out.astype(jnp.bfloat16))
+        return y.astype(x.dtype), aux
+
+    if n_groups == 1:
+        y, aux = one_group(xt[0])
+        return y.reshape(b, s, d), aux
+    # remat each dispatch group: the [gs, E, C] dispatch/combine tensors are
+    # recomputed in backward instead of being stored for every group (the
+    # config-wide remat policy applied at MoE granularity)
+    body = jax.checkpoint(one_group) if cfg.remat else one_group
+    ys, auxs = jax.lax.map(body, xt)
+    return ys.reshape(b, s, d), auxs.mean()
+
+
+# ================================================================= RG-LRU
+
+def rglru_params(pf: ParamFactory, cfg: ModelConfig, groups: tuple[int, ...]):
+    d, w = cfg.d_model, cfg.lru_width
+    g = tuple(groups)
+    gl = ("layers",) * len(groups)
+    cw = cfg.conv_width
+    return {
+        "w_gate": pf.param(g + (d, w), gl + ("wembed", "wlru")),
+        "w_in": pf.param(g + (d, w), gl + ("wembed", "wlru")),
+        "w_out": pf.param(g + (w, d), gl + ("wlru", "wembed")),
+        "conv": pf.param(g + (cw, w), gl + (None, "wlru"), scale=0.5),
+        "w_r": pf.param(g + (w, w), gl + ("wlru", None)),
+        "w_i": pf.param(g + (w, w), gl + ("wlru", None)),
+        "b_r": pf.param(g + (w,), gl + ("wlru",), init="zeros"),
+        "b_i": pf.param(g + (w,), gl + ("wlru",), init="zeros"),
+        "lam": pf.param(g + (w,), gl + ("wlru",), init="lru_a",
+                        dtype=jnp.float32),
+    }
+
+
+def _causal_conv(u, w_conv, cache):
+    """Depthwise causal conv, width cw. cache: [B, cw-1, W] trailing inputs."""
+    cw = w_conv.shape[0]
+    if cache is None:
+        pads = [jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :u.shape[1]]
+                for i in range(cw)]
+        out = sum(w_conv[cw - 1 - i] * pads[i] for i in range(cw))
+        new_cache = None
+    else:
+        ext = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
+        out = sum(w_conv[cw - 1 - i] *
+                  jax.lax.dynamic_slice_in_dim(
+                      ext, ext.shape[1] - u.shape[1] - i, u.shape[1], 1)
+                  for i in range(cw))
+        new_cache = ext[:, -(cw - 1):].astype(cache.dtype)
+    return out, new_cache
+
+
+def rglru_block(p, x, cfg: ModelConfig, cache=None):
+    """Griffin recurrent block: conv1d -> RG-LRU -> gated output.
+
+    cache: {"h": [B, W] f32, "conv": [B, cw-1, W]} or None (training).
+    """
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    u = cst(u, ("batch", "seq", "act_lru"))
+    u, conv_cache = _causal_conv(u, p["conv"],
+                                 None if cache is None else cache["conv"])
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf,
+                                  p["w_r"].astype(jnp.float32)) + p["b_r"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf,
+                                  p["w_i"].astype(jnp.float32)) + p["b_i"])
+    c = 8.0
+    log_a = -c * jax.nn.softplus(p["lam"]) * r            # [B, S, W] f32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gx = mult * i * uf
+
+    if cache is None:
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+        _, h = jax.lax.associative_scan(comb, (a, gx), axis=1)
+        new_cache = None
+    else:
+        h0 = cache["h"]                                    # [B, W] f32
+        def step(hprev, xs):
+            at, gt = xs
+            hnew = at * hprev + gt
+            return hnew, hnew
+        hT, h = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                        gx.transpose(1, 0, 2)))
+        h = h.transpose(1, 0, 2)
+        new_cache = {"h": hT, "conv": conv_cache}
+    y = jnp.einsum("bsw,wd->bsd", (h.astype(x.dtype) * gate), p["w_out"])
+    return cst(y, ("batch", "res_seq", "embed")), new_cache
+
+
+# ============================================================ Mamba-2 SSD
+
+def ssd_params(pf: ParamFactory, cfg: ModelConfig, groups: tuple[int, ...]):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = inner // cfg.ssm_head_dim
+    g = tuple(groups)
+    gl = ("layers",) * len(groups)
+    cw = cfg.conv_width
+    return {
+        "w_in": pf.param(g + (d, 2 * inner + 2 * n + h),
+                         gl + ("wembed", "wlru")),
+        "conv": pf.param(g + (cw, inner + 2 * n), gl + (None, None),
+                         scale=0.5),
+        "a_log": pf.param(g + (h,), gl + ("wssm_heads",), init="ssm_a",
+                          dtype=jnp.float32),
+        "dt_bias": pf.param(g + (h,), gl + ("wssm_heads",), init="ssm_dt",
+                            dtype=jnp.float32),
+        "d_skip": pf.param(g + (h,), gl + ("wssm_heads",), init="ones",
+                           dtype=jnp.float32),
+        "norm": pf.param(g + (inner,), gl + (None,), init="zeros"),
+        "w_out": pf.param(g + (inner, d), gl + ("wlru", "wembed")),
+    }
+
+
+def _segsum(a):
+    """a: [..., Q]; returns [..., Q, Q] with out[i,j] = sum_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_block(p, x, cfg: ModelConfig, cache=None, chunk: int = 128):
+    """Mamba-2 SSD block (state-space duality, chunked scan).
+
+    cache: {"state": [B, H, P, N] f32, "conv": [B, cw-1, inner+2N]} or None.
+    """
+    b, s, d = x.shape
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = inner // hd
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [inner, 2 * inner + 2 * n], axis=-1)
+    xbc, conv_cache = _causal_conv(
+        xbc, p["conv"], None if cache is None else cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [inner, inner + n], axis=-1)
+    xin = cst(xin, ("batch", "seq", "act_lru"))
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                        # [H]
+    da = dtf * a                                                    # [B,S,H]
+    xh = xin.reshape(b, s, nh, hd).astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)                                   # [B,S,N]
+    cf = cmat.astype(jnp.float32)
+
+    if cache is None:
+        qn = min(chunk, s)
+        assert s % qn == 0
+        nc = s // qn
+        xc = xh.reshape(b, nc, qn, nh, hd).transpose(1, 0, 2, 3, 4)
+        bc = bf.reshape(b, nc, qn, n).transpose(1, 0, 2, 3)
+        cc = cf.reshape(b, nc, qn, n).transpose(1, 0, 2, 3)
+        dac = da.reshape(b, nc, qn, nh).transpose(1, 0, 2, 3)
+        dtc = dtf.reshape(b, nc, qn, nh).transpose(1, 0, 2, 3)
+        state0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+
+        def chunk_step(state, xs):
+            xck, bck, cck, dack, dtck = xs              # [b,qn,...]
+            acum = jnp.cumsum(dack, axis=1)             # [b,qn,h]
+            l = jnp.exp(_segsum(dack.transpose(0, 2, 1)))   # [b,h,qn,qn]
+            scores = jnp.einsum("bqn,bkn->bqk", cck, bck)
+            y_intra = jnp.einsum("bhqk,bqk,bkh,bkhp->bqhp",
+                                 l, scores, dtck, xck)
+            decay_in = jnp.exp(acum)                    # [b,qn,h]
+            y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", cck, decay_in, state)
+            atot = acum[:, -1]                          # [b,h]
+            decay_out = jnp.exp(atot[:, None, :] - acum)   # [b,qn,h]
+            state_new = state * jnp.exp(atot)[:, :, None, None] + \
+                jnp.einsum("bkn,bkh,bkh,bkhp->bhpn",
+                           bck, decay_out, dtck, xck)
+            return state_new, y_intra + y_inter
+
+        _, ys = jax.lax.scan(chunk_step, state0, (xc, bc, cc, dac, dtc))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+        new_cache = None
+    else:
+        # sequential decode steps (s is small)
+        state0 = cache["state"]
+
+        def step(state, xs):
+            xt, bt, ct, dat, dtt = xs                   # [b,...] single step
+            state = state * jnp.exp(dat)[:, :, None, None] + \
+                jnp.einsum("bn,bh,bhp->bhpn", bt, dtt, xt)
+            yt = jnp.einsum("bn,bhpn->bhp", ct, state)
+            return state, yt
+
+        stateT, ys = jax.lax.scan(
+            step, state0,
+            (xh.transpose(1, 0, 2, 3), bf.transpose(1, 0, 2),
+             cf.transpose(1, 0, 2), da.transpose(1, 0, 2),
+             dtf.transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, nh, hd)
+        new_cache = {"state": stateT, "conv": conv_cache}
+
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return cst(out, ("batch", "res_seq", "embed")), new_cache

@@ -1,0 +1,72 @@
+"""Parameter tree construction in three modes from a single definition.
+
+    mode="init"      -> real arrays (smoke tests, the train example)
+    mode="abstract"  -> jax.ShapeDtypeStruct (dry-run: a 340B model is
+                        lowered without allocating a single weight byte)
+    mode="axes"      -> logical-axis tuples, resolved to PartitionSpecs by
+                        sharding.rules (one definition, no drift between
+                        shapes and shardings)
+
+Weight logical axes (distinct from activation axes on purpose -- FSDP
+shards weight `wembed` over the data axis while activation `embed` stays
+unsharded):
+    wembed, wff, wheads, wkv, whead_dim, wvocab, wexperts, wstate, layers
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamFactory:
+    def __init__(self, mode: str, key: jax.Array | None = None,
+                 dtype=jnp.bfloat16):
+        assert mode in ("init", "abstract", "axes")
+        self.mode = mode
+        self._key = key
+        self.dtype = dtype
+
+    def _split(self) -> jax.Array:
+        assert self._key is not None, "init mode needs a PRNG key"
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, shape: tuple[int, ...], axes: tuple[str | None, ...],
+              init: str = "normal", scale: float | None = None, dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        dt = dtype or self.dtype
+        if self.mode == "axes":
+            return axes
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dt)
+        k = self._split()
+        if init == "zeros":
+            return jnp.zeros(shape, dt)
+        if init == "ones":
+            return jnp.ones(shape, dt)
+        if init == "normal":
+            if scale is None:
+                # fan-in scaling over the contracting (first non-layer) dim
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            return (jax.random.normal(k, shape, jnp.float32)
+                    * scale).astype(dt)
+        if init == "lru_a":
+            # RG-LRU Lambda init: a in (0.9, 0.999) -> softplus-inverse space
+            u = jax.random.uniform(k, shape, jnp.float32, 0.9, 0.999)
+            c = 8.0
+            # a = exp(-c * softplus(L)) => softplus(L) = -log(a)/c
+            sp = -jnp.log(u) / c
+            lam = jnp.log(jnp.expm1(sp))
+            return lam.astype(dt)
+        if init == "ssm_a":
+            # mamba2 A init: A = -exp(a_log), a ~ U[1, 16]
+            u = jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        if init == "ssm_dt":
+            # dt bias init so softplus(dt_bias) ~ U[1e-3, 1e-1]
+            u = jax.random.uniform(k, shape, jnp.float32, 1e-3, 1e-1)
+            return (u + jnp.log(-jnp.expm1(-u))).astype(dt)
+        raise ValueError(init)

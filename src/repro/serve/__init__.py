@@ -1,0 +1,4 @@
+from .engine import GenerationResult, generate, greedy_sample, temperature_sample
+
+__all__ = ["GenerationResult", "generate", "greedy_sample",
+           "temperature_sample"]

@@ -1,0 +1,55 @@
+"""Batched serving loop: prefill once, decode autoregressively with the
+model-family-appropriate cache (linear KV / ring KV / recurrent states)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+
+
+def greedy_sample(logits, key):
+    del key
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits, key, temperature: float = 0.8):
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array            # [B, n_new]
+    prefill_logits: jax.Array    # [B, V]
+
+
+def generate(api: ModelApi, params, batch: dict, n_new: int,
+             sampler=greedy_sample, seed: int = 0,
+             max_len: int | None = None) -> GenerationResult:
+    """batch: {"tokens": [B, S], (+ audio/vision embeds)}."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or (s + n_new)
+    cache = api.init_cache(b, max_len, "init")
+    logits, cache = api.prefill(params, batch, cache)
+    key = jax.random.key(seed)
+
+    # simple python loop (n_new is small in tests/examples); each step jits
+    out_tokens = []
+    key, sub = jax.random.split(key)
+    tok = sampler(logits, sub)[:, None]
+    out_tokens.append(tok)
+    pos = s
+    for i in range(n_new - 1):
+        logits_i, cache = api.decode_step(params, tok, cache,
+                                          jnp.asarray(pos + i, jnp.int32))
+        key, sub = jax.random.split(key)
+        tok = sampler(logits_i, sub)[:, None]
+        out_tokens.append(tok)
+    return GenerationResult(tokens=jnp.concatenate(out_tokens, axis=1),
+                            prefill_logits=logits)

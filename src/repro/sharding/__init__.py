@@ -1,0 +1,5 @@
+from .rules import (ShardingCtx, constraint, get_ctx, make_rules, set_ctx,
+                    spec_for, use_sharding)
+
+__all__ = ["ShardingCtx", "constraint", "get_ctx", "make_rules", "set_ctx",
+           "spec_for", "use_sharding"]

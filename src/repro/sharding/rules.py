@@ -1,0 +1,332 @@
+"""Adaptive logical-axis -> mesh-axis sharding rules (MaxText/t5x style).
+
+Logical names are split between activations (batch, seq, embed, heads,
+kv_heads, act_ff, act_vocab, act_experts, kv_seq, state) and weights
+(wembed, wff, wheads, wkv, whead_dim, wvocab, wexperts, wstate, layers) so
+FSDP can shard weight dims over the data axis without touching activations.
+
+`make_rules` adapts to each architecture: a logical axis maps to the
+"model" (tensor-parallel) mesh axis only when its size divides by the TP
+degree -- e.g. gemma2-2b's 8 query heads on a 16-wide TP axis fall back to
+replicated heads while its d_ff=9216 still tensor-shards. KV caches whose
+head count cannot shard get their *sequence* dim sharded instead during
+decode (flash-decoding style; GSPMD inserts the partial-softmax collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Rules = dict[str, tuple[str, ...] | str | None]
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Rules
+
+
+_CTX: ShardingCtx | None = None
+
+
+def set_ctx(ctx: ShardingCtx | None) -> None:
+    global _CTX
+    _CTX = ctx
+
+
+def get_ctx() -> ShardingCtx | None:
+    return _CTX
+
+
+@contextmanager
+def use_sharding(mesh: Mesh, rules: Rules):
+    prev = _CTX
+    set_ctx(ShardingCtx(mesh, rules))
+    try:
+        yield
+    finally:
+        set_ctx(prev)
+
+
+def spec_for(axes: tuple[str | None, ...], rules: Rules) -> PartitionSpec:
+    parts = []
+    used: set[str] = set()
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        # one mesh axis may appear at most once in a spec
+        if m is None:
+            parts.append(None)
+        elif isinstance(m, str):
+            parts.append(m if m not in used else None)
+            used.add(m)
+        else:
+            free = tuple(x for x in m if x not in used)
+            parts.append(free if free else None)
+            used.update(free)
+    return PartitionSpec(*parts)
+
+
+def constraint(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """Sharding constraint by logical axes; identity when no ctx is set
+    (CPU smoke tests) so model code stays mesh-agnostic."""
+    ctx = _CTX
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec_for(axes, ctx.rules)))
+
+
+def row_parallel_rs(h: jax.Array, w: jax.Array, subscripts: str,
+                    contract_axis: str, *, seq_dim: int = 1) -> jax.Array:
+    """Row-parallel matmul with an explicit reduce-scatter epilogue.
+
+    einsum(subscripts, h, w) where the contracted dim is sharded over the
+    "model" mesh axis (TP). Under sequence parallelism the per-rank partial
+    sums are reduce-scattered (bf16) directly onto the sequence-sharded
+    residual stream -- (G-1)/G bytes moved instead of the 2(G-1)/G of the
+    all-reduce the partitioner would otherwise emit, and no full-size f32
+    buffer materializes. Falls back to einsum + constraint when SP is off,
+    when there is no sharding ctx (CPU smoke tests), or when the contracted
+    dim does not shard (e.g. gemma2's 8 heads on a 16-wide TP axis).
+
+    h: [b, s, ...contract], w: [...contract, d] per `subscripts`.
+    The shard_map is partial-manual (axis_names={"model"}): batch/FSDP
+    sharding over the remaining mesh axes stays under GSPMD control.
+    """
+    ctx = _CTX
+    sp = (ctx is not None and ctx.rules.get("res_seq") == "model"
+          and ctx.rules.get(contract_axis) == "model")
+    if sp:
+        sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+        dp_axes = tuple(n for n in ctx.mesh.axis_names if n != "model")
+        dp = 1
+        for ax in dp_axes:
+            dp *= sizes[ax]
+        sp = (h.shape[seq_dim] % sizes.get("model", 1) == 0
+              and h.shape[0] % dp == 0)
+    if not sp:
+        y = jnp.einsum(subscripts, h, w)
+        return constraint(y, ("batch", "res_seq", "embed"))
+
+    # fully-manual shard_map: batch over the data axes, contract dim over
+    # "model"; w arrives TP-sharded on its leading dim but FSDP-gathered
+    # (the in_spec leaves its trailing dims unsharded, so GSPMD performs
+    # the per-layer FSDP all-gather outside, exactly as in the baseline).
+    h_spec = [None] * h.ndim
+    h_spec[0] = dp_axes
+    h_spec[-1 if h.ndim == 3 else 2] = "model"     # bsf / bshe: shard f / h
+    w_spec = ["model"] + [None] * (w.ndim - 1)
+    out_spec = [dp_axes, "model", None]            # [b, s/G, d]
+
+    # TPU: reduce-scatter the bf16 partials (half the f32 bytes). The CPU
+    # backend used for dry-runs crashes promoting a bf16 reduce-scatter
+    # (XLA AllReducePromotion bug), so scatter f32 there -- still (G-1)/G
+    # bytes vs the all-reduce's 2(G-1)/G; EXPERIMENTS.md S-Perf accounts
+    # the extra TPU-side 2x analytically.
+    scatter_dtype = h.dtype if jax.default_backend() == "tpu" \
+        else jnp.float32
+
+    def body(hl, wl):
+        y = jnp.einsum(subscripts, hl, wl,
+                       preferred_element_type=jnp.float32)
+        y = y.astype(scatter_dtype)
+        y = jax.lax.psum_scatter(y, "model", scatter_dimension=seq_dim,
+                                 tiled=True)
+        return y.astype(hl.dtype)
+
+    fn = jax.shard_map(body, mesh=ctx.mesh,
+                       in_specs=(PartitionSpec(*h_spec),
+                                 PartitionSpec(*w_spec)),
+                       out_specs=PartitionSpec(*out_spec))
+    return constraint(fn(h, w), ("batch", "res_seq", "embed"))
+
+
+def sp_active(x, seq_dim: int = 1) -> bool:
+    """True iff sequence parallelism applies to this activation here."""
+    ctx = _CTX
+    if ctx is None or ctx.rules.get("res_seq") != "model":
+        return False
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    dp = 1
+    for ax in ctx.mesh.axis_names:
+        if ax != "model":
+            dp *= sizes[ax]
+    return (x.ndim >= 2 and x.shape[seq_dim] % sizes.get("model", 1) == 0
+            and x.shape[0] % dp == 0)
+
+
+def sp_gather_seq(x: jax.Array, seq_dim: int = 1) -> jax.Array:
+    """All-gather the sequence-sharded residual stream over the TP axis.
+
+    The Megatron-SP column-parallel entry: forward is an all-gather along
+    seq; its TRANSPOSE is a psum_scatter, so the backward dgrad partial
+    sums are reduce-scattered back onto the sequence shards automatically.
+    No-op when SP is off. Comms run in bf16 on TPU; f32 on the CPU dry-run
+    backend (bf16 reduce-scatter crashes XLA CPU's AllReducePromotion).
+    """
+    if not sp_active(x, seq_dim):
+        return constraint(x, ("batch", "seq", "embed"))
+    ctx = _CTX
+    dp_axes = tuple(n for n in ctx.mesh.axis_names if n != "model")
+    comm_dtype = x.dtype if jax.default_backend() == "tpu" else jnp.float32
+
+    spec_in = [None] * x.ndim
+    spec_in[0] = dp_axes
+    spec_in[seq_dim] = "model"
+    spec_out = [None] * x.ndim
+    spec_out[0] = dp_axes
+
+    def body(xl):
+        y = jax.lax.all_gather(xl.astype(comm_dtype), "model",
+                               axis=seq_dim, tiled=True)
+        return y.astype(xl.dtype)
+
+    # check_vma=False: the tiled all_gather's output IS replicated over
+    # "model" but the varying-axes checker cannot infer that statically.
+    fn = jax.shard_map(body, mesh=ctx.mesh,
+                       in_specs=(PartitionSpec(*spec_in),),
+                       out_specs=PartitionSpec(*spec_out),
+                       check_vma=False)
+    return fn(constraint(x, ("batch", "res_seq", "embed")))
+
+
+def rule_is_model(axis_name: str) -> bool:
+    """True iff the current rules map this logical axis to the TP axis."""
+    return _CTX is not None and _CTX.rules.get(axis_name) == "model"
+
+
+def column_parallel_ag(x: jax.Array, ws: list[jax.Array],
+                       subscripts: list[str], contract_axis: str,
+                       seq_dim: int = 1) -> list[jax.Array]:
+    """Column-parallel matmuls fused with the SP sequence all-gather.
+
+    One shard_map: all-gather the sequence-sharded x over "model", apply
+    each einsum against its TP-sharded weight (outputs sharded on the
+    heads/ff dim). Because the matmuls live INSIDE the shard_map, the
+    backward dgrad partial sums flow directly into the all-gather's
+    transpose (psum_scatter) -- no full-size all-reduce materializes, the
+    Megatron-SP backward. Falls back to plain einsums when SP is off.
+
+    ws[i] must have its dim 1 sharded over "model" (wheads / wff layout).
+    """
+    if not sp_active(x, seq_dim) or not rule_is_model(contract_axis):
+        x = constraint(x, ("batch", "seq", "embed"))
+        return [jnp.einsum(s, x, w) for s, w in zip(subscripts, ws)]
+    ctx = _CTX
+    dp_axes = tuple(n for n in ctx.mesh.axis_names if n != "model")
+    comm_dtype = x.dtype if jax.default_backend() == "tpu" else jnp.float32
+
+    x_spec = [None] * x.ndim
+    x_spec[0] = dp_axes
+    x_spec[seq_dim] = "model"
+    w_specs = []
+    out_specs = []
+    for w in ws:
+        wsp = [None] * w.ndim
+        wsp[1] = "model"
+        w_specs.append(PartitionSpec(*wsp))
+        osp = [None] * (w.ndim + 1)   # bsd,d<shard>... -> bs<shard>...
+        osp[0] = dp_axes
+        osp[2] = "model"
+        out_specs.append(PartitionSpec(*osp))
+
+    def body(xl, *wls):
+        xf = jax.lax.all_gather(xl.astype(comm_dtype), "model",
+                                axis=seq_dim, tiled=True).astype(xl.dtype)
+        return tuple(jnp.einsum(s, xf, wl)
+                     for s, wl in zip(subscripts, wls))
+
+    fn = jax.shard_map(body, mesh=ctx.mesh,
+                       in_specs=(PartitionSpec(*x_spec), *w_specs),
+                       out_specs=tuple(out_specs), check_vma=False)
+    return list(fn(constraint(x, ("batch", "res_seq", "embed")), *ws))
+
+
+def make_rules(cfg, mesh: Mesh, *, workload: str = "train",
+               fsdp: bool = True, seq_len: int | None = None,
+               seq_parallel: bool = True) -> Rules:
+    """Build the logical->mesh mapping for one (architecture, mesh, workload).
+
+    workload: "train" | "prefill" | "decode".
+    seq_parallel: shard the residual stream's sequence dim over the TP axis
+    (Megatron-SP): converts the per-layer TP all-reduces into
+    reduce-scatter + all-gather pairs (half the bytes) and shards the
+    remat-saved layer-boundary activations TP-ways. train/prefill only.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axis_sizes.get("model", 1)
+    dp_axes = tuple(n for n in mesh.axis_names if n != "model")
+
+    def fits(n: int) -> bool:
+        return n > 0 and n % tp == 0
+
+    heads_ok = fits(cfg.n_heads)
+    kv_ok = fits(cfg.n_kv_heads)
+    ff_ok = fits(cfg.d_ff)
+    vocab_ok = fits(cfg.vocab_size)
+    experts_ok = fits(cfg.n_experts)
+    inner = cfg.ssm_expand * cfg.d_model
+    ssm_ok = cfg.ssm_state > 0 and fits(inner // max(cfg.ssm_head_dim, 1))
+    lru_ok = cfg.lru_width > 0 and fits(cfg.lru_width)
+
+    # SP measurably hurts the attention-free SSD chunk pipeline (mamba2
+    # train_4k memory term 13.2s -> 46.7s: the chunked scan's reshapes
+    # fight the seq sharding) -- keep it off for pure-SSM archs.
+    ssm_only = set(getattr(cfg, "layer_pattern", ())) == {"ssd"}
+    sp_ok = (seq_parallel and workload in ("train", "prefill")
+             and not ssm_only
+             and seq_len is not None and tp > 1 and seq_len % tp == 0)
+
+    rules: Rules = {
+        # activations
+        "batch": dp_axes,
+        "seq": None,
+        # residual-stream sequence dim (layer boundaries): Megatron-SP
+        "res_seq": "model" if sp_ok else None,
+        "embed": None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "head_dim": None,
+        "act_ff": "model" if ff_ok else None,
+        "act_vocab": "model" if vocab_ok else None,
+        "act_experts": "model" if experts_ok else None,
+        "act_state": None,
+        "act_lru": "model" if lru_ok else None,
+        "ssm_heads": "model" if ssm_ok else None,
+        "kv_seq": None,
+        # weights
+        "layers": None,
+        "wembed": dp_axes if fsdp else None,
+        "wff": "model" if ff_ok else None,
+        "wheads": "model" if heads_ok else None,
+        "wkv": "model" if kv_ok else None,
+        "whead_dim": None,
+        "wvocab": "model" if vocab_ok else None,
+        "wexperts": "model" if experts_ok else None,
+        "wexpert_ff": None if experts_ok else ("model" if ff_ok else None),
+        "wstate": None,
+        "wlru": "model" if lru_ok else None,
+        "wssm_heads": "model" if ssm_ok else None,
+    }
+
+    if workload in ("decode", "prefill") and not kv_ok and seq_len \
+            and fits(seq_len):
+        # flash-decoding style: shard the KV cache along sequence instead.
+        # prefill writes the cache seq-sharded (slice of the replicated
+        # k/v), decode reads it with the partial-softmax merge -- either
+        # way the resident cache drops TP-ways (stablelm/internvl2
+        # prefill_32k: 12.7 -> 1.6 GiB args; S-Dry-run memory table).
+        rules["kv_seq"] = "model"
+
+    if workload == "decode":
+        # decode batches are small; keep batch on data axes only (already)
+        pass
+
+    # MoE dispatch groups ride the batch axes
+    rules["moe_groups"] = dp_axes
+    return rules

@@ -1,0 +1,10 @@
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .data import SyntheticDataset
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import (TrainState, init_train_state, make_train_step,
+                         train_state_specs)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "SyntheticDataset",
+           "TrainState", "init_train_state", "make_train_step",
+           "train_state_specs", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

@@ -1,0 +1,115 @@
+"""Hand-rolled AdamW with dtype-configurable state (no optax dependency).
+
+Distributed-memory knobs (used by the big-arch dry-runs; see EXPERIMENTS.md
+S-Dry-run): `m_dtype`/`v_dtype` drop the moment buffers to bf16 and
+`master_dtype=None` trains pure-bf16 -- for nemotron-4-340b that is the
+difference between fitting one pod and not. The optimizer state is a plain
+pytree mirroring params, so ZeRO-style sharding falls out of the same FSDP
+partition specs as the weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+    master_dtype: str | None = "float32"   # None => update params in-place
+
+    def schedule(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / jnp.maximum(self.total_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        frac = self.min_lr_frac + (1.0 - self.min_lr_frac) * cos
+        return self.peak_lr * warm * frac
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    # NOTE: moments/master are materialized as *distinct* buffers (p * 0 and
+    # an explicit copy) -- jnp.zeros constants get deduplicated by the
+    # runtime and p.astype(p.dtype) aliases p, either of which makes a
+    # donated (params, opt_state) pair share buffers and breaks donation.
+    def zeros_like_distinct(p, dtype):
+        return (p * 0).astype(jnp.dtype(dtype))
+
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: zeros_like_distinct(p, cfg.m_dtype),
+                          params),
+        "v": jax.tree.map(lambda p: zeros_like_distinct(p, cfg.v_dtype),
+                          params),
+    }
+    if cfg.master_dtype is not None:
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.dtype(cfg.master_dtype),
+                                copy=True), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum((g.astype(jnp.float32) ** 2).sum()
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = cfg.schedule(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    ref = state.get("master", params)
+
+    def upd(p_ref, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = mf / b1c
+        vhat = vf / b2c
+        pf = p_ref.astype(jnp.float32)
+        step_vec = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf
+        pf = pf - lr * step_vec
+        return pf, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_ref, treedef = jax.tree.flatten(ref)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    outs = [upd(*args) for args in zip(flat_ref, flat_g, flat_m, flat_v)]
+    new_ref = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+
+    if cfg.master_dtype is not None:
+        new_state = {"step": step, "m": new_m, "v": new_v,
+                     "master": jax.tree.map(
+                         lambda p: p.astype(jnp.dtype(cfg.master_dtype)),
+                         new_ref)}
+        new_params = jax.tree.map(
+            lambda pf, p: pf.astype(p.dtype), new_ref, params)
+    else:
+        new_state = {"step": step, "m": new_m, "v": new_v}
+        new_params = jax.tree.map(
+            lambda pf, p: pf.astype(p.dtype), new_ref, params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

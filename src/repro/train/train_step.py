@@ -1,0 +1,84 @@
+"""Train step assembly: loss + grad + AdamW, with gradient accumulation
+(microbatching) and sharding-spec derivation for the full train state.
+
+`make_train_step` returns a pure function suitable for jax.jit with
+explicit in/out shardings (the dry-run path) or plain CPU execution (smoke
+tests / the quickstart example).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+from repro.sharding.rules import Rules, spec_for
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+def init_train_state(api: ModelApi, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = api.param_tree("init", key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def make_train_step(api: ModelApi, opt_cfg: AdamWConfig,
+                    n_microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(api.loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches,
+                                  x.shape[0] // n_microbatches) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss_sum, grad_sum), _ = jax.lax.scan(acc_fn, zero, micro)
+            loss = loss_sum / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grad_sum)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------- sharding specs
+def train_state_specs(api: ModelApi, opt_cfg: AdamWConfig, rules: Rules):
+    """PartitionSpecs for (params, opt_state): ZeRO -- optimizer moments and
+    master copies shard exactly like the FSDP weights."""
+    axes = api.param_tree("axes")
+    is_tuple = lambda x: isinstance(x, tuple)  # noqa: E731
+    pspec = jax.tree.map(lambda ax: spec_for(ax, rules), axes,
+                         is_leaf=is_tuple)
+    opt_spec = {"step": spec_for((), rules), "m": pspec, "v": pspec}
+    if opt_cfg.master_dtype is not None:
+        opt_spec["master"] = pspec
+    return pspec, opt_spec

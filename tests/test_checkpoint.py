@@ -1,0 +1,67 @@
+"""Fault-tolerant checkpointing: atomicity, GC, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (latest_step, latest_steps,
+                                    restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0, dtype=jnp.float32):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 8), dtype),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "opt": {"step": jnp.asarray(7, jnp.int32),
+                "m": {"w": jnp.ones((4, 8), dtype)}},
+    }
+
+
+def test_roundtrip_with_bf16(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 10, tree)
+    back = restore_checkpoint(str(tmp_path), 10, jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_gc_keeps_last_k(tmp_path):
+    tree = _tree()
+    for s in (10, 20, 30, 40, 50):
+        save_checkpoint(str(tmp_path), s, tree, keep=3)
+    assert latest_steps(str(tmp_path)) == [30, 40, 50]
+    assert latest_step(str(tmp_path)) == 50
+
+
+def test_no_tmp_residue_and_atomic_publish(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    names = os.listdir(tmp_path)
+    assert not [n for n in names if n.endswith(".tmp")]
+    # a truncated orphan .npz without manifest must be ignored
+    with open(tmp_path / "step_00000002.npz", "wb") as f:
+        f.write(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_restore_dtype_conversion(tmp_path):
+    """bf16 checkpoint restored into an f32 template (smoke-model reload)."""
+    tree = {"w": jnp.ones((3, 3), jnp.bfloat16) * 1.5}
+    save_checkpoint(str(tmp_path), 5, tree)
+    back = restore_checkpoint(
+        str(tmp_path), 5, {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+    assert back["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(back["w"]), 1.5)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 5, {"w": jnp.ones((3, 3))})
+    with pytest.raises(ValueError, match="checkpoint shape"):
+        restore_checkpoint(str(tmp_path), 5,
+                           {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)})

@@ -1,0 +1,172 @@
+"""Unit + property tests for the energy-saving core (the paper's contribution)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CostModel, GEAR_TABLES, StrategyConfig, build_dag,
+                        cp_analysis, duration_at, evaluate_strategies,
+                        factorization_flops, make_plan, make_processor,
+                        make_tpu_like, max_slack_ratio, plan_energy_j,
+                        schedule_slack, simulate, strategy_gap_terms,
+                        two_gear_split, verify_worked_example)
+
+PROC = make_processor("arc_opteron_6128")
+COST = CostModel()
+
+
+# ---------------------------------------------------------------- DAG layer
+@pytest.mark.parametrize("name", ["cholesky", "lu", "qr"])
+def test_dag_topological_and_flops(name):
+    g = build_dag(name, 8, 256, (2, 2))
+    for t in g.tasks:
+        assert all(d < t.tid for d in t.deps), "tasks must be emitted topo-sorted"
+    # tiled flop count matches the analytic factorization count to leading order
+    n = 8 * 256
+    analytic = factorization_flops(name, n)
+    ratio = g.total_flops() / analytic
+    assert 0.8 < ratio < 2.6, ratio  # QR tile algorithms carry ~2x overhead
+
+
+def test_block_cyclic_owner_coverage():
+    g = build_dag("cholesky", 12, 128, (3, 4))
+    owners = {t.owner for t in g.tasks}
+    assert owners == set(range(12))   # all ranks get work
+
+
+@pytest.mark.parametrize("name", ["cholesky", "lu", "qr"])
+def test_critical_path_lower_bounds_makespan(name):
+    g = build_dag(name, 6, 256, (2, 2))
+    durs = np.array([COST.duration_top(t.flops, t.kind, PROC) for t in g.tasks])
+    cp = cp_analysis(g, durs, COST.comm_time(g))
+    sched = simulate(g, PROC, COST, make_plan("original", g, PROC, COST))
+    assert cp.cp_length <= sched.makespan + 1e-12
+    assert np.all(cp.total_float >= -1e-12)
+    assert cp.on_cp.any()
+
+
+def test_schedule_slack_nonnegative_and_safe():
+    g = build_dag("cholesky", 8, 256, (2, 2))
+    sched = simulate(g, PROC, COST, make_plan("original", g, PROC, COST))
+    slack = schedule_slack(sched.start, sched.finish, g, COST.comm_time(g))
+    assert np.all(slack >= 0.0)
+    # stretching every task into its local slack must not delay the makespan
+    res = evaluate_strategies(g, PROC, COST,
+                              names=("original", "algorithmic"),
+                              cfg=StrategyConfig(cp_detect_overhead=0.0,
+                                                 monitor_overhead=0.0))
+    assert res["algorithmic"].makespan_s <= res["original"].makespan_s * 1.02
+
+
+# ------------------------------------------------------------- energy model
+def test_worked_example_matches_paper_text():
+    out = verify_worked_example()
+    assert out["dEd"] == pytest.approx(-0.8785, abs=1e-4)
+    assert out["dEl"] == pytest.approx(-0.0875, abs=1e-4)
+
+
+@pytest.mark.parametrize("table", sorted(GEAR_TABLES))
+def test_gear_tables_monotonic(table):
+    proc = make_processor(table)
+    freqs = [g.freq_ghz for g in proc.gears]
+    volts = [g.voltage for g in proc.gears]
+    assert freqs == sorted(freqs, reverse=True)
+    assert volts == sorted(volts, reverse=True)
+    # power is monotone in gear (highest gear draws the most)
+    pw = [proc.core_power_w(g, True) for g in proc.gears]
+    assert pw == sorted(pw, reverse=True)
+
+
+@pytest.mark.parametrize("table", sorted(GEAR_TABLES))
+def test_strategy_gap_shrinks_when_voltage_flat(table):
+    """The paper's observation: dEd at moderate n is small when V barely
+    scales with f (modern tables)."""
+    proc = make_processor(table)
+    n = min(1.25, max_slack_ratio(proc))
+    d_ed, d_el = strategy_gap_terms(proc, n)
+    assert d_ed <= 1e-9  # CP-aware never loses on dynamic energy
+    v_h, v_l = proc.gears[0].voltage, proc.gears[-1].voltage
+    rel_v_span = (v_h - v_l) / v_h
+    # the gap per unit ACT is bounded by something proportional to V span
+    assert abs(d_ed) <= 3.0 * proc.gears[0].freq_ghz * v_h**2
+
+
+# ------------------------------------------------------------------- DVFS
+@given(d=st.floats(1e-4, 10.0), slack_frac=st.floats(0.0, 3.0))
+@settings(max_examples=200, deadline=None)
+def test_two_gear_split_work_and_time(d, slack_frac):
+    slack = d * slack_frac
+    segs = two_gear_split(PROC, d, slack)
+    total_t = sum(t for _, t in segs)
+    # work conservation: sum f*t == f_h*d (beta=1)
+    work = sum(g.freq_ghz * t for g, t in segs)
+    assert work == pytest.approx(PROC.f_max * d, rel=1e-9)
+    # never exceeds the slack window
+    assert total_t <= d + slack + 1e-12
+
+
+@given(d=st.floats(1e-4, 10.0), slack_frac=st.floats(0.05, 3.0))
+@settings(max_examples=200, deadline=None)
+def test_two_gear_split_saves_energy(d, slack_frac):
+    slack = d * slack_frac
+    segs = two_gear_split(PROC, d, slack)
+    e_split = plan_energy_j(PROC, segs)
+    e_top = plan_energy_j(PROC, [(PROC.gears[0], d)])
+    # active energy at reduced gears is never above running flat-out
+    # (leakage*extra_time can offset on near-flat tables; allow tiny margin)
+    assert e_split <= e_top * 1.005
+
+
+def test_duration_at_beta():
+    assert duration_at(1.0, 2.0, 1.0, beta=1.0) == pytest.approx(2.0)
+    assert duration_at(1.0, 2.0, 1.0, beta=0.0) == pytest.approx(1.0)
+    assert duration_at(1.0, 2.0, 1.0, beta=0.5) == pytest.approx(1.5)
+
+
+# -------------------------------------------------------------- strategies
+@pytest.mark.parametrize("name", ["cholesky", "lu", "qr"])
+def test_strategy_ordering(name):
+    g = build_dag(name, 10, 384, (2, 4))
+    res = evaluate_strategies(g, PROC, COST)
+    e = {k: v.energy_j for k, v in res.items()}
+    # every saving strategy beats original
+    assert e["race_to_halt"] < e["original"]
+    assert e["cp_aware"] < e["original"]
+    assert e["algorithmic"] < e["original"]
+    # the paper's algorithmic plan is at least as good as the online one
+    assert e["algorithmic"] <= e["cp_aware"] * 1.001
+    # acceptable slowdowns (paper reports ~3.5-3.9%)
+    for k in ("race_to_halt", "cp_aware", "algorithmic"):
+        assert res[k].slowdown_pct < 6.0
+
+
+def test_power_trace_levels():
+    g = build_dag("cholesky", 12, 512, (4, 4))
+    res = evaluate_strategies(g, PROC, COST)
+    sched = res["original"].schedule
+    ts = np.linspace(0, sched.makespan, 512)
+    tr_orig = res["original"].schedule.power_trace(ts, nodes=[0])
+    tr_rth = res["race_to_halt"].schedule.power_trace(ts, nodes=[0])
+    # race-to-halt's minimum power dips below original's
+    assert tr_rth.min() < tr_orig.min() - 1.0
+    # peaks comparable (both compute at top gear)
+    assert abs(tr_rth.max() - tr_orig.max()) / tr_orig.max() < 0.05
+    # all traces above the nodal constant floor
+    assert tr_rth.min() >= PROC.p_const_watts
+
+
+def test_tpu_like_device_collapses_to_race_to_halt():
+    """On a single-gear device, cp_aware == race-to-halt-style savings only
+    (no ladder to reclaim with) -- the hardware-adaptation observation."""
+    g = build_dag("cholesky", 8, 256, (2, 2))
+    tpu = make_tpu_like()
+    res = evaluate_strategies(g, tpu, COST,
+                              cfg=StrategyConfig(cp_detect_overhead=0.0,
+                                                 monitor_overhead=0.0))
+    assert res["cp_aware"].energy_j == pytest.approx(
+        res["algorithmic"].energy_j, rel=1e-6)
+    # with one gear, reclamation can't slow anything down: energy ==
+    # race-to-halt up to switch-accounting noise
+    assert res["algorithmic"].energy_j == pytest.approx(
+        res["race_to_halt"].energy_j, rel=0.02)

@@ -1,0 +1,107 @@
+"""HLO analyzer validation: trip-count-aware flop/byte/collective counting
+against analytically known workloads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+M, K, N = 64, 128, 96
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    b = jax.ShapeDtypeStruct((K, N), jnp.float32)
+    hlo = _hlo_of(lambda a, b: a @ b, a, b)
+    cost = analyze(hlo)
+    assert cost.dot_flops == pytest.approx(2 * M * K * N, rel=1e-6)
+    assert cost.n_while == 0
+
+
+def test_scanned_matmul_multiplies_by_trip_count():
+    """A scan over 7 matmuls must count 7x the flops (cost_analysis counts
+    the body once -- the bug this analyzer exists to fix)."""
+    trips = 7
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            return c @ x, ()
+        y, _ = jax.lax.scan(body, jnp.eye(M), None, length=trips)
+        return y
+
+    hlo = _hlo_of(fn, a)
+    cost = analyze(hlo)
+    assert cost.n_while >= 1
+    assert cost.dot_flops == pytest.approx(trips * 2 * M**3, rel=1e-6)
+
+
+def test_nested_scan_multiplies():
+    t_out, t_in = 3, 5
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def fn(x):
+        def inner(c, _):
+            return c @ x, ()
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=t_in)
+            return y, ()
+
+        y, _ = jax.lax.scan(outer, jnp.eye(M), None, length=t_out)
+        return y
+
+    cost = analyze(_hlo_of(fn, a))
+    assert cost.dot_flops == pytest.approx(t_out * t_in * 2 * M**3, rel=1e-6)
+
+
+def test_fori_loop_trip_count():
+    trips = 11
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def fn(x):
+        return jax.lax.fori_loop(0, trips, lambda i, c: c @ x, jnp.eye(M))
+
+    cost = analyze(_hlo_of(fn, a))
+    assert cost.dot_flops == pytest.approx(trips * 2 * M**3, rel=1e-6)
+
+
+def test_hbm_bytes_reasonable_for_copy():
+    """y = x + 1 on a [1024,1024] f32: HBM traffic ~ 2 x 4 MiB."""
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    cost = analyze(_hlo_of(lambda x: x + 1.0, a))
+    assert 0.5 * 8 * 2**20 <= cost.hbm_bytes <= 3 * 8 * 2**20
+
+
+def test_parse_module_roundtrip_names():
+    a = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    b = jax.ShapeDtypeStruct((K, N), jnp.float32)
+    hlo = _hlo_of(lambda a, b: jnp.tanh(a @ b), a, b)
+    comps = parse_module(hlo)
+    assert any(c.is_entry for c in comps.values())
+    entry = next(c for c in comps.values() if c.is_entry)
+    assert len(entry.instrs) >= 2
+
+
+def test_grad_of_scanned_mlp_flops():
+    """Forward+backward of a scanned 4-layer MLP: 6x per-layer matmul flops
+    (1 fwd + 2 bwd) within 25% (transpose/update overheads allowed)."""
+    layers, d, bsz = 4, 64, 32
+    w = jax.ShapeDtypeStruct((layers, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((bsz, d), jnp.float32)
+
+    def loss(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), ()
+        h, _ = jax.lax.scan(body, x, w)
+        return (h ** 2).sum()
+
+    cost = analyze(_hlo_of(lambda w, x: jax.grad(loss)(w, x), w, x))
+    expect = 3 * layers * 2 * bsz * d * d
+    assert expect * 0.75 <= cost.dot_flops <= expect * 1.5

@@ -1,0 +1,192 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus the chunked-jnp attention path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gemm import gemm_pallas
+from repro.kernels.potrf import potrf_pallas
+from repro.kernels.syrk import syrk_pallas
+from repro.kernels.trsm import trsm_pallas
+from repro.kernels.ops import attention_chunked
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 \
+        else {"rtol": 2e-5, "atol": 2e-5}
+
+
+def _spd(key, n, dtype):
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    return (a @ a.T / n + jnp.eye(n)).astype(dtype)
+
+
+# ------------------------------------------------------------------- GEMM
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 384),
+                                   (384, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_matches_ref(m, n, k, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    a = jax.random.normal(k1, (m, k), dtype)
+    b = jax.random.normal(k2, (k, n), dtype)
+    c = jax.random.normal(k3, (m, n), dtype)
+    got = gemm_pallas(a, b, c, alpha=-1.0, beta=1.0,
+                      bm=128, bn=128, bk=128, interpret=True)
+    want = ref.gemm_ref(a, b, c, alpha=-1.0, beta=1.0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_gemm_no_c_operand():
+    k1, k2 = jax.random.split(jax.random.key(1))
+    a = jax.random.normal(k1, (256, 256), jnp.float32)
+    b = jax.random.normal(k2, (256, 256), jnp.float32)
+    got = gemm_pallas(a, b, bm=128, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------- SYRK
+@pytest.mark.parametrize("m,k", [(256, 128), (256, 256), (384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_syrk_matches_ref_lower(m, k, dtype):
+    k1, k2 = jax.random.split(jax.random.key(2))
+    a = jax.random.normal(k1, (m, k), dtype)
+    c = jax.random.normal(k2, (m, m), dtype)
+    got = syrk_pallas(a, c, alpha=-1.0, beta=1.0, bm=128, bk=128,
+                      interpret=True)
+    want = ref.syrk_ref(a, c, alpha=-1.0, beta=1.0)
+    tril = np.tril_indices(m)
+    np.testing.assert_allclose(np.asarray(got, np.float32)[tril],
+                               np.asarray(want, np.float32)[tril],
+                               **_tol(dtype))
+    # strict upper blocks pass C through untouched (block granularity 128)
+    np.testing.assert_allclose(np.asarray(got)[:128, 128:],
+                               np.asarray(c)[:128, 128:])
+
+
+# ------------------------------------------------------------------- TRSM
+@pytest.mark.parametrize("m,nb", [(128, 128), (384, 128), (256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_trsm_matches_ref(m, nb, dtype):
+    k1, k2 = jax.random.split(jax.random.key(3))
+    # well-conditioned L: unit-ish diagonal dominating the strict lower part
+    l = jnp.tril(jax.random.normal(k1, (nb, nb), dtype), -1) / nb + \
+        (1.0 + 0.1 * jnp.abs(jax.random.normal(k2, (nb,), dtype))) * \
+        jnp.eye(nb, dtype=dtype)
+    b = jax.random.normal(k2, (m, nb), dtype)
+    got = trsm_pallas(l, b, bm=128, interpret=True)
+    want = ref.trsm_ref(l, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # residual check: X L^T == B
+    np.testing.assert_allclose(np.asarray(got @ l.T), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_trsm_unit_diag():
+    k1, k2 = jax.random.split(jax.random.key(4))
+    nb = 128
+    l = jnp.tril(jax.random.normal(k1, (nb, nb)), -1) / nb + jnp.eye(nb)
+    b = jax.random.normal(k2, (256, nb))
+    got = trsm_pallas(l, b, unit_diag=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got @ l.T), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ POTRF
+@pytest.mark.parametrize("n", [128, 256])
+def test_potrf_matches_lapack(n):
+    a = _spd(jax.random.key(5), n, jnp.float32)
+    got = potrf_pallas(a, interpret=True)
+    want = ref.potrf_ref(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # reconstruction
+    np.testing.assert_allclose(np.asarray(got @ got.T), np.asarray(a),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_potrf_matches_unblocked_ref_exactly():
+    """Kernel algorithm == ref.potrf_unblocked_ref (same sweep order)."""
+    a = _spd(jax.random.key(6), 128, jnp.float32)
+    got = potrf_pallas(a, interpret=True)
+    want = ref.potrf_unblocked_ref(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------------------- attention
+ATTN_CASES = [
+    # (b, hq, hkv, sq, skv, causal, window, softcap)
+    (2, 4, 4, 256, 256, True, None, None),       # MHA causal
+    (2, 8, 2, 256, 256, True, None, None),       # GQA 4:1
+    (1, 4, 1, 256, 256, True, None, None),       # MQA
+    (2, 4, 2, 256, 256, True, 128, None),        # sliding window
+    (1, 4, 4, 256, 256, True, None, 30.0),       # gemma softcap
+    (1, 4, 2, 128, 256, True, None, None),       # decode-ish: kv longer
+    (1, 2, 2, 256, 256, False, None, None),      # bidirectional (encoder)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_pallas_vs_ref(case):
+    b, hq, hkv, sq, skv, causal, window, softcap = case
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, skv, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, skv, 64), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_attention_chunked_vs_ref(case):
+    b, hq, hkv, sq, skv, causal, window, softcap = case
+    ks = jax.random.split(jax.random.key(8), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, skv, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, skv, 64), jnp.float32)
+    got = attention_chunked(q, k, v, causal=causal, window=window,
+                            softcap=softcap, q_chunk=128, k_chunk=64)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_chunked_grads_flow():
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+
+    def loss(q, k, v):
+        return attention_chunked(q, k, v, q_chunk=64, k_chunk=64).sum()
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for gi in g:
+        assert np.isfinite(np.asarray(gi)).all()
+
+
+def test_bf16_attention_tolerance():
+    ks = jax.random.split(jax.random.key(10), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
+    want = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,92 @@
+"""Sequence-parallel collectives: numerical equivalence of the manual
+shard_map paths (column_parallel_ag / row_parallel_rs / sp_gather_seq)
+against the plain einsum reference, values AND gradients, on a real
+multi-device mesh (subprocess with 8 host devices)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_BODY = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.sharding.rules import (use_sharding, sp_gather_seq,
+                                  row_parallel_rs, column_parallel_ag)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rules = {"res_seq": "model", "act_ff": "model", "heads": "model",
+         "batch": ("data",), "seq": None, "embed": None}
+b, s, d, f = 4, 16, 8, 32
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+w1 = jnp.asarray(rng.standard_normal((d, f)), jnp.float32)
+w3 = jnp.asarray(rng.standard_normal((d, f)), jnp.float32)
+w2 = jnp.asarray(rng.standard_normal((f, d)), jnp.float32)
+
+def f_sp(x, w1, w3, w2):
+    h1, h3 = column_parallel_ag(x, [w1, w3], ["bsd,df->bsf"] * 2, "act_ff")
+    h = jnp.tanh(h1) * h3
+    y = row_parallel_rs(h, w2, "bsf,fd->bsd", "act_ff")
+    return (y ** 2).sum()
+
+def f_ref(x, w1, w3, w2):
+    h = jnp.tanh(x @ w1) * (x @ w3)
+    return ((h @ w2) ** 2).sum()
+
+with use_sharding(mesh, rules):
+    v_sp, g_sp = jax.jit(jax.value_and_grad(f_sp, argnums=(0, 1, 2, 3)))(
+        x, w1, w3, w2)
+v_rf, g_rf = jax.jit(jax.value_and_grad(f_ref, argnums=(0, 1, 2, 3)))(
+    x, w1, w3, w2)
+assert abs(float(v_sp) - float(v_rf)) / abs(float(v_rf)) < 1e-5
+for a, b_, name in zip(g_sp, g_rf, "x w1 w3 w2".split()):
+    err = np.abs(np.asarray(a) - np.asarray(b_)).max()
+    scale = np.abs(np.asarray(b_)).max()
+    assert err < 1e-4 * max(scale, 1.0), (name, err, scale)
+
+# gather path alone
+with use_sharding(mesh, rules):
+    xg = jax.jit(sp_gather_seq)(x)
+np.testing.assert_allclose(np.asarray(xg), np.asarray(x), atol=1e-6)
+
+# the compiled SP module must contain a true reduce-scatter, no big AR
+with use_sharding(mesh, rules):
+    txt = jax.jit(jax.value_and_grad(f_sp, argnums=(0,))) \
+        .lower(x, w1, w3, w2).compile().as_text()
+assert txt.count("reduce-scatter") >= 1, "expected explicit reduce-scatter"
+print("ALL OK")
+"""
+
+
+@pytest.mark.slow
+def test_sp_paths_match_reference_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _BODY],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL OK" in res.stdout
+
+
+def test_sp_fallback_without_ctx():
+    """No sharding ctx (CPU smoke path): SP helpers are plain einsums."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.sharding.rules import (column_parallel_ag, row_parallel_rs,
+                                      sp_gather_seq)
+    x = jnp.ones((2, 4, 8))
+    w = jnp.ones((8, 16))
+    (h,) = column_parallel_ag(x, [w], ["bsd,df->bsf"], "act_ff")
+    np.testing.assert_allclose(np.asarray(h), 8.0)
+    y = row_parallel_rs(h, jnp.ones((16, 8)), "bsf,fd->bsd", "act_ff")
+    np.testing.assert_allclose(np.asarray(y), 128.0)
+    np.testing.assert_allclose(np.asarray(sp_gather_seq(x)), 1.0)
