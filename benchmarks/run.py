@@ -8,6 +8,7 @@ Sections:
     power_trace        3-node power traces, Cholesky             (Figure 2)
     factorization_perf tiled factorization GFLOP/s               (perf table)
     lm_energy          technique on LM step DAGs (all archs)     (adaptation)
+    sim_speed          event-driven simulator vs pick-loop oracle (infra)
 """
 
 from __future__ import annotations
@@ -16,7 +17,7 @@ import argparse
 import time
 
 from . import (energy_savings, factorization_perf, lm_energy, power_trace,
-               strategy_gap)
+               sim_speed, strategy_gap)
 
 SECTIONS = {
     "strategy_gap": strategy_gap.main,
@@ -24,6 +25,7 @@ SECTIONS = {
     "power_trace": power_trace.main,
     "factorization_perf": factorization_perf.main,
     "lm_energy": lm_energy.main,
+    "sim_speed": sim_speed.main,
 }
 
 

@@ -1,0 +1,84 @@
+"""Schedule-simulator speed: event-driven engine vs the pick-loop oracle.
+
+Every benchmark section re-runs the simulator per strategy per
+factorization, so its speed bounds how large a sweep (grid size, tile
+count, LM-DAG scenarios) the repo can afford. This section times
+`simulate` (ready-heap + dependency counters) against
+`simulate_reference` (the original O(tasks x ranks x deps) pick-loop)
+on the paper's Cholesky DAG at T=32 tiles on a (4, 4) grid, per
+strategy, and checks they agree while they're at it.
+
+Acceptance target (ISSUE 1): >= 5x per strategy on this configuration.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dag import build_dag
+from repro.core.energy_model import make_processor
+from repro.core.scheduler import CostModel, simulate, simulate_reference
+from repro.core.strategies import STRATEGIES, make_plan
+
+FACT = "cholesky"
+N_TILES = 32
+TILE = 256
+GRID = (4, 4)
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID,
+        proc_name: str = "arc_opteron_6128", fast_repeats: int = 7,
+        ref_repeats: int = 3):
+    graph = build_dag(FACT, n_tiles, tile, grid)
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    rows = []
+    for name in STRATEGIES:
+        plan = make_plan(name, graph, proc, cost)
+        fast = simulate(graph, proc, cost, plan)     # warm graph caches
+        ref = simulate_reference(graph, proc, cost, plan)
+        agree = (np.array_equal(fast.start, ref.start)
+                 and np.array_equal(fast.finish, ref.finish)
+                 and fast.switch_count == ref.switch_count
+                 and abs(fast.total_energy_j() - ref.total_energy_j())
+                 <= 1e-9 * max(1.0, ref.total_energy_j()))
+        t_fast = _best_of(lambda: simulate(graph, proc, cost, plan),
+                          fast_repeats)
+        t_ref = _best_of(lambda: simulate_reference(graph, proc, cost, plan),
+                         ref_repeats)
+        rows.append({
+            "strategy": name, "n_tasks": len(graph.tasks),
+            "fast_ms": t_fast * 1e3, "reference_ms": t_ref * 1e3,
+            "speedup": t_ref / t_fast, "agree": agree,
+        })
+    return rows
+
+
+def main() -> list[str]:
+    rows = run()
+    out = [f"# {FACT} T={N_TILES} tile={TILE} grid={GRID}: "
+           f"{rows[0]['n_tasks']} tasks",
+           "strategy,fast_ms,reference_ms,speedup,agree"]
+    for r in rows:
+        out.append(f"{r['strategy']},{r['fast_ms']:.2f},"
+                   f"{r['reference_ms']:.2f},{r['speedup']:.1f},"
+                   f"{r['agree']}")
+    worst = min(r["speedup"] for r in rows)
+    out.append(f"# worst-case speedup {worst:.1f}x "
+               f"(target >= 5x), all agree: {all(r['agree'] for r in rows)}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

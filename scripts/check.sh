@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# One-stop verification entry point for PRs.
+#
+#   scripts/check.sh          tier-1 suite + simulator differential suite
+#   scripts/check.sh --fast   skip tests marked `slow` (multi-device
+#                             subprocess runs take minutes)
+#
+# Tier-1 (ROADMAP.md): PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=()
+if [[ "${1:-}" == "--fast" ]]; then
+    MARK=(-m "not slow")
+fi
+
+# differential suite runs as its own step below; keep tier-1 disjoint
+echo "== tier-1 test suite =="
+python -m pytest -x -q --ignore=tests/test_scheduler_differential.py \
+    ${MARK[@]+"${MARK[@]}"}
+
+echo "== scheduler differential suite =="
+python -m pytest -x -q tests/test_scheduler_differential.py
+
+echo "== simulator speedup benchmark (target >= 5x) =="
+python -m benchmarks.run --only sim_speed

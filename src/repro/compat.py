@@ -1,0 +1,31 @@
+"""Cross-version jax shims shared by the sharding and linalg layers.
+
+`jax.shard_map` became a top-level API (with a `check_vma` kwarg) after
+the 0.4.x series; on 0.4.x it lives at `jax.experimental.shard_map` and
+the same knob is spelled `check_rep`. `shard_map` here presents the
+modern calling convention on either version. (The pallas analogue lives
+in `repro.kernels.compat`.)
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _LEGACY = False
+else:                                       # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _LEGACY = True
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` with the modern kwarg spelling on any jax version."""
+    if _LEGACY:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+
+
+__all__ = ["shard_map"]

@@ -6,7 +6,10 @@ Public API:
     make_processor, GEAR_TABLES             -- CMOS power model + gears
     two_gear_split                          -- Ishihara-Yasuura frequency split
     make_plan, evaluate_strategies          -- the four strategies
-    simulate, CostModel, Schedule           -- schedule simulator
+    simulate, CostModel, Schedule           -- schedule simulator (fast,
+                                               event-driven engine)
+    simulate_reference                      -- slow pick-loop oracle for
+                                               differential testing
 """
 
 from .critical_path import CpResult, cp_analysis, schedule_slack
@@ -17,7 +20,8 @@ from .dvfs import duration_at, plan_energy_j, two_gear_split
 from .energy_model import (GEAR_TABLES, Gear, ProcessorModel, make_processor,
                            make_tpu_like, max_slack_ratio, strategy_gap_terms,
                            verify_worked_example)
-from .scheduler import CostModel, RankSegment, Schedule, StrategyPlan, simulate
+from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
+                        simulate, simulate_reference)
 from .strategies import (STRATEGIES, StrategyConfig, StrategyResult,
                          evaluate_strategies, make_plan)
 
@@ -31,6 +35,7 @@ __all__ = [
     "make_tpu_like", "max_slack_ratio", "strategy_gap_terms",
     "verify_worked_example",
     "CostModel", "RankSegment", "Schedule", "StrategyPlan", "simulate",
+    "simulate_reference",
     "STRATEGIES", "StrategyConfig", "StrategyResult",
     "evaluate_strategies", "make_plan",
 ]

@@ -14,6 +14,13 @@ Two related computations:
    no other task's start -- this is the quantity both CP-aware reclamation
    (measured online, Adagio-style) and the paper's algorithmic schedule
    (computed offline from this very analysis) reclaim.
+
+Both are fully vectorized over the graph's cached NumPy edge arrays
+(`TaskGraph.dep_edge_arrays` / `dep_edges_by_level` / `rank_order_pairs`):
+`schedule_slack` is a single scatter-min over all edges, and `cp_analysis`
+sweeps the DAG level-by-level (consumers sit strictly above producers, so a
+per-level scatter-max/min is a valid topological pass). min/max are exact in
+floating point, so the results are bit-identical to an edge-at-a-time loop.
 """
 
 from __future__ import annotations
@@ -36,31 +43,33 @@ class CpResult:
     total_float: np.ndarray
 
 
-def _edge_delay(graph: TaskGraph, producer: int, consumer: int,
-                comm_time: float) -> float:
-    if graph.tasks[producer].owner == graph.tasks[consumer].owner:
-        return 0.0
-    return comm_time
-
-
 def cp_analysis(graph: TaskGraph, durations: np.ndarray,
                 comm_time: float = 0.0) -> CpResult:
     n = len(graph.tasks)
+    durations = np.asarray(durations, dtype=float)
+    src, dst, cross, bounds = graph.dep_edges_by_level()
+    delay = np.where(cross, comm_time, 0.0)
+    n_levels = len(bounds) - 1
+
+    # forward pass: earliest starts, one scatter-max per DAG level
     es = np.zeros(n)
-    # forward pass (tasks are emitted in topological order by construction)
-    for t in graph.tasks:
-        if t.deps:
-            es[t.tid] = max(
-                es[d] + durations[d] + _edge_delay(graph, d, t.tid, comm_time)
-                for d in t.deps
-            )
+    for lv in range(1, n_levels):
+        lo, hi = bounds[lv], bounds[lv + 1]
+        if lo == hi:
+            continue
+        s, d = src[lo:hi], dst[lo:hi]
+        np.maximum.at(es, d, es[s] + durations[s] + delay[lo:hi])
     ef = es + durations
     cp_len = float(ef.max()) if n else 0.0
+
+    # backward pass: latest finishes, highest consumer level first
     lf = np.full(n, cp_len)
-    for t in reversed(graph.tasks):     # backward pass
-        for d in t.deps:
-            lf[d] = min(lf[d], lf[t.tid] - durations[t.tid]
-                        - _edge_delay(graph, d, t.tid, comm_time))
+    for lv in range(n_levels - 1, 0, -1):
+        lo, hi = bounds[lv], bounds[lv + 1]
+        if lo == hi:
+            continue
+        s, d = src[lo:hi], dst[lo:hi]
+        np.minimum.at(lf, s, lf[d] - durations[d] - delay[lo:hi])
     ls = lf - durations
     tf = ls - es
     return CpResult(es, ef, ls, lf, cp_len, tf <= 1e-12, tf)
@@ -73,14 +82,15 @@ def schedule_slack(start: np.ndarray, finish: np.ndarray,
     makespan = float(finish.max()) if n else 0.0
     slack = np.full(n, np.inf)
     # DAG successors: producer must deliver by successor's start
-    for t in graph.tasks:
-        for d in t.deps:
-            avail = start[t.tid] - _edge_delay(graph, d, t.tid, comm_time)
-            slack[d] = min(slack[d], avail - finish[d])
+    src, dst, cross = graph.dep_edge_arrays()
+    if len(src):
+        avail = start[dst] - np.where(cross, comm_time, 0.0)
+        np.minimum.at(slack, src, avail - finish[src])
     # same-rank program order: finishing later would push the next local task
-    for rank_tasks in graph.tasks_by_rank():
-        for a, b in zip(rank_tasks[:-1], rank_tasks[1:]):
-            slack[a] = min(slack[a], start[b] - finish[a])
+    prev, nxt = graph.rank_order_pairs()
+    if len(prev):
+        np.minimum.at(slack, prev, start[nxt] - finish[prev])
     # terminal tasks may stretch to the makespan
-    slack[np.isinf(slack)] = makespan - finish[np.isinf(slack)]
+    term = np.isinf(slack)
+    slack[term] = makespan - finish[term]
     return np.maximum(slack, 0.0)

@@ -23,6 +23,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Iterator
 
+import numpy as np
+
 # Relative efficiency of each kernel kind at peak gear (fraction of peak
 # flop-rate a tuned kernel of that kind achieves; GEMM-like ops run near
 # peak, panel ops are memory/latency bound). Used by the cost model.
@@ -67,21 +69,106 @@ class TaskGraph:
         return self.tile_size * self.tile_size * self.dtype_bytes
 
     def successors(self) -> list[list[int]]:
-        succ: list[list[int]] = [[] for _ in self.tasks]
-        for t in self.tasks:
-            for d in t.deps:
-                succ[d].append(t.tid)
+        """Per-task consumer lists (cached; treat the result as read-only)."""
+        succ = self.__dict__.get("_succ")
+        if succ is None:
+            succ = [[] for _ in self.tasks]
+            for t in self.tasks:
+                for d in t.deps:
+                    succ[d].append(t.tid)
+            self.__dict__["_succ"] = succ
         return succ
 
     def tasks_by_rank(self) -> list[list[int]]:
-        """Program order per rank (tasks are emitted in SPMD loop order)."""
-        per = [[] for _ in range(self.n_ranks)]
-        for t in self.tasks:
-            per[t.owner].append(t.tid)
+        """Program order per rank (tasks are emitted in SPMD loop order).
+
+        Cached; treat the result as read-only.
+        """
+        per = self.__dict__.get("_per_rank")
+        if per is None:
+            per = [[] for _ in range(self.n_ranks)]
+            for t in self.tasks:
+                per[t.owner].append(t.tid)
+            self.__dict__["_per_rank"] = per
         return per
 
     def total_flops(self) -> float:
         return sum(t.flops for t in self.tasks)
+
+    # -- cached NumPy views (shared by the scheduler, slack, and CP code) --
+    # TaskGraph is a plain mutable dataclass, so caches live in __dict__ and
+    # are computed at most once per graph; builders never mutate `tasks`
+    # after construction.
+
+    def dep_edge_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Flat dependency edges: (src, dst, cross_rank) arrays.
+
+        src[e] -> dst[e] is a data edge (dst consumes src's output);
+        cross_rank[e] is True when the edge pays the communication delay.
+        """
+        cached = self.__dict__.get("_dep_edges")
+        if cached is None:
+            src = [d for t in self.tasks for d in t.deps]
+            dst = [t.tid for t in self.tasks for _ in t.deps]
+            src_a = np.asarray(src, dtype=np.int64)
+            dst_a = np.asarray(dst, dtype=np.int64)
+            owner = np.asarray([t.owner for t in self.tasks], dtype=np.int64)
+            cross = (owner[src_a] != owner[dst_a]) if len(src) else \
+                np.zeros(0, dtype=bool)
+            cached = (src_a, dst_a, cross)
+            self.__dict__["_dep_edges"] = cached
+        return cached
+
+    def rank_order_pairs(self) -> tuple[np.ndarray, np.ndarray]:
+        """Consecutive same-rank pairs (prev, next) in program order."""
+        cached = self.__dict__.get("_rank_pairs")
+        if cached is None:
+            prev: list[int] = []
+            nxt: list[int] = []
+            for rank_tasks in self.tasks_by_rank():
+                prev.extend(rank_tasks[:-1])
+                nxt.extend(rank_tasks[1:])
+            cached = (np.asarray(prev, dtype=np.int64),
+                      np.asarray(nxt, dtype=np.int64))
+            self.__dict__["_rank_pairs"] = cached
+        return cached
+
+    def task_levels(self) -> np.ndarray:
+        """Longest-path depth of each task over data edges (level 0 = roots).
+
+        Consumers sit strictly above all their producers, so processing
+        tasks level-by-level is a valid (vectorizable) topological sweep.
+        """
+        cached = self.__dict__.get("_levels")
+        if cached is None:
+            level = np.zeros(len(self.tasks), dtype=np.int64)
+            for t in self.tasks:          # tids are already topological
+                if t.deps:
+                    level[t.tid] = 1 + max(int(level[d]) for d in t.deps)
+            cached = level
+            self.__dict__["_levels"] = cached
+        return cached
+
+    def dep_edges_by_level(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                          np.ndarray]:
+        """Dependency edges sorted by the consumer's level, plus group bounds.
+
+        Returns (src, dst, cross_rank, bounds) where edges with consumer
+        level L occupy slice [bounds[L], bounds[L+1]). Enables level-wise
+        vectorized forward/backward CP passes.
+        """
+        cached = self.__dict__.get("_edges_by_level")
+        if cached is None:
+            src, dst, cross = self.dep_edge_arrays()
+            level = self.task_levels()
+            n_levels = int(level.max()) + 1 if len(level) else 1
+            order = np.argsort(level[dst], kind="stable") if len(dst) else \
+                np.zeros(0, dtype=np.int64)
+            src_s, dst_s, cross_s = src[order], dst[order], cross[order]
+            bounds = np.searchsorted(level[dst_s], np.arange(n_levels + 1))
+            cached = (src_s, dst_s, cross_s, bounds)
+            self.__dict__["_edges_by_level"] = cached
+        return cached
 
 
 def block_cyclic_owner(i: int, j: int, grid: tuple[int, int]) -> int:

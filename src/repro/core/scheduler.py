@@ -21,11 +21,29 @@ Gear mechanics simulated:
 Energy = sum over per-rank piecewise-constant power segments
        + gear-switch energies
        + nodal constant power * makespan * n_nodes.
+
+Two engines compute the same schedule:
+
+  * `simulate`           -- event-driven: a ready-heap keyed on earliest
+                            feasible start plus per-task remaining-dependency
+                            counters decremented on completion events.
+                            O((n + e) log n) dispatch instead of scanning
+                            every rank's head task per pick.
+  * `simulate_reference` -- the original O(n_tasks x n_ranks x deps)
+                            pick-loop, kept verbatim as a slow, obviously-
+                            correct oracle for the differential test suite
+                            (`tests/test_scheduler_differential.py`).
+
+Because a task's timing depends only on its rank's previous task and its
+dependencies' finish times, dispatch order between ranks cannot change the
+result; both engines produce bit-identical timelines and switch counts (the
+switch-energy sum may differ by accumulation order, within 1e-9).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Sequence
 
 import numpy as np
@@ -55,6 +73,14 @@ class CostModel:
                 * self.kind_efficiency.get(kind, 0.8))
         return flops / rate
 
+    def durations_top(self, graph: TaskGraph,
+                      proc: ProcessorModel) -> np.ndarray:
+        """Vectorized `duration_top` over every task in the graph."""
+        eff = np.asarray([self.kind_efficiency.get(t.kind, 0.8)
+                          for t in graph.tasks])
+        flops = np.asarray([t.flops for t in graph.tasks])
+        return flops / (proc.f_max * 1e9 * self.flops_per_cycle * eff)
+
     def comm_time(self, graph: TaskGraph) -> float:
         return graph.tile_bytes / (self.comm_bandwidth_gbs * 1e9) \
             + self.comm_latency_s
@@ -68,16 +94,52 @@ class RankSegment:
     active: bool          # computing vs idle/waiting
 
 
+# Per-rank timeline as flat columns: (t0, t1, gear_index, active). Cheap for
+# the engines to emit and for energy/power queries to vectorize over.
+SegColumns = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
 @dataclasses.dataclass
 class Schedule:
     graph: TaskGraph
     proc: ProcessorModel
     start: np.ndarray
     finish: np.ndarray
-    rank_segments: list[list[RankSegment]]
+    seg_columns: list[SegColumns]
     switch_count: int
     switch_energy_j: float
     cores_per_node: int = 16
+
+    @classmethod
+    def from_rank_segments(cls, graph: TaskGraph, proc: ProcessorModel,
+                           start: np.ndarray, finish: np.ndarray,
+                           rank_segments: list[list[RankSegment]],
+                           switch_count: int, switch_energy_j: float,
+                           cores_per_node: int = 16) -> "Schedule":
+        """Build from the classic list-of-RankSegment representation."""
+        cols: list[SegColumns] = [
+            (np.asarray([s.t0 for s in segs]),
+             np.asarray([s.t1 for s in segs]),
+             np.asarray([s.gear.index for s in segs], dtype=np.int64),
+             np.asarray([s.active for s in segs], dtype=bool))
+            for segs in rank_segments
+        ]
+        return cls(graph, proc, start, finish, cols, switch_count,
+                   switch_energy_j, cores_per_node)
+
+    @property
+    def rank_segments(self) -> list[list[RankSegment]]:
+        """Materialized per-rank RankSegment lists (cached)."""
+        cached = self.__dict__.get("_rank_segments")
+        if cached is None:
+            gears = self.proc.gears
+            cached = [
+                [RankSegment(float(a), float(b), gears[g], bool(ac))
+                 for a, b, g, ac in zip(*cols)]
+                for cols in self.seg_columns
+            ]
+            self.__dict__["_rank_segments"] = cached
+        return cached
 
     @property
     def makespan(self) -> float:
@@ -87,11 +149,18 @@ class Schedule:
     def n_nodes(self) -> int:
         return max(1, self.graph.n_ranks // self.cores_per_node)
 
+    def _power_table(self) -> np.ndarray:
+        """power_w[gear_index, active_as_int]."""
+        return np.array([[self.proc.core_power_w(g, False),
+                          self.proc.core_power_w(g, True)]
+                         for g in self.proc.gears])
+
     def core_energy_j(self) -> float:
+        pw = self._power_table()
         e = 0.0
-        for segs in self.rank_segments:
-            for s in segs:
-                e += self.proc.core_power_w(s.gear, s.active) * (s.t1 - s.t0)
+        for t0, t1, gi, act in self.seg_columns:
+            if len(t0):
+                e += float(pw[gi, act.astype(np.int64)] @ (t1 - t0))
         return e
 
     def total_energy_j(self) -> float:
@@ -103,26 +172,25 @@ class Schedule:
         """Total power (W) of the given nodes sampled at `times`."""
         if nodes is None:
             nodes = range(self.n_nodes)
+        nodes = list(nodes)
         ranks: list[int] = []
         for nd in nodes:
             ranks.extend(range(nd * self.cores_per_node,
                                min((nd + 1) * self.cores_per_node,
                                    self.graph.n_ranks)))
-        watts = np.full(times.shape, float(len(list(nodes))) *
+        pw = self._power_table()
+        watts = np.full(times.shape, float(len(nodes)) *
                         self.proc.p_const_watts)
         for r in ranks:
-            segs = self.rank_segments[r]
-            if not segs:
+            t0, t1, gi, act = self.seg_columns[r]
+            if not len(t0):
                 continue
-            t0s = np.array([s.t0 for s in segs])
-            idx = np.searchsorted(t0s, times, side="right") - 1
-            idx = np.clip(idx, 0, len(segs) - 1)
-            p = np.array([self.proc.core_power_w(s.gear, s.active)
-                          for s in segs])
-            inside = (times >= segs[0].t0) & (times <= segs[-1].t1)
-            watts = watts + np.where(inside, p[idx], p[-1] * 0 +
-                                     self.proc.core_power_w(
-                                         segs[-1].gear, False))
+            idx = np.searchsorted(t0, times, side="right") - 1
+            idx = np.clip(idx, 0, len(t0) - 1)
+            p = pw[gi, act.astype(np.int64)]
+            inside = (times >= t0[0]) & (times <= t1[-1])
+            # outside the rank's timeline it idles at its final gear
+            watts = watts + np.where(inside, p[idx], pw[gi[-1], 0])
         return watts
 
 
@@ -140,6 +208,190 @@ class StrategyPlan:
 
 def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
              plan: StrategyPlan) -> Schedule:
+    """Event-driven engine: ready-heap + remaining-dependency counters.
+
+    A task enters the heap the moment it becomes schedulable -- it is the
+    head of its rank's program order AND its last outstanding dependency
+    has finished -- keyed on its earliest feasible start. Executing a task
+    can only unlock (never re-time) other tasks, so each task is pushed
+    exactly once and popped with its final start time. Produces timelines
+    bit-identical to `simulate_reference` (the differential suite asserts
+    this across randomized DAGs, grids, gear tables, and strategies).
+    """
+    n = len(graph.tasks)
+    n_ranks = graph.n_ranks
+    comm = cost.comm_time(graph)
+
+    per_rank = graph.tasks_by_rank()
+    ptr = [0] * n_ranks
+    rank_free = [0.0] * n_ranks
+    rank_gear = [0] * n_ranks                  # gear indices; 0 = top gear
+    # per-rank segment columns, emitted flat (no per-segment objects)
+    seg_t0: list[list[float]] = [[] for _ in range(n_ranks)]
+    seg_t1: list[list[float]] = [[] for _ in range(n_ranks)]
+    seg_gi: list[list[int]] = [[] for _ in range(n_ranks)]
+    seg_act: list[list[bool]] = [[] for _ in range(n_ranks)]
+    switch_count = 0
+    switch_energy = 0.0
+    t_sw = proc.switch_latency_s
+    halt_win = max(plan.min_halt_window_s, 2.0 * t_sw)
+    # memoized per-transition energies (identical floats to switch_energy_j)
+    sw_e = [[proc.switch_energy_j(a, b) for b in proc.gears]
+            for a in proc.gears]
+
+    # flat per-task state in plain Python lists: scalar access is the hot
+    # path and list indexing is markedly faster than ndarray item access
+    tasks = graph.tasks
+    owner = [t.owner for t in tasks]
+    deps = [t.deps for t in tasks]
+    succ = graph.successors()
+    n_wait = [len(d) for d in deps]        # remaining-dependency counters
+    start = [0.0] * n
+    fin = [0.0] * n
+    queued = [False] * n
+    task_segments = plan.task_segments
+    overhead = plan.per_task_overhead.tolist()
+    idle_idx = plan.idle_gear.index
+    hide = plan.hide_switch_in_wait
+    heappush, heappop = heapq.heappush, heapq.heappop
+
+    heap: list[tuple[float, int]] = []
+    for r in range(n_ranks):
+        if per_rank[r]:
+            tid = per_rank[r][0]
+            if not n_wait[tid]:
+                queued[tid] = True
+                heappush(heap, (0.0, tid))   # roots: rank free at t=0, no deps
+
+    remaining = n
+    while heap:
+        best_start, tid = heappop(heap)
+        r = owner[tid]
+        segs = task_segments[tid]
+        gear_now = rank_gear[r]
+        first_gear = segs[0][0].index if segs else gear_now
+        t_now = rank_free[r]
+        wait = best_start - t_now
+        et0, et1, egi, eact = seg_t0[r], seg_t1[r], seg_gi[r], seg_act[r]
+
+        # ---- waiting period handling (idle gear + switches) -------------
+        if wait > 1e-15:
+            if idle_idx != gear_now and wait >= halt_win:
+                # downshift for the wait
+                switch_count += 1
+                switch_energy += sw_e[gear_now][idle_idx]
+                gear_now = idle_idx
+            et0.append(t_now)
+            et1.append(best_start)
+            egi.append(gear_now)
+            eact.append(False)
+
+        # ---- gear switch into the task's first segment ------------------
+        t_exec = best_start
+        if first_gear != gear_now:
+            switch_count += 1
+            switch_energy += sw_e[gear_now][first_gear]
+            if not (hide and wait >= t_sw):
+                et0.append(t_exec)
+                et1.append(t_exec + t_sw)
+                egi.append(first_gear)
+                eact.append(False)
+                t_exec += t_sw
+            gear_now = first_gear
+
+        # ---- runtime overhead (detection / monitoring) -------------------
+        ovh = overhead[tid]
+        if ovh > 0.0:
+            et0.append(t_exec)
+            et1.append(t_exec + ovh)
+            egi.append(gear_now)
+            eact.append(True)
+            t_exec += ovh
+
+        # ---- execute the task's frequency segments -----------------------
+        start[tid] = t_exec
+        for gear, dt in segs:
+            gi = gear.index
+            if gi != gear_now:
+                switch_count += 1
+                switch_energy += sw_e[gear_now][gi]
+                # mid-task switches are always planned -> no stall modeled
+                gear_now = gi
+            et0.append(t_exec)
+            et1.append(t_exec + dt)
+            egi.append(gi)
+            eact.append(True)
+            t_exec += dt
+        fin[tid] = t_exec
+        rank_free[r] = t_exec
+        rank_gear[r] = gear_now
+        p = ptr[r] + 1
+        ptr[r] = p
+        remaining -= 1
+
+        # completion event: unlock successors, then re-arm this rank's head
+        successors = succ[tid]
+        for s in successors:
+            n_wait[s] -= 1
+        rank_tasks = per_rank[r]
+        if p < len(rank_tasks):
+            h = rank_tasks[p]
+            if not n_wait[h] and not queued[h]:
+                ready = t_exec               # == rank_free[r]
+                for d in deps[h]:
+                    arr = fin[d] + (comm if owner[d] != r else 0.0)
+                    if arr > ready:
+                        ready = arr
+                queued[h] = True
+                heappush(heap, (ready, h))
+        for s in successors:
+            if not n_wait[s] and not queued[s]:
+                rs = owner[s]
+                if per_rank[rs][ptr[rs]] == s:
+                    ready = rank_free[rs]
+                    for d in deps[s]:
+                        arr = fin[d] + (comm if owner[d] != rs else 0.0)
+                        if arr > ready:
+                            ready = arr
+                    queued[s] = True
+                    heappush(heap, (ready, s))
+
+    if remaining:   # cannot happen on a valid program order
+        raise RuntimeError("deadlock in schedule simulation")
+
+    start_a = np.asarray(start)
+    finish_a = np.asarray(fin)
+
+    # trailing idle until global makespan (ranks that finish early)
+    makespan = float(finish_a.max()) if n else 0.0
+    for r in range(n_ranks):
+        if rank_free[r] < makespan - 1e-15:
+            if idle_idx != rank_gear[r]:
+                switch_count += 1
+                switch_energy += sw_e[rank_gear[r]][idle_idx]
+            seg_t0[r].append(rank_free[r])
+            seg_t1[r].append(makespan)
+            seg_gi[r].append(idle_idx)
+            seg_act[r].append(False)
+
+    cols: list[SegColumns] = [
+        (np.asarray(seg_t0[r]), np.asarray(seg_t1[r]),
+         np.asarray(seg_gi[r], dtype=np.int64),
+         np.asarray(seg_act[r], dtype=bool))
+        for r in range(n_ranks)
+    ]
+    return Schedule(graph, proc, start_a, finish_a, cols,
+                    switch_count, switch_energy)
+
+
+def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
+                       cost: CostModel, plan: StrategyPlan) -> Schedule:
+    """The original O(tasks x ranks x deps) pick-loop, kept verbatim.
+
+    Slow but obviously correct: every pick scans all ranks' head tasks and
+    re-derives feasibility from first principles. The differential suite
+    runs this oracle against `simulate` and asserts agreement to 1e-9.
+    """
     n = len(graph.tasks)
     comm = cost.comm_time(graph)
     start = np.zeros(n)
@@ -245,5 +497,5 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
                 switch_energy += proc.switch_energy_j(rank_gear[r], gear)
             segments[r].append(RankSegment(rank_free[r], makespan, gear, False))
 
-    return Schedule(graph, proc, start, finish, segments,
-                    switch_count, switch_energy)
+    return Schedule.from_rank_segments(graph, proc, start, finish, segments,
+                                       switch_count, switch_energy)

@@ -50,8 +50,8 @@ class StrategyConfig:
 def _top_gear_segments(graph: TaskGraph, proc: ProcessorModel,
                        cost: CostModel) -> list[list]:
     top = proc.gears[0]
-    return [[(top, cost.duration_top(t.flops, t.kind, proc))]
-            for t in graph.tasks]
+    durs = cost.durations_top(graph, proc)
+    return [[(top, float(durs[t.tid]))] for t in graph.tasks]
 
 
 def _baseline_schedule(graph: TaskGraph, proc: ProcessorModel,
@@ -72,9 +72,10 @@ def _reclaimed_segments(graph: TaskGraph, proc: ProcessorModel,
                         slack_use: float, min_reclaim_s: float) -> list[list]:
     slack = schedule_slack(base.start, base.finish, graph,
                            cost.comm_time(graph))
+    durs = cost.durations_top(graph, proc)
     segs = []
     for t in graph.tasks:
-        d = cost.duration_top(t.flops, t.kind, proc)
+        d = float(durs[t.tid])
         s = float(slack[t.tid]) * slack_use
         if s < min_reclaim_s:
             segs.append([(proc.gears[0], d)])
@@ -89,8 +90,7 @@ def make_plan(name: str, graph: TaskGraph, proc: ProcessorModel,
     cfg = cfg or StrategyConfig()
     n = len(graph.tasks)
     top, low = proc.gears[0], proc.gears[-1]
-    durs = np.array([cost.duration_top(t.flops, t.kind, proc)
-                     for t in graph.tasks])
+    durs = cost.durations_top(graph, proc)
 
     if name == "original":
         return StrategyPlan("original", _top_gear_segments(graph, proc, cost),

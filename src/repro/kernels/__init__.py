@@ -5,14 +5,15 @@ Layout (per repo convention):
                   potrf, flash_attention)
     ops.py     -- jit'd dispatch wrappers (pallas | interpret | jnp)
     ref.py     -- pure-jnp oracles every kernel is validated against
+    compat.py  -- pallas version shims (CompilerParams vs TPUCompilerParams)
 """
 
-from . import ops, ref
+from . import compat, ops, ref
 from .flash_attention import flash_attention_pallas
 from .gemm import gemm_pallas
 from .potrf import potrf_pallas
 from .syrk import syrk_pallas
 from .trsm import trsm_pallas
 
-__all__ = ["ops", "ref", "gemm_pallas", "syrk_pallas", "trsm_pallas",
-           "potrf_pallas", "flash_attention_pallas"]
+__all__ = ["compat", "ops", "ref", "gemm_pallas", "syrk_pallas",
+           "trsm_pallas", "potrf_pallas", "flash_attention_pallas"]

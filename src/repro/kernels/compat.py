@@ -1,0 +1,19 @@
+"""Version shims for jax.experimental.pallas across jax releases.
+
+`pltpu.CompilerParams` was introduced as the public name for the Mosaic
+compiler-parameter struct; older releases (e.g. jax 0.4.x) only expose it
+as `pltpu.TPUCompilerParams`. Both accept `dimension_semantics=...`, which
+is all the kernels here use. Resolve whichever exists once, at import time,
+so every kernel module can say `compat.CompilerParams(...)`.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:                                       # jax <= 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 
 def _potrf_kernel(a_ref, l_ref):
     a = a_ref[...].astype(jnp.float32)
@@ -46,7 +48,7 @@ def potrf_pallas(a: jax.Array, *, interpret: bool = False) -> jax.Array:
         in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="repro_potrf",

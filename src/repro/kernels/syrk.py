@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 
 def _syrk_kernel(a_ref, at_ref, c_ref, o_ref, acc_ref, *,
                  alpha: float, beta: float, k_steps: int):
@@ -62,7 +64,7 @@ def syrk_pallas(a: jax.Array, c: jax.Array, *, alpha: float = -1.0,
         out_specs=pl.BlockSpec((bm, bm), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, m), c.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="repro_syrk",

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 
 def _trsm_kernel(l_ref, b_ref, x_ref, *, unit_diag: bool):
     l = l_ref[...].astype(jnp.float32)
@@ -54,7 +56,7 @@ def trsm_pallas(l: jax.Array, b: jax.Array, *, bm: int = 256,
         ],
         out_specs=pl.BlockSpec((bm, nb), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, nb), b.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="repro_trsm",

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.kernels import ref
 
 # ---------------------------------------------------------------- layout
@@ -291,7 +292,7 @@ def distributed_factorize(name: str, tiles_bc: jax.Array, mesh: Mesh):
     assert t % pr == 0 and t % pc == 0, (t, pr, pc)
     kern = functools.partial(_KERNELS[name], t=t, pr=pr, pc=pc)
     spec = P("data", "model", None, None)
-    fn = jax.shard_map(kern, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    fn = shard_map(kern, mesh=mesh, in_specs=(spec,), out_specs=spec)
     return fn(tiles_bc)
 
 
@@ -326,7 +327,7 @@ def dryrun_cell(name: str, n: int, tile: int, mesh: Mesh, dtype=jnp.float32):
         pr=dict(zip(mesh.axis_names, mesh.devices.shape))["data"],
         pc=dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
     spec = P("data", "model", None, None)
-    fn = jax.shard_map(kern, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    fn = shard_map(kern, mesh=mesh, in_specs=(spec,), out_specs=spec)
     abstract = jax.ShapeDtypeStruct((t, t, tile, tile), dtype)
     shard = NamedSharding(mesh, spec)
     return fn, (abstract,), (shard,), shard

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.compat import shard_map
+
 Rules = dict[str, tuple[str, ...] | str | None]
 
 
@@ -139,7 +141,7 @@ def row_parallel_rs(h: jax.Array, w: jax.Array, subscripts: str,
                                  tiled=True)
         return y.astype(hl.dtype)
 
-    fn = jax.shard_map(body, mesh=ctx.mesh,
+    fn = shard_map(body, mesh=ctx.mesh,
                        in_specs=(PartitionSpec(*h_spec),
                                  PartitionSpec(*w_spec)),
                        out_specs=PartitionSpec(*out_spec))
@@ -188,7 +190,7 @@ def sp_gather_seq(x: jax.Array, seq_dim: int = 1) -> jax.Array:
 
     # check_vma=False: the tiled all_gather's output IS replicated over
     # "model" but the varying-axes checker cannot infer that statically.
-    fn = jax.shard_map(body, mesh=ctx.mesh,
+    fn = shard_map(body, mesh=ctx.mesh,
                        in_specs=(PartitionSpec(*spec_in),),
                        out_specs=PartitionSpec(*spec_out),
                        check_vma=False)
@@ -241,7 +243,7 @@ def column_parallel_ag(x: jax.Array, ws: list[jax.Array],
         return tuple(jnp.einsum(s, xf, wl)
                      for s, wl in zip(subscripts, wls))
 
-    fn = jax.shard_map(body, mesh=ctx.mesh,
+    fn = shard_map(body, mesh=ctx.mesh,
                        in_specs=(PartitionSpec(*x_spec), *w_specs),
                        out_specs=tuple(out_specs), check_vma=False)
     return list(fn(constraint(x, ("batch", "res_seq", "embed")), *ws))

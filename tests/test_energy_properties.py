@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) on the energy core's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dag import build_dag
 from repro.core.critical_path import cp_analysis, schedule_slack
