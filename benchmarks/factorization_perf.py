@@ -4,6 +4,11 @@ the distributed kernel's per-iteration phase structure.
 On CPU this measures the jnp reference path of the same tile kernels the
 Pallas backend accelerates on TPU; the table's purpose is (a) scaling shape
 vs the analytic flop model and (b) CI-checkable correctness under timing.
+
+A second table gives each factorization's TDS wait mix (panel / comm /
+imbalance idle fractions on the matching task DAG): the wait taxonomy that
+explains *why* the scaling curves flatten -- panel waits serialize, and the
+trailing-matrix imbalance grows with the tile count.
 """
 
 from __future__ import annotations
@@ -14,12 +19,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dag import factorization_flops
+from repro.core.dag import build_dag, factorization_flops
+from repro.core.energy_model import make_processor
+from repro.core.scheduler import CostModel
+from repro.core.tds import compute_tds
 from repro.linalg.tiled import (dense_to_tiles, tiled_cholesky, tiled_lu,
                                 tiled_qr)
 
 SIZES = (256, 512, 1024)
 TILE = 128
+TDS_GRID = (2, 2)          # DAG layout used for the wait-mix table
 
 
 def _time(fn, *args, reps: int = 3):
@@ -54,13 +63,47 @@ def run(sizes=SIZES, tile=TILE):
     return rows
 
 
-def main() -> list[str]:
+def run_tds_mix(n: int = SIZES[-1], tile: int = TILE, grid=TDS_GRID,
+                proc_name: str = "arc_opteron_6128"):
+    """Per-factorization TDS wait-class breakdown on the matching DAG."""
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    rows = []
+    for name in ("cholesky", "lu", "qr"):
+        graph = build_dag(name, n // tile, tile, grid)
+        tds = compute_tds(graph, proc, cost)
+        waits = tds.wait_seconds_by_class()
+        total = sum(waits.values()) or 1.0
+        rows.append({"factorization": name,
+                     **{f"{k}_frac": v / total for k, v in waits.items()
+                        if k != "none"},
+                     "total_wait_s": sum(waits.values())})
+    return rows
+
+
+def bench() -> tuple[list[str], dict]:
     rows = run()
     out = ["factorization,n,tile,seconds,gflops"]
+    metrics = {}
     for r in rows:
         out.append(f"{r['factorization']},{r['n']},{r['tile']},"
                    f"{r['seconds']:.4f},{r['gflops']:.2f}")
-    return out
+        metrics[f"{r['factorization']}.n{r['n']}.gflops"] = \
+            round(r["gflops"], 2)
+    tds_rows = run_tds_mix()
+    out.append("factorization,panel_wait_frac,comm_wait_frac,"
+               "imbalance_wait_frac,total_wait_s")
+    for r in tds_rows:
+        out.append(f"{r['factorization']},{r['panel_frac']:.3f},"
+                   f"{r['comm_frac']:.3f},{r['imbalance_frac']:.3f},"
+                   f"{r['total_wait_s']:.4f}")
+        metrics[f"{r['factorization']}.panel_wait_frac"] = \
+            round(r["panel_frac"], 3)
+    return out, metrics
+
+
+def main() -> list[str]:
+    return bench()[0]
 
 
 if __name__ == "__main__":

@@ -44,7 +44,7 @@ def run(path: str | None = None):
     rows = []
     for p in _profiles(path):
         for dev in DEVICES:
-            res = evaluate_step(p, dev)
+            res = evaluate_step(p, dev)   # every registered lane strategy
             rows.append({
                 "arch": p.arch, "shape": p.shape, "device": dev,
                 "step_s": p.step_s, "critical_lane": p.critical_lane,
@@ -55,26 +55,35 @@ def run(path: str | None = None):
     return rows
 
 
-def main() -> list[str]:
+def bench() -> tuple[list[str], dict]:
     rows = run()
     if not rows:
-        return ["# no roofline.json yet -- run the dry-run + roofline first"]
+        return (["# no roofline.json yet -- run the dry-run + roofline "
+                 "first"], {"profiles": 0})
     out = ["arch,shape,device,step_s,critical_lane,saved_race_to_halt_pct,"
-           "saved_cp_aware_pct,saved_algorithmic_pct,gap_race_vs_algo_pct"]
+           "saved_cp_aware_pct,saved_algorithmic_pct,saved_tx_pct,"
+           "gap_race_vs_algo_pct"]
     for r in rows:
         out.append(
             f"{r['arch']},{r['shape']},{r['device']},{r['step_s']:.4f},"
             f"{r['critical_lane']},{r['saved_race_to_halt_pct']:.2f},"
             f"{r['saved_cp_aware_pct']:.2f},"
             f"{r['saved_algorithmic_pct']:.2f},"
+            f"{r['saved_tx_pct']:.2f},"
             f"{r['gap_race_vs_algo_pct']:.3f}")
+    metrics = {"profiles": len(rows) // max(len(DEVICES), 1)}
     # aggregate: mean gap per device -- the paper's conclusion in one line
     for dev in DEVICES:
         gaps = [r["gap_race_vs_algo_pct"] for r in rows if r["device"] == dev]
         if gaps:
             out.append(f"# mean gap on {dev}: "
                        f"{sum(gaps) / len(gaps):.3f}% of original energy")
-    return out
+            metrics[f"{dev}.mean_gap_pct"] = round(sum(gaps) / len(gaps), 3)
+    return out, metrics
+
+
+def main() -> list[str]:
+    return bench()[0]
 
 
 if __name__ == "__main__":

@@ -23,10 +23,11 @@ import numpy as np
 from repro.core.dag import TaskGraph, build_dag
 from repro.core.energy_model import make_processor
 from repro.core.scheduler import CostModel, simulate
-from repro.core.strategies import make_plan
+from repro.core.strategies import PlanContext, get_strategy
 
 GRID = (16, 16)            # 256 ranks = 16 nodes x 16 cores
 NODES = (0, 1, 2)          # the paper meters three nodes on one power meter
+TRACED = ("original", "cp_aware", "race_to_halt", "tx")
 
 
 def truncated_dag(name: str, n_tiles: int, tile: int, grid,
@@ -42,10 +43,11 @@ def run(n_tiles: int = 48, tile: int = 2560, first_k: int = 5,
     proc = make_processor("arc_opteron_6128")
     cost = CostModel()
     graph = truncated_dag("cholesky", n_tiles, tile, GRID, first_k)
+    ctx = PlanContext(graph, proc, cost)    # baseline/slack/TDS shared
     traces = {}
     t_max = 0.0
-    for name in ("original", "cp_aware", "race_to_halt"):
-        sched = simulate(graph, proc, cost, make_plan(name, graph, proc, cost))
+    for name in TRACED:
+        sched = simulate(graph, proc, cost, get_strategy(name).plan(ctx))
         t_max = max(t_max, sched.makespan)
         traces[name] = sched
     times = np.linspace(0.0, t_max, n_samples)
@@ -53,19 +55,27 @@ def run(n_tiles: int = 48, tile: int = 2560, first_k: int = 5,
                    for name, s in traces.items()}
 
 
-def main() -> list[str]:
+def bench() -> tuple[list[str], dict]:
     times, traces = run()
     names = list(traces)
     out = ["time_s," + ",".join(f"{n}_w" for n in names)]
     for i, t in enumerate(times):
         out.append(f"{t:.4f}," + ",".join(f"{traces[n][i]:.1f}"
                                           for n in names))
+    metrics = {}
     # summary: the three power levels of the figure
     for n in names:
         w = traces[n]
         out.append(f"# {n}: peak={w.max():.0f}W p75={np.percentile(w, 75):.0f}W "
                    f"median={np.median(w):.0f}W min={w.min():.0f}W")
-    return out
+        metrics[f"{n}.peak_w"] = round(float(w.max()), 1)
+        metrics[f"{n}.median_w"] = round(float(np.median(w)), 1)
+        metrics[f"{n}.min_w"] = round(float(w.min()), 1)
+    return out, metrics
+
+
+def main() -> list[str]:
+    return bench()[0]
 
 
 if __name__ == "__main__":

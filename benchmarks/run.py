@@ -1,45 +1,69 @@
 """Benchmark driver: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 
 Sections:
-    strategy_gap       Eqns 7-9 sweep + worked-example check     (Table 2)
+    strategy_gap       Eqns 7-9 sweep + simulated registry gap    (Table 2)
     energy_savings     strategies x factorizations, 16x16 grid   (main table)
     power_trace        3-node power traces, Cholesky             (Figure 2)
-    factorization_perf tiled factorization GFLOP/s               (perf table)
+    factorization_perf tiled factorization GFLOP/s + TDS mix     (perf table)
     lm_energy          technique on LM step DAGs (all archs)     (adaptation)
     sim_speed          event-driven simulator vs pick-loop oracle (infra)
+
+Each section module exposes `bench() -> (lines, metrics)`: the printable
+table plus a flat dict of key numbers. `--json PATH` collects per-section
+wall time and those metrics into one machine-readable results file
+(`BENCH_*.json` style) so successive PRs can track the perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 from . import (energy_savings, factorization_perf, lm_energy, power_trace,
                sim_speed, strategy_gap)
 
 SECTIONS = {
-    "strategy_gap": strategy_gap.main,
-    "energy_savings": energy_savings.main,
-    "power_trace": power_trace.main,
-    "factorization_perf": factorization_perf.main,
-    "lm_energy": lm_energy.main,
-    "sim_speed": sim_speed.main,
+    "strategy_gap": strategy_gap.bench,
+    "energy_savings": energy_savings.bench,
+    "power_trace": power_trace.bench,
+    "factorization_perf": factorization_perf.bench,
+    "lm_energy": lm_energy.bench,
+    "sim_speed": sim_speed.bench,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-section timings + key metrics as JSON")
     args = ap.parse_args()
     names = [args.only] if args.only else list(SECTIONS)
+    report: dict[str, dict] = {}
     for name in names:
         t0 = time.time()
         print(f"\n===== {name} " + "=" * (60 - len(name)))
-        for line in SECTIONS[name]():
+        lines, metrics = SECTIONS[name]()
+        for line in lines:
             print(line)
-        print(f"# [{name}] {time.time() - t0:.1f}s")
+        dt = time.time() - t0
+        print(f"# [{name}] {dt:.1f}s")
+        report[name] = {"seconds": round(dt, 3), **metrics}
+    if args.json:
+        payload = {
+            "suite": "benchmarks.run",
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "sections": report,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"\n# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,9 @@ factorization, so its speed bounds how large a sweep (grid size, tile
 count, LM-DAG scenarios) the repo can afford. This section times
 `simulate` (ready-heap + dependency counters) against
 `simulate_reference` (the original O(tasks x ranks x deps) pick-loop)
-on the paper's Cholesky DAG at T=32 tiles on a (4, 4) grid, per
-strategy, and checks they agree while they're at it.
+on the paper's Cholesky DAG at T=32 tiles on a (4, 4) grid, for every
+registered strategy (all plans built from one shared PlanContext), and
+checks they agree while they're at it.
 
 Acceptance target (ISSUE 1): >= 5x per strategy on this configuration.
 """
@@ -20,7 +21,8 @@ import numpy as np
 from repro.core.dag import build_dag
 from repro.core.energy_model import make_processor
 from repro.core.scheduler import CostModel, simulate, simulate_reference
-from repro.core.strategies import STRATEGIES, make_plan
+from repro.core.strategies import (PlanContext, get_strategy,
+                                   registered_strategies)
 
 FACT = "cholesky"
 N_TILES = 32
@@ -43,9 +45,10 @@ def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID,
     graph = build_dag(FACT, n_tiles, tile, grid)
     proc = make_processor(proc_name)
     cost = CostModel()
+    ctx = PlanContext(graph, proc, cost)    # baseline/slack/TDS shared
     rows = []
-    for name in STRATEGIES:
-        plan = make_plan(name, graph, proc, cost)
+    for name in registered_strategies():
+        plan = get_strategy(name).plan(ctx)
         fast = simulate(graph, proc, cost, plan)     # warm graph caches
         ref = simulate_reference(graph, proc, cost, plan)
         agree = (np.array_equal(fast.start, ref.start)
@@ -65,19 +68,29 @@ def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID,
     return rows
 
 
-def main() -> list[str]:
+def bench() -> tuple[list[str], dict]:
     rows = run()
     out = [f"# {FACT} T={N_TILES} tile={TILE} grid={GRID}: "
            f"{rows[0]['n_tasks']} tasks",
            "strategy,fast_ms,reference_ms,speedup,agree"]
+    metrics = {}
     for r in rows:
         out.append(f"{r['strategy']},{r['fast_ms']:.2f},"
                    f"{r['reference_ms']:.2f},{r['speedup']:.1f},"
                    f"{r['agree']}")
+        metrics[f"{r['strategy']}.speedup"] = round(r["speedup"], 1)
+        metrics[f"{r['strategy']}.fast_ms"] = round(r["fast_ms"], 2)
     worst = min(r["speedup"] for r in rows)
+    agree = all(r["agree"] for r in rows)
     out.append(f"# worst-case speedup {worst:.1f}x "
-               f"(target >= 5x), all agree: {all(r['agree'] for r in rows)}")
-    return out
+               f"(target >= 5x), all agree: {agree}")
+    metrics["worst_speedup"] = round(worst, 1)
+    metrics["all_agree"] = agree
+    return out, metrics
+
+
+def main() -> list[str]:
+    return bench()[0]
 
 
 if __name__ == "__main__":

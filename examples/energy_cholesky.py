@@ -20,7 +20,8 @@ import numpy as np
 from repro.core.dag import build_dag
 from repro.core.energy_model import make_processor
 from repro.core.scheduler import CostModel, simulate
-from repro.core.strategies import evaluate_strategies, make_plan
+from repro.core.strategies import (PlanContext, evaluate_strategies,
+                                   get_strategy, registered_strategies)
 from repro.linalg import distributed as D
 
 ap = argparse.ArgumentParser()
@@ -34,12 +35,22 @@ print("=== strategies on the paper's 16x16 grid ===")
 graph = build_dag("cholesky", args.tiles, 2560, (16, 16))
 proc = make_processor("arc_opteron_6128")
 cost = CostModel()
-for name, r in evaluate_strategies(graph, proc, cost).items():
+for name, r in evaluate_strategies(graph, proc, cost,
+                                   names=registered_strategies()).items():
     print(f"  {name:14s} time {r.makespan_s:7.3f} s   "
           f"energy {r.energy_j / 1e3:8.2f} kJ   "
           f"saved {r.energy_saved_pct:6.2f} %   "
           f"slowdown {r.slowdown_pct:5.2f} %   "
           f"switches {r.switch_count}")
+
+ctx = PlanContext(graph, proc, cost)
+tds = ctx.tds
+print("  TDS wait classes (idle s): ",
+      {k: round(v, 3) for k, v in tds.wait_seconds_by_class().items()
+       if k != "none"})
+print("  TDS slack classes (recl s):",
+      {k: round(v, 3) for k, v in tds.slack_seconds_by_class().items()
+       if k != "none"})
 
 # --------------------------------------------- the actual numerical kernel
 print("\n=== the same algorithm, numerically, on this host's devices ===")
@@ -59,7 +70,7 @@ assert err < 1e-3
 # ----------------------------------------------------------- power trace
 if args.csv:
     sched = simulate(graph, proc, cost,
-                     make_plan("algorithmic", graph, proc, cost))
+                     get_strategy("algorithmic").plan(ctx))
     times = np.linspace(0, sched.makespan, 500)
     watts = sched.power_trace(times, nodes=(0, 1, 2))
     with open(args.csv, "w") as f:

@@ -15,7 +15,8 @@ from repro.configs import get_config, make_smoke
 from repro.core.dag import build_dag
 from repro.core.energy_model import make_processor
 from repro.core.scheduler import CostModel
-from repro.core.strategies import evaluate_strategies
+from repro.core.strategies import (PlanContext, evaluate_strategies,
+                                   registered_strategies)
 from repro.models import get_model
 from repro.serve.engine import generate
 from repro.train.data import SyntheticDataset
@@ -26,11 +27,18 @@ from repro.train.train_step import init_train_state, make_train_step
 print("=== energy strategies on a 12x12-tile Cholesky, 4x4 grid ===")
 graph = build_dag("cholesky", 12, 512, (4, 4))
 proc = make_processor("amd_opteron_2218")     # the paper's worked example CPU
-res = evaluate_strategies(graph, proc, CostModel())
+cost = CostModel()
+res = evaluate_strategies(graph, proc, cost, names=registered_strategies())
 for name, r in res.items():
     print(f"  {name:14s} time {r.makespan_s * 1e3:8.2f} ms   "
           f"energy {r.energy_j:8.2f} J   saved {r.energy_saved_pct:6.2f} %"
           f"   slowdown {r.slowdown_pct:5.2f} %")
+
+# the TDS wait taxonomy behind the tx strategy's per-class gear policy
+tds = PlanContext(graph, proc, cost).tds
+print("  TDS wait classes (idle ms):",
+      {k: round(v * 1e3, 1) for k, v in tds.wait_seconds_by_class().items()
+       if k != "none"})
 
 # ------------------------------------------------------------ 2. substrate
 print("\n=== 20 training steps of a reduced qwen2.5 config (CPU) ===")

@@ -3,9 +3,13 @@
 Public API:
     build_dag, TaskGraph                    -- factorization task graphs
     cp_analysis, schedule_slack             -- critical path + slack
+    analyze_tds, compute_tds, TdsResult     -- Task Dependency Set analysis
+                                               (per-task wait/slack classes)
     make_processor, GEAR_TABLES             -- CMOS power model + gears
-    two_gear_split                          -- Ishihara-Yasuura frequency split
-    make_plan, evaluate_strategies          -- the four strategies
+    two_gear_split, two_gear_split_batch    -- Ishihara-Yasuura frequency split
+    register_strategy, Strategy             -- pluggable strategy registry
+    PlanContext, registered_strategies      -- shared planning inputs + listing
+    make_plan, evaluate_strategies          -- plan/evaluate registered strategies
     simulate, CostModel, Schedule           -- schedule simulator (fast,
                                                event-driven engine)
     simulate_reference                      -- slow pick-loop oracle for
@@ -13,29 +17,36 @@ Public API:
 """
 
 from .critical_path import CpResult, cp_analysis, schedule_slack
-from .dag import (DAG_BUILDERS, TaskGraph, Task, block_cyclic_owner,
-                  build_cholesky_dag, build_dag, build_lu_dag, build_qr_dag,
-                  factorization_flops)
-from .dvfs import duration_at, plan_energy_j, two_gear_split
+from .dag import (DAG_BUILDERS, PANEL_KINDS, TaskGraph, Task,
+                  block_cyclic_owner, build_cholesky_dag, build_dag,
+                  build_lu_dag, build_qr_dag, factorization_flops)
+from .dvfs import (duration_at, plan_energy_j, two_gear_split,
+                   two_gear_split_batch)
 from .energy_model import (GEAR_TABLES, Gear, ProcessorModel, make_processor,
                            make_tpu_like, max_slack_ratio, strategy_gap_terms,
                            verify_worked_example)
 from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
                         simulate, simulate_reference)
-from .strategies import (STRATEGIES, StrategyConfig, StrategyResult,
-                         evaluate_strategies, make_plan)
+from .strategies import (STRATEGIES, PlanContext, Strategy, StrategyConfig,
+                         StrategyResult, evaluate_strategies, get_strategy,
+                         make_plan, register_strategy, registered_strategies)
+from .tds import (WAIT_CLASS_NAMES, WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE,
+                  WAIT_PANEL, TdsResult, analyze_tds, compute_tds)
 
 __all__ = [
     "CpResult", "cp_analysis", "schedule_slack",
-    "DAG_BUILDERS", "TaskGraph", "Task", "block_cyclic_owner",
+    "DAG_BUILDERS", "PANEL_KINDS", "TaskGraph", "Task", "block_cyclic_owner",
     "build_cholesky_dag", "build_dag", "build_lu_dag", "build_qr_dag",
     "factorization_flops",
-    "duration_at", "plan_energy_j", "two_gear_split",
+    "duration_at", "plan_energy_j", "two_gear_split", "two_gear_split_batch",
     "GEAR_TABLES", "Gear", "ProcessorModel", "make_processor",
     "make_tpu_like", "max_slack_ratio", "strategy_gap_terms",
     "verify_worked_example",
     "CostModel", "RankSegment", "Schedule", "StrategyPlan", "simulate",
     "simulate_reference",
-    "STRATEGIES", "StrategyConfig", "StrategyResult",
-    "evaluate_strategies", "make_plan",
+    "STRATEGIES", "PlanContext", "Strategy", "StrategyConfig",
+    "StrategyResult", "evaluate_strategies", "get_strategy", "make_plan",
+    "register_strategy", "registered_strategies",
+    "WAIT_CLASS_NAMES", "WAIT_COMM", "WAIT_IMBALANCE", "WAIT_NONE",
+    "WAIT_PANEL", "TdsResult", "analyze_tds", "compute_tds",
 ]

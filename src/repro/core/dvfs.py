@@ -15,6 +15,8 @@ beta < 1 available for memory-bound kinds.
 
 from __future__ import annotations
 
+import numpy as np
+
 from .energy_model import Gear, ProcessorModel
 
 Segment = tuple[Gear, float]      # (gear, seconds)
@@ -65,6 +67,82 @@ def two_gear_split(proc: ProcessorModel, d_top: float, slack: float,
     if 1.0 - w > 1e-12:
         segs.append((g_lo, (1.0 - w) * t_lo_full))
     return segs
+
+
+def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
+                         slack: np.ndarray,
+                         beta: np.ndarray | float = 1.0
+                         ) -> list[list[Segment]]:
+    """Vectorized `two_gear_split` over arrays of tasks.
+
+    Produces, per task, exactly the segments the scalar function would
+    (identical floats, not merely close: every arithmetic expression below
+    mirrors the scalar one elementwise, and the bracketing-gear search is
+    the same first-match rule). The per-strategy plan builders call this
+    once per graph instead of looping `two_gear_split` per task; the only
+    remaining Python loop assembles the output lists from precomputed
+    arrays.
+    """
+    d = np.asarray(d_top, dtype=float)
+    s = np.asarray(slack, dtype=float)
+    b = np.broadcast_to(np.asarray(beta, dtype=float), d.shape)
+    n = len(d)
+    gears = proc.gears
+    top = gears[0]
+    f_top = top.freq_ghz
+    freqs = np.asarray([g.freq_ghz for g in gears])
+    target = d + s
+
+    empty = d <= 0.0
+    flat = ~empty & (s <= 1e-15)
+    live = ~empty & ~flat
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_floor = d * (b * f_top / proc.f_min + (1.0 - b))
+        denom = target / d - (1.0 - b)
+        f_m = b * f_top / denom
+    floor = live & (t_floor <= target + 1e-15)
+    split = live & ~floor
+
+    # bracketing gears: first adjacent pair (hi, lo) with lo.f <= f <= hi.f,
+    # i.e. lo = first gear with freq <= f_m (freqs are descending)
+    lo_idx = np.searchsorted(-freqs, -f_m, side="left")
+    lo_idx = np.clip(lo_idx, 1, len(gears) - 1)
+    hi_idx = lo_idx - 1
+    at_top = split & (f_m >= freqs[0])
+    at_floor = split & (f_m <= freqs[-1])
+    hi_idx[at_top], lo_idx[at_top] = 0, 0
+    hi_idx[at_floor] = len(gears) - 1
+    lo_idx[at_floor] = len(gears) - 1
+
+    single = split & (hi_idx == lo_idx)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_hi_full = d * (b * f_top / freqs[hi_idx] + (1.0 - b))
+        t_lo_full = d * (b * f_top / freqs[lo_idx] + (1.0 - b))
+        w = (target - t_lo_full) / (t_hi_full - t_lo_full)
+    w = np.clip(w, 0.0, 1.0)
+    w_rem = 1.0 - w
+    t_hi = w * t_hi_full
+    t_lo = w_rem * t_lo_full
+
+    low_gear = gears[-1]
+    out: list[list[Segment]] = []
+    for i in range(n):
+        if empty[i]:
+            out.append([])
+        elif flat[i]:
+            out.append([(top, float(d[i]))])
+        elif floor[i]:
+            out.append([(low_gear, float(t_floor[i]))])
+        elif single[i]:
+            out.append([(gears[int(hi_idx[i])], float(t_hi_full[i]))])
+        else:
+            segs: list[Segment] = []
+            if w[i] > 1e-12:
+                segs.append((gears[int(hi_idx[i])], float(t_hi[i])))
+            if w_rem[i] > 1e-12:
+                segs.append((gears[int(lo_idx[i])], float(t_lo[i])))
+            out.append(segs)
+    return out
 
 
 def plan_energy_j(proc: ProcessorModel, segs: list[Segment]) -> float:

@@ -19,6 +19,11 @@ first step runs. This module transposes the paper's analysis:
                             pre-armed transitions) -- possible *because*
                             the XLA schedule is static, exactly the
                             paper's argument for factorization DAGs
+    tx (TDS-driven)     ->  at step granularity the lane profile IS the
+                            Task Dependency Set (critical lane: zero
+                            slack; other lanes: barrier-bound imbalance
+                            slack), so TX coincides with the offline
+                            stretch plan here
 
 Two device power models are evaluated (DESIGN.md S3.2):
   * `tpu_like`  -- no DVFS ladder: stretching is impossible; only
@@ -127,6 +132,12 @@ def dynamic_power_ratio(freq_ratio: float,
 
 
 # ------------------------------------------------------------- strategies
+#
+# Lane strategies mirror core/strategies.py's registry at step granularity:
+# a lane strategy consumes (profile, lanes, ladder, step seconds) and emits
+# per-lane energies. Register new policies with @register_lane_strategy; any
+# registered name works in step_energy/evaluate_step and the lm_energy
+# benchmark picks it up automatically.
 
 @dataclasses.dataclass
 class LaneEnergy:
@@ -142,71 +153,107 @@ class LaneEnergy:
 CP_DETECT_OVERHEAD = 0.005     # online profiling/plan computation per step
 MONITOR_OVERHEAD = 0.001       # completion monitoring (race-to-halt)
 
+# name -> (per-step overhead fraction, per-lane energy fn)
+_LANE_REGISTRY: dict[str, tuple[float, object]] = {}
+
+
+def register_lane_strategy(name: str, overhead: float = 0.0):
+    """Register fn(profile, lanes, ladder, step_s) -> {lane: joules}."""
+    def deco(fn):
+        _LANE_REGISTRY[name] = (overhead, fn)
+        return fn
+    return deco
+
+
+def registered_lane_strategies() -> tuple[str, ...]:
+    return tuple(_LANE_REGISTRY)
+
+
+@register_lane_strategy("original")
+def _lane_original(profile, lanes, ladder, step):
+    return {k: lp.peak_w * step for k, lp in lanes.items()}
+
+
+@register_lane_strategy("race_to_halt", overhead=MONITOR_OVERHEAD)
+def _lane_race_to_halt(profile, lanes, ladder, step):
+    busy = profile.lane_busy
+    return {
+        k: lanes[k].peak_w * busy[k] + lanes[k].idle_w * (step - busy[k])
+        for k in lanes
+    }
+
+
+def _lane_stretch(profile, lanes, ladder, step):
+    """Stretch every non-critical lane into its slack (two-phase at floor)."""
+    busy = profile.lane_busy
+    per_lane = {}
+    for k, lp in lanes.items():
+        if busy[k] <= 0.0:
+            per_lane[k] = lp.idle_w * step
+            continue
+        r = min(busy[k] / step, 1.0)           # stretch into all slack
+        # floor: ladders bottom out (f_min/f_max); below it, run at the
+        # floor gear then halt for the remainder (two-phase plan)
+        r_floor = ladder[-1][0] if ladder else 0.10
+        r_eff = max(r, r_floor)
+        run_s = busy[k] / r_eff                # time at the low gear
+        dyn_peak = lp.peak_w - lp.idle_w
+        p_run = lp.idle_w + dyn_peak * dynamic_power_ratio(r_eff, ladder)
+        per_lane[k] = p_run * run_s + lp.idle_w * max(step - run_s, 0.0)
+    return per_lane
+
+
+register_lane_strategy("cp_aware", overhead=CP_DETECT_OVERHEAD)(_lane_stretch)
+register_lane_strategy("algorithmic")(_lane_stretch)
+# TX at step granularity: the compiled step's lane profile IS the TDS -- the
+# critical lane has zero slack, every other lane's slack is bounded by the
+# step barrier (pure load imbalance, no panel class at this granularity),
+# so the TDS-driven plan collapses to the offline stretch with pre-armed
+# transitions and zero detection overhead.
+register_lane_strategy("tx")(_lane_stretch)
+
 
 def step_energy(profile: StepProfile,
                 strategy: str,
                 lanes: dict[str, LanePower] | None = None,
                 ladder_name: str | None = None) -> LaneEnergy:
-    """Energy of one step under a strategy.
+    """Energy of one step under a registered lane strategy.
 
     ladder_name: None -> voltage-flat device (tpu_like); else a
     GEAR_TABLES key -> hypothetical DVFS accelerator with that V(f) curve.
     """
     lanes = lanes or DEFAULT_LANES
     ladder = None if ladder_name is None else _norm_gear_ladder(ladder_name)
-    t = profile.step_s
-    busy = profile.lane_busy
-
-    if strategy == "original":
-        step = t
-        per_lane = {k: lp.peak_w * step for k, lp in lanes.items()}
-    elif strategy == "race_to_halt":
-        step = t * (1.0 + MONITOR_OVERHEAD)
-        per_lane = {
-            k: lanes[k].peak_w * busy[k] + lanes[k].idle_w * (step - busy[k])
-            for k in lanes
-        }
-    elif strategy in ("cp_aware", "algorithmic"):
-        ovh = CP_DETECT_OVERHEAD if strategy == "cp_aware" else 0.0
-        step = t * (1.0 + ovh)
-        per_lane = {}
-        for k, lp in lanes.items():
-            if busy[k] <= 0.0:
-                per_lane[k] = lp.idle_w * step
-                continue
-            r = min(busy[k] / step, 1.0)           # stretch into all slack
-            # floor: ladders bottom out (f_min/f_max); below it, run at the
-            # floor gear then halt for the remainder (two-phase plan)
-            r_floor = ladder[-1][0] if ladder else 0.10
-            r_eff = max(r, r_floor)
-            run_s = busy[k] / r_eff                # time at the low gear
-            dyn_peak = lp.peak_w - lp.idle_w
-            p_run = lp.idle_w + dyn_peak * dynamic_power_ratio(r_eff, ladder)
-            per_lane[k] = p_run * run_s + lp.idle_w * max(step - run_s, 0.0)
-    else:
-        raise ValueError(strategy)
-
+    try:
+        overhead, fn = _LANE_REGISTRY[strategy]
+    except KeyError:
+        raise ValueError(f"unknown lane strategy {strategy!r}; choose from "
+                         f"{registered_lane_strategies()}") from None
+    step = profile.step_s * (1.0 + overhead)
+    per_lane = fn(profile, lanes, ladder, step)
     e = sum(per_lane.values()) + P_CONST_W * step
     return LaneEnergy(strategy, step, e, per_lane, e / step, 0.0)
 
 
+# The four strategies the paper evaluates; registered_lane_strategies()
+# additionally includes `tx` and anything downstream code registers.
 STRATEGIES = ("original", "race_to_halt", "cp_aware", "algorithmic")
 
 
 def evaluate_step(profile: StepProfile,
                   device: str = "tpu_like") -> dict[str, LaneEnergy]:
-    """All four strategies on one step profile.
+    """Every registered lane strategy on one step profile.
 
-    device: "tpu_like" (no ladder) or a GEAR_TABLES key.
+    device: "tpu_like" (no ladder) or a GEAR_TABLES key. Savings are
+    always vs `original`, whatever the registration order.
     """
     ladder_name = None if device == "tpu_like" else device
+    ref = step_energy(profile, "original", ladder_name=ladder_name)
     out: dict[str, LaneEnergy] = {}
-    ref = None
-    for s in STRATEGIES:
-        r = step_energy(profile, s, ladder_name=ladder_name)
-        if s == "original":
-            ref = r.energy_j
-        r.saved_vs_original_pct = 100.0 * (1.0 - r.energy_j / ref)
+    for s in registered_lane_strategies():
+        r = ref if s == "original" else \
+            step_energy(profile, s, ladder_name=ladder_name)
+        r.saved_vs_original_pct = 100.0 * (1.0 - r.energy_j / ref.energy_j)
         out[s] = r
     return out
 

@@ -43,6 +43,7 @@ switch-energy sum may differ by accumulation order, within 1e-9).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 from typing import Sequence
 
@@ -127,19 +128,15 @@ class Schedule:
         return cls(graph, proc, start, finish, cols, switch_count,
                    switch_energy_j, cores_per_node)
 
-    @property
+    @functools.cached_property
     def rank_segments(self) -> list[list[RankSegment]]:
         """Materialized per-rank RankSegment lists (cached)."""
-        cached = self.__dict__.get("_rank_segments")
-        if cached is None:
-            gears = self.proc.gears
-            cached = [
-                [RankSegment(float(a), float(b), gears[g], bool(ac))
-                 for a, b, g, ac in zip(*cols)]
-                for cols in self.seg_columns
-            ]
-            self.__dict__["_rank_segments"] = cached
-        return cached
+        gears = self.proc.gears
+        return [
+            [RankSegment(float(a), float(b), gears[g], bool(ac))
+             for a, b, g, ac in zip(*cols)]
+            for cols in self.seg_columns
+        ]
 
     @property
     def makespan(self) -> float:

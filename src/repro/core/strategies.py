@@ -1,4 +1,7 @@
-"""The four energy strategies evaluated by the paper.
+"""Pluggable DVFS strategy engine: registry, shared PlanContext, and the
+paper's strategies (plus TX, the explicit TDS-driven plan).
+
+Built-in strategies:
 
  * original        -- peak gear everywhere, idle at peak gear.
  * race_to_halt    -- peak gear while computing, lowest gear while idle;
@@ -12,23 +15,59 @@
                       cost model: zero runtime detection overhead, gear
                       switches pre-armed during waits (no wake-up stall),
                       plus scheduled-communication low gear during waits.
+ * tx              -- the paper's TDS mechanism made explicit: classify
+                      every wait/slack window via `core/tds.py` (panel /
+                      communication / load imbalance) and apply a per-class
+                      policy -- fully stretch into imbalance and
+                      communication slack down to a few switch latencies
+                      (the transfer schedule is known, so the low gear can
+                      be *scheduled*, not merely reacted to), but stay
+                      conservative on panel-bound slack so a cost-model
+                      error can never push the next panel start (the
+                      up-switch is pre-armed instead).
 
 All strategies other than `original` halt (lowest gear) during waits --
 communication slack handling is shared, as in the paper's experiments.
+
+Registry API (the extension point every scaling PR plugs into):
+
+    @register_strategy
+    class MyStrategy:
+        name = "mine"
+        def plan(self, ctx: PlanContext) -> StrategyPlan: ...
+
+  * `PlanContext` carries everything a planner may need -- graph, processor,
+    cost model, config, top-gear durations, the baseline schedule, realized
+    slack, and the TDS analysis -- each computed lazily *once* and shared by
+    every strategy planned from the same context. Planners must treat its
+    arrays as read-only (copy before mutating).
+  * `make_plan(name, ...)` / `evaluate_strategies(...)` dispatch through the
+    registry; `registered_strategies()` lists names in registration order.
+  * Differential-suite obligation: any registered strategy is automatically
+    exercised by `tests/test_scheduler_differential.py` (fast engine vs the
+    `simulate_reference` oracle, exact agreement). A new strategy must keep
+    that suite green -- plans it emits may only use the `StrategyPlan`
+    vocabulary both engines implement.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
 from .critical_path import schedule_slack
 from .dag import TaskGraph
-from .dvfs import two_gear_split
+from .dvfs import two_gear_split_batch
 from .energy_model import ProcessorModel
 from .scheduler import CostModel, Schedule, StrategyPlan, simulate
+from .tds import WAIT_PANEL, TdsResult, analyze_tds
 
+# The four strategies the paper evaluates (fixed, used by the paper-table
+# benchmarks); `registered_strategies()` additionally includes `tx` and any
+# strategy registered by downstream code.
 STRATEGIES = ("original", "race_to_halt", "cp_aware", "algorithmic")
 
 
@@ -45,84 +84,246 @@ class StrategyConfig:
     algorithmic_slack_use: float = 1.0
     # ignore slacks too small to be worth a switch
     min_reclaim_s: float = 500e-6
+    # tx: fraction of *panel-bound* slack to reclaim (stretching into it
+    # risks delaying the next panel if the cost model errs; TX pre-arms the
+    # up-switch and keeps a guard band instead)
+    tx_panel_slack_use: float = 0.5
+    # tx: comm/imbalance slack is reclaimed down to this many switch
+    # latencies (the wait is scheduled, so even short windows pay off)
+    tx_min_reclaim_switches: float = 4.0
 
 
-def _top_gear_segments(graph: TaskGraph, proc: ProcessorModel,
-                       cost: CostModel) -> list[list]:
-    top = proc.gears[0]
-    durs = cost.durations_top(graph, proc)
-    return [[(top, float(durs[t.tid]))] for t in graph.tasks]
+class PlanContext:
+    """Shared precomputed planning inputs for one (graph, proc, cost, cfg).
+
+    Contract: every derived quantity is computed at most once, on first
+    access, and cached for the context's lifetime; strategies planned from
+    the same context therefore share the baseline schedule, slack, and TDS
+    arrays instead of recomputing them. All exposed arrays are read-only by
+    convention.
+    """
+
+    def __init__(self, graph: TaskGraph, proc: ProcessorModel,
+                 cost: CostModel, cfg: StrategyConfig | None = None):
+        self.graph = graph
+        self.proc = proc
+        self.cost = cost
+        self.cfg = cfg or StrategyConfig()
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.graph.tasks)
+
+    @functools.cached_property
+    def durations(self) -> np.ndarray:
+        """Per-task top-gear durations."""
+        return self.cost.durations_top(self.graph, self.proc)
+
+    @functools.cached_property
+    def betas(self) -> np.ndarray:
+        """Per-task frequency sensitivity (beta) from the cost model."""
+        return np.asarray([self.cost.beta(t.kind) for t in self.graph.tasks])
+
+    @functools.cached_property
+    def baseline(self) -> Schedule:
+        """Pure peak-gear schedule with no overheads (the timing oracle).
+
+        Identical timing/energy to the `original` strategy's schedule, so
+        it doubles as the reference for slowdown/savings percentages.
+        """
+        return simulate(self.graph, self.proc, self.cost,
+                        StrategyPlan(
+                            name="baseline",
+                            task_segments=self.top_gear_segments(),
+                            idle_gear=self.proc.gears[0],
+                            per_task_overhead=np.zeros(self.n_tasks),
+                            hide_switch_in_wait=True))
+
+    @functools.cached_property
+    def slack(self) -> np.ndarray:
+        """Realized local slack on the baseline schedule."""
+        base = self.baseline
+        return schedule_slack(base.start, base.finish, self.graph,
+                              self.cost.comm_time(self.graph))
+
+    @functools.cached_property
+    def tds(self) -> TdsResult:
+        """Task Dependency Set analysis over the baseline schedule."""
+        base = self.baseline
+        return analyze_tds(self.graph, base.start, base.finish,
+                           self.cost.comm_time(self.graph),
+                           slack=self.slack)
+
+    # -- plan-construction helpers (vectorized) ---------------------------
+    def top_gear_segments(self) -> list[list]:
+        top = self.proc.gears[0]
+        return [[(top, float(d))] for d in self.durations]
+
+    def reclaimed_segments(self, usable_slack: np.ndarray,
+                           min_reclaim_s: np.ndarray | float) -> list[list]:
+        """Two-gear-split every task into its usable slack, batched.
+
+        Tasks whose usable slack is below `min_reclaim_s` (scalar or
+        per-task array) run flat-out at the top gear.
+        """
+        d = self.durations
+        reclaim = usable_slack >= min_reclaim_s
+        segs = two_gear_split_batch(self.proc, d,
+                                    np.where(reclaim, usable_slack, 0.0),
+                                    self.betas)
+        top = self.proc.gears[0]
+        for i in np.flatnonzero(~reclaim):
+            segs[i] = [(top, float(d[i]))]
+        return segs
 
 
-def _baseline_schedule(graph: TaskGraph, proc: ProcessorModel,
-                       cost: CostModel) -> Schedule:
-    """Pure peak-gear schedule with no overheads (the timing oracle)."""
-    plan = StrategyPlan(
-        name="baseline",
-        task_segments=_top_gear_segments(graph, proc, cost),
-        idle_gear=proc.gears[0],
-        per_task_overhead=np.zeros(len(graph.tasks)),
-        hide_switch_in_wait=True,
-    )
-    return simulate(graph, proc, cost, plan)
+@runtime_checkable
+class Strategy(Protocol):
+    """A named planner: consumes a shared PlanContext, emits a StrategyPlan."""
+
+    name: str
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan: ...
 
 
-def _reclaimed_segments(graph: TaskGraph, proc: ProcessorModel,
-                        cost: CostModel, base: Schedule,
-                        slack_use: float, min_reclaim_s: float) -> list[list]:
-    slack = schedule_slack(base.start, base.finish, graph,
-                           cost.comm_time(graph))
-    durs = cost.durations_top(graph, proc)
-    segs = []
-    for t in graph.tasks:
-        d = float(durs[t.tid])
-        s = float(slack[t.tid]) * slack_use
-        if s < min_reclaim_s:
-            segs.append([(proc.gears[0], d)])
-        else:
-            segs.append(two_gear_split(proc, d, s, cost.beta(t.kind)))
-    return segs
+_REGISTRY: dict[str, Strategy] = {}
+
+
+def register_strategy(cls: type) -> type:
+    """Class decorator: instantiate `cls` and register it under `cls.name`.
+
+    Re-registering a name replaces the previous strategy (latest wins), so
+    downstream code can override a built-in policy.
+    """
+    inst = cls()
+    if not isinstance(inst, Strategy):
+        raise TypeError(f"{cls!r} does not implement the Strategy protocol")
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; choose from "
+                         f"{registered_strategies()}") from None
+
+
+def registered_strategies() -> tuple[str, ...]:
+    """All registered strategy names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+@register_strategy
+class OriginalStrategy:
+    """Peak gear everywhere; the reference for savings/slowdown."""
+
+    name = "original"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        return StrategyPlan(self.name, ctx.top_gear_segments(),
+                            idle_gear=ctx.proc.gears[0],
+                            per_task_overhead=np.zeros(ctx.n_tasks),
+                            hide_switch_in_wait=True)
+
+
+@register_strategy
+class RaceToHaltStrategy:
+    """Compute at peak, halt at the lowest gear while idle (reactive)."""
+
+    name = "race_to_halt"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        return StrategyPlan(self.name, ctx.top_gear_segments(),
+                            idle_gear=ctx.proc.gears[-1],
+                            per_task_overhead=ctx.durations *
+                            ctx.cfg.monitor_overhead,
+                            hide_switch_in_wait=False)  # reactive wake-up
+
+
+@register_strategy
+class CpAwareStrategy:
+    """Online CP-aware slack reclamation (Adagio-style)."""
+
+    name = "cp_aware"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        cfg = ctx.cfg
+        segs = ctx.reclaimed_segments(ctx.slack * cfg.cp_aware_slack_use,
+                                      cfg.min_reclaim_s)
+        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+                            per_task_overhead=ctx.durations *
+                            cfg.cp_detect_overhead,
+                            hide_switch_in_wait=True)
+
+
+@register_strategy
+class AlgorithmicStrategy:
+    """The paper: offline slack reclamation from the known DAG."""
+
+    name = "algorithmic"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        cfg = ctx.cfg
+        segs = ctx.reclaimed_segments(ctx.slack * cfg.algorithmic_slack_use,
+                                      cfg.min_reclaim_s)
+        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+                            per_task_overhead=np.zeros(ctx.n_tasks),
+                            hide_switch_in_wait=True)
+
+
+@register_strategy
+class TxStrategy:
+    """Explicit TDS-driven plan: per-wait-class slack policy.
+
+    The TDS classification (see `core/tds.py`) splits each task's
+    reclaimable window by what bounds it:
+
+      * imbalance / communication slack -- the bound is a hole in the
+        rank's own schedule or a consumer that pays wire time anyway; TX
+        stretches into it fully, and because the transfer schedule is
+        statically known, it reclaims windows all the way down to a few
+        switch latencies (`tx_min_reclaim_switches`) instead of the
+        conservative global `min_reclaim_s` floor.
+      * panel slack -- the bound is the next panel factorization, i.e. the
+        iteration's critical path; TX reclaims only
+        `tx_panel_slack_use` of it so a cost-model error cannot delay the
+        panel, and pre-arms the up-switch (hide_switch_in_wait) so waking
+        costs nothing.
+
+    Waits themselves are handled as in the algorithmic plan: the rank is
+    scheduled to the lowest gear during them (idle_gear), with switches
+    hidden inside the wait -- the paper's scheduled-communication slowdown.
+    """
+
+    name = "tx"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        cfg = ctx.cfg
+        tds = ctx.tds
+        panel_bound = tds.slack_class == WAIT_PANEL
+        usable = tds.slack_s * np.where(panel_bound,
+                                        cfg.tx_panel_slack_use, 1.0)
+        threshold = np.where(
+            panel_bound, cfg.min_reclaim_s,
+            cfg.tx_min_reclaim_switches * ctx.proc.switch_latency_s)
+        segs = ctx.reclaimed_segments(usable, threshold)
+        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+                            per_task_overhead=np.zeros(ctx.n_tasks),
+                            hide_switch_in_wait=True)
 
 
 def make_plan(name: str, graph: TaskGraph, proc: ProcessorModel,
               cost: CostModel,
               cfg: StrategyConfig | None = None) -> StrategyPlan:
-    cfg = cfg or StrategyConfig()
-    n = len(graph.tasks)
-    top, low = proc.gears[0], proc.gears[-1]
-    durs = cost.durations_top(graph, proc)
+    """Plan a single strategy (one-shot convenience around the registry).
 
-    if name == "original":
-        return StrategyPlan("original", _top_gear_segments(graph, proc, cost),
-                            idle_gear=top,
-                            per_task_overhead=np.zeros(n),
-                            hide_switch_in_wait=True)
-
-    if name == "race_to_halt":
-        return StrategyPlan("race_to_halt",
-                            _top_gear_segments(graph, proc, cost),
-                            idle_gear=low,
-                            per_task_overhead=durs * cfg.monitor_overhead,
-                            hide_switch_in_wait=False)  # reactive wake-up
-
-    base = _baseline_schedule(graph, proc, cost)
-
-    if name == "cp_aware":
-        segs = _reclaimed_segments(graph, proc, cost, base,
-                                   cfg.cp_aware_slack_use, cfg.min_reclaim_s)
-        return StrategyPlan("cp_aware", segs, idle_gear=low,
-                            per_task_overhead=durs * cfg.cp_detect_overhead,
-                            hide_switch_in_wait=True)
-
-    if name == "algorithmic":
-        segs = _reclaimed_segments(graph, proc, cost, base,
-                                   cfg.algorithmic_slack_use,
-                                   cfg.min_reclaim_s)
-        return StrategyPlan("algorithmic", segs, idle_gear=low,
-                            per_task_overhead=np.zeros(n),
-                            hide_switch_in_wait=True)
-
-    raise ValueError(f"unknown strategy {name!r}; choose from {STRATEGIES}")
+    Evaluating several strategies on one graph? Build one `PlanContext`
+    and call each strategy's `.plan(ctx)` -- or use `evaluate_strategies`
+    -- so the baseline schedule/slack/TDS are computed once, not per call.
+    """
+    return get_strategy(name).plan(PlanContext(graph, proc, cost, cfg))
 
 
 @dataclasses.dataclass
@@ -142,14 +343,20 @@ def evaluate_strategies(graph: TaskGraph, proc: ProcessorModel,
                         names: tuple[str, ...] = STRATEGIES,
                         cfg: StrategyConfig | None = None,
                         ) -> dict[str, StrategyResult]:
+    """Simulate each named strategy; percentages are always vs `original`.
+
+    The reference is the context's baseline schedule (identical to the
+    `original` strategy's), simulated regardless of whether -- or where --
+    "original" appears in `names`.
+    """
+    ctx = PlanContext(graph, proc, cost, cfg)
+    ref = ctx.baseline
+    ref_time, ref_energy = ref.makespan, ref.total_energy_j()
     results: dict[str, StrategyResult] = {}
-    ref_time = ref_energy = None
     for name in names:
-        sched = simulate(graph, proc, cost, make_plan(name, graph, proc,
-                                                      cost, cfg))
+        sched = ref if name == "original" else \
+            simulate(graph, proc, cost, get_strategy(name).plan(ctx))
         t, e = sched.makespan, sched.total_energy_j()
-        if name == "original":
-            ref_time, ref_energy = t, e
         results[name] = StrategyResult(
             name=name, makespan_s=t, energy_j=e,
             avg_power_w=e / t if t else 0.0,

@@ -1,0 +1,202 @@
+"""Task Dependency Set (TDS) analysis: the paper's per-task wait taxonomy.
+
+TX (the paper's Section 3 mechanism) inspects, for every task of the
+statically known factorization DAG, its *Task Dependency Set* -- the tasks
+whose outputs it consumes -- and classifies the idle period the task induces
+on its rank before it can start:
+
+  * panel wait          -- the latest-arriving dependency is a panel-
+                           factorization task (POTRF/GETRF/GEQRT/TSQRT):
+                           the rank is stalled on the iteration's critical
+                           panel, the classic fork-join wait of right-
+                           looking factorizations.
+  * communication wait  -- the binding dependency's *output* was already
+                           computed when the rank went idle; the wait is
+                           (mostly) wire time for the cross-rank transfer.
+  * load-imbalance wait -- the binding producer was still computing when
+                           the rank ran out of work: the block-cyclic
+                           layout handed this rank less work this
+                           iteration.
+
+Symmetrically, each task's *reclaimable local slack* (the gap between its
+finish and the earliest moment anything -- a DAG consumer, the next task in
+its rank's program order, or the end of the schedule -- needs it) is
+classified by what bounds it, so a strategy can decide per class how
+aggressively to stretch:
+
+  * panel slack      -- bounded by a panel consumer: stretching eats
+                        directly into the next panel's start, so a plan
+                        that distrusts its cost model stays conservative
+                        and pre-arms the up-switch instead.
+  * comm slack       -- bounded by a cross-rank (non-panel) consumer:
+                        safe to fill, the consumer pays the wire delay
+                        anyway.
+  * imbalance slack  -- bounded only by the rank's own program order or
+                        the end of the schedule: the rank simply has a
+                        hole; fully reclaimable.
+
+Everything is computed in a handful of vectorized NumPy scatter passes over
+`TaskGraph`'s cached edge arrays -- no per-task Python loops -- and exposed
+as flat arrays (`wait_class`, `wait_s`, `slack_class`, `slack_s`,
+`binding_dep`, `binding_consumer`) that `core/strategies.py` consumes via
+`PlanContext.tds`. The classification is deterministic: the binding edge is
+the latest-arriving (waits) / tightest (slack) one, ties broken toward the
+highest task id, and class precedence is panel > comm/imbalance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .critical_path import schedule_slack
+from .dag import PANEL_KINDS, TaskGraph
+
+# Wait / slack classes (int8 codes in the result arrays).
+WAIT_NONE = 0        # no wait / no slack
+WAIT_PANEL = 1       # bound by a panel-factorization task
+WAIT_COMM = 2        # bound by cross-rank communication
+WAIT_IMBALANCE = 3   # bound by uneven work distribution / schedule end
+
+WAIT_CLASS_NAMES = ("none", "panel", "comm", "imbalance")
+
+_EPS = 1e-15         # same "is there a wait at all" threshold the engines use
+
+
+@dataclasses.dataclass
+class TdsResult:
+    """Per-task TDS arrays over one baseline schedule of a TaskGraph.
+
+    All arrays are indexed by task id. `wait_*` describe the idle gap on the
+    task's rank *before* the task starts; `slack_*` describe the reclaimable
+    window *after* it finishes.
+    """
+
+    graph: TaskGraph
+    comm_time: float
+    rank_ready: np.ndarray        # finish of the previous same-rank task (0 for rank heads)
+    wait_s: np.ndarray            # start - rank_ready, clipped at 0
+    wait_class: np.ndarray        # int8, WAIT_* code of the wait
+    binding_dep: np.ndarray       # tid of the latest-arriving dependency (-1: none)
+    slack_s: np.ndarray           # reclaimable local slack (schedule_slack)
+    slack_class: np.ndarray       # int8, WAIT_* code of the slack bound
+    binding_consumer: np.ndarray  # tid bounding the slack (-1: program order / makespan)
+
+    def dependency_set(self, tid: int) -> frozenset[int]:
+        """The task's TDS proper: ids of the tasks whose outputs it consumes."""
+        return frozenset(self.graph.tasks[tid].deps)
+
+    def dependency_counts(self) -> np.ndarray:
+        return np.asarray([len(t.deps) for t in self.graph.tasks],
+                          dtype=np.int64)
+
+    def _seconds_by_class(self, seconds: np.ndarray,
+                          cls: np.ndarray) -> dict[str, float]:
+        return {name: float(seconds[cls == code].sum())
+                for code, name in enumerate(WAIT_CLASS_NAMES)}
+
+    def wait_seconds_by_class(self) -> dict[str, float]:
+        """Total pre-task idle seconds attributed to each wait class."""
+        return self._seconds_by_class(self.wait_s, self.wait_class)
+
+    def slack_seconds_by_class(self) -> dict[str, float]:
+        """Total reclaimable slack seconds attributed to each class."""
+        return self._seconds_by_class(self.slack_s, self.slack_class)
+
+
+def _is_panel(graph: TaskGraph) -> np.ndarray:
+    return np.asarray([t.kind in PANEL_KINDS for t in graph.tasks],
+                      dtype=bool)
+
+
+def analyze_tds(graph: TaskGraph, start: np.ndarray, finish: np.ndarray,
+                comm_time: float = 0.0,
+                slack: np.ndarray | None = None) -> TdsResult:
+    """Classify every task's wait and slack on a concrete schedule.
+
+    `start`/`finish` are per-task times of a baseline (usually top-gear)
+    schedule; classification semantics assume ranks execute their tasks in
+    program order, as both simulator engines do. `slack` lets a caller that
+    already ran `schedule_slack` on this schedule (PlanContext) share it.
+    """
+    n = len(graph.tasks)
+    start = np.asarray(start, dtype=float)
+    finish = np.asarray(finish, dtype=float)
+    owner = np.asarray([t.owner for t in graph.tasks], dtype=np.int64)
+    panel = _is_panel(graph)
+    src, dst, cross = graph.dep_edge_arrays()
+    delay = np.where(cross, comm_time, 0.0)
+
+    # ---- waits: idle gap before each task ------------------------------
+    rank_ready = np.zeros(n)
+    prev, nxt = graph.rank_order_pairs()
+    if len(prev):
+        rank_ready[nxt] = finish[prev]
+    wait = np.maximum(start - rank_ready, 0.0)
+
+    # binding dependency: latest arrival; ties toward the highest tid for
+    # the representative, but a panel dep among the ties wins the *class*
+    binding_dep = np.full(n, -1, dtype=np.int64)
+    wait_class = np.zeros(n, dtype=np.int8)
+    panel_binds_wait = np.zeros(n, dtype=bool)
+    if len(src):
+        arrival = finish[src] + delay
+        max_arr = np.full(n, -np.inf)
+        np.maximum.at(max_arr, dst, arrival)
+        at_max = arrival == max_arr[dst]
+        np.maximum.at(binding_dep, dst[at_max], src[at_max])
+        pm = at_max & panel[src]
+        panel_binds_wait[dst[pm]] = True
+
+    waiting = wait > _EPS
+    has_dep = binding_dep >= 0
+    w = waiting & has_dep
+    if w.any():
+        b = binding_dep[w]
+        # how long the producer kept computing after this rank went idle,
+        # vs the wire time of the binding edge
+        busy_after_idle = finish[b] - rank_ready[w]
+        edge_delay = np.where(owner[b] != owner[w], comm_time, 0.0)
+        cls = np.where(busy_after_idle > edge_delay,
+                       WAIT_IMBALANCE, WAIT_COMM).astype(np.int8)
+        cls[panel_binds_wait[w]] = WAIT_PANEL
+        wait_class[w] = cls
+
+    # ---- slack: reclaimable window after each task ---------------------
+    if slack is None:
+        slack = schedule_slack(start, finish, graph, comm_time)
+    binding_consumer = np.full(n, -1, dtype=np.int64)
+    slack_class = np.zeros(n, dtype=np.int8)
+    has_slack = slack > _EPS
+    edge_cross = np.zeros(n, dtype=bool)
+    edge_panel = np.zeros(n, dtype=bool)
+    if len(src):
+        # same expression schedule_slack minimizes, so comparisons are exact
+        edge_slack = (start[dst] - delay) - finish[src]
+        sel = (edge_slack == slack[src]) & has_slack[src]
+        np.maximum.at(binding_consumer, src[sel], dst[sel])
+        edge_cross[src[sel & cross]] = True
+        edge_panel[src[sel & panel[dst]]] = True
+    # program order / makespan / same-rank edges (the latter tie with
+    # program order) -> the rank simply has a hole: imbalance; among tied
+    # binding edges, panel beats comm beats imbalance
+    slack_class[has_slack] = WAIT_IMBALANCE
+    slack_class[has_slack & edge_cross] = WAIT_COMM
+    slack_class[has_slack & edge_panel] = WAIT_PANEL
+
+    return TdsResult(graph=graph, comm_time=comm_time, rank_ready=rank_ready,
+                     wait_s=wait, wait_class=wait_class,
+                     binding_dep=binding_dep, slack_s=slack,
+                     slack_class=slack_class, binding_consumer=binding_consumer)
+
+
+def compute_tds(graph: TaskGraph, proc, cost) -> TdsResult:
+    """TDS analysis over the zero-overhead top-gear baseline schedule.
+
+    Convenience wrapper for callers without a `PlanContext` (which caches
+    the baseline schedule and this analysis; prefer `PlanContext.tds`).
+    """
+    from .strategies import PlanContext
+    ctx = PlanContext(graph, proc, cost)
+    return ctx.tds

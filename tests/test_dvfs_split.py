@@ -1,0 +1,116 @@
+"""Property tests for the Ishihara-Yasuura two-gear split (core/dvfs.py).
+
+Invariants checked over dense seeded sweeps of (duration, slack, beta) x
+every gear table (plus hypothesis-driven cases when it is installed):
+
+  * work conservation -- the segments perform exactly the task's work;
+  * total time <= d + slack, with equality whenever the slack is
+    reclaimable within the gear table's range (f_m >= f_min);
+  * the gears of a two-segment split are adjacent in the table;
+  * `two_gear_split_batch` reproduces the scalar function exactly
+    (identical gears and identical floats), per task.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dvfs import duration_at, two_gear_split, two_gear_split_batch
+from repro.core.energy_model import GEAR_TABLES, make_processor, make_tpu_like
+
+PROCS = [make_processor(name) for name in sorted(GEAR_TABLES)]
+ALL_PROCS = PROCS + [make_tpu_like()]
+
+
+def _sweep(seed=0, n=400):
+    rng = np.random.default_rng(seed)
+    d = np.concatenate([rng.uniform(1e-6, 10.0, n),
+                        [0.0, 1e-12, 1.0, 1.0, 5.0]])
+    s = np.concatenate([rng.uniform(0.0, 5.0, n),
+                        [1.0, 1.0, 0.0, 1e-16, 100.0]])
+    return d, s
+
+
+def _check_invariants(proc, d, s, beta, segs):
+    total_t = sum(t for _, t in segs)
+    assert total_t <= d + s + 1e-12
+    if d > 0.0:
+        # work conservation: per-segment work fractions sum to 1
+        work = sum(t / duration_at(d, proc.f_max, g.freq_ghz, beta)
+                   for g, t in segs)
+        assert work == pytest.approx(1.0, rel=1e-9)
+        # equality when the slack is reclaimable within the gear range
+        t_floor = duration_at(d, proc.f_max, proc.f_min, beta)
+        if s > 1e-15 and t_floor >= d + s:
+            assert total_t == pytest.approx(d + s, rel=1e-9)
+    if len(segs) == 2:
+        (g1, t1), (g2, t2) = segs
+        assert abs(g1.index - g2.index) == 1     # adjacent gears
+        assert g1.freq_ghz > g2.freq_ghz
+        assert t1 > 0.0 and t2 > 0.0
+    assert len(segs) <= 2
+
+
+@pytest.mark.parametrize("proc", ALL_PROCS, ids=lambda p: p.name)
+@pytest.mark.parametrize("beta", [1.0, 0.6])
+def test_two_gear_split_invariants(proc, beta):
+    d, s = _sweep()
+    for di, si in zip(d, s):
+        segs = two_gear_split(proc, float(di), float(si), beta)
+        _check_invariants(proc, float(di), float(si), beta, segs)
+
+
+@pytest.mark.parametrize("proc", ALL_PROCS, ids=lambda p: p.name)
+def test_batch_matches_scalar_exactly(proc):
+    d, s = _sweep(seed=7)
+    rng = np.random.default_rng(8)
+    for beta in (1.0, 0.5, rng.uniform(0.1, 1.0, len(d))):
+        batch = two_gear_split_batch(proc, d, s, beta)
+        assert len(batch) == len(d)
+        for i in range(len(d)):
+            bi = beta if np.isscalar(beta) else float(beta[i])
+            scalar = two_gear_split(proc, float(d[i]), float(s[i]), bi)
+            assert len(scalar) == len(batch[i]), i
+            for (g_a, t_a), (g_b, t_b) in zip(scalar, batch[i]):
+                assert g_a.index == g_b.index, i
+                assert t_a == t_b, i               # identical floats
+
+
+def test_batch_empty_and_degenerate():
+    proc = PROCS[0]
+    assert two_gear_split_batch(proc, np.zeros(0), np.zeros(0)) == []
+    out = two_gear_split_batch(proc, np.array([0.0, -1.0]),
+                               np.array([1.0, 1.0]))
+    assert out == [[], []]
+
+
+def test_single_gear_table_runs_flat():
+    tpu = make_tpu_like()
+    for segs in two_gear_split_batch(tpu, np.array([1.0, 2.0]),
+                                     np.array([0.5, 0.0])):
+        assert len(segs) == 1
+        assert segs[0][0].index == 0
+
+
+# ---------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # optional dev dependency (requirements-dev)
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(d=st.floats(1e-6, 10.0), slack_frac=st.floats(0.0, 4.0),
+           beta=st.floats(0.1, 1.0), proc_i=st.integers(0, len(PROCS) - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_two_gear_split_invariants_hypothesis(d, slack_frac, beta,
+                                                  proc_i):
+        proc = PROCS[proc_i]
+        s = d * slack_frac
+        segs = two_gear_split(proc, d, s, beta)
+        _check_invariants(proc, d, s, beta, segs)
+        batch = two_gear_split_batch(proc, np.array([d]), np.array([s]),
+                                     beta)[0]
+        assert len(batch) == len(segs)
+        for (g_a, t_a), (g_b, t_b) in zip(segs, batch):
+            assert g_a.index == g_b.index and t_a == t_b

@@ -6,8 +6,11 @@ the two implementations share no dispatch code, so agreement across
 randomized inputs is strong evidence of correctness. Three generators:
 
   * strategy cases    -- real factorization DAGs (cholesky/lu/qr), random
-                         tile counts, grids, and gear tables, through all
-                         four paper strategies (`make_plan`);
+                         tile counts, grids, and gear tables, through
+                         EVERY strategy in the registry (the paper's four
+                         plus `tx` and anything registered later --
+                         registering a strategy automatically enrolls it
+                         here: the differential-suite obligation);
   * random plans      -- adversarial StrategyPlans on factorization DAGs:
                          random per-task gear segments (including empty
                          segment lists), overheads, idle gears, and both
@@ -16,20 +19,29 @@ randomized inputs is strong evidence of correctness. Three generators:
                          need not look like a factorization at all.
 
 Agreement asserted to 1e-9 (relative) on makespan, total energy, and
-exactly on switch count and per-task start/finish times.
+exactly on switch count and per-task start/finish times. A golden corpus
+(tests/data/strategy_golden.json, recorded from the pre-registry seed
+implementation) additionally pins the four legacy strategies' makespan/
+energy/switch-count to the refactored planner's output.
 """
+
+import json
+import os
 
 import numpy as np
 import pytest
 
 from repro.core import (CostModel, GEAR_TABLES, StrategyPlan, build_dag,
-                        make_processor, make_plan, simulate,
-                        simulate_reference, STRATEGIES)
+                        make_processor, make_plan, registered_strategies,
+                        simulate, simulate_reference)
 from repro.core.dag import Task, TaskGraph
 
 FACTS = ("cholesky", "lu", "qr")
 GRIDS = ((1, 1), (1, 2), (2, 2), (2, 3), (4, 2), (3, 3))
 PROCS = tuple(sorted(GEAR_TABLES))
+ALL_STRATEGIES = registered_strategies()
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "strategy_golden.json")
 
 
 def assert_schedules_match(a, b, label=""):
@@ -53,9 +65,9 @@ def _random_graph_params(rng):
 
 
 # ------------------------------------------------------ strategy-level cases
-# 16 seeds x 4 strategies = 64 generated cases over cholesky/lu/qr.
+# 16 seeds x every registered strategy (>= 80 cases) over cholesky/lu/qr.
 @pytest.mark.parametrize("seed", range(16))
-@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
 def test_strategies_differential(seed, strategy):
     rng = np.random.default_rng(1000 + seed)
     name, n_tiles, tile, grid, proc_name = _random_graph_params(rng)
@@ -158,7 +170,7 @@ def test_single_task():
     graph = build_dag("cholesky", 1, 128, (1, 1))
     proc = make_processor("amd_opteron_2380")
     cost = CostModel()
-    for strategy in STRATEGIES:
+    for strategy in ALL_STRATEGIES:
         plan = make_plan(strategy, graph, proc, cost)
         assert_schedules_match(simulate(graph, proc, cost, plan),
                                simulate_reference(graph, proc, cost, plan),
@@ -170,10 +182,43 @@ def test_segment_columns_bit_identical():
     graph = build_dag("lu", 6, 128, (2, 2))
     proc = make_processor("arc_opteron_6128")
     cost = CostModel()
-    for strategy in STRATEGIES:
+    for strategy in ALL_STRATEGIES:
         plan = make_plan(strategy, graph, proc, cost)
         fast = simulate(graph, proc, cost, plan)
         ref = simulate_reference(graph, proc, cost, plan)
         for ca, cb in zip(fast.seg_columns, ref.seg_columns):
             for x, y in zip(ca, cb):
                 np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------------ registry coverage
+def test_registry_covers_legacy_and_tx():
+    """The randomized cases above parametrize over the live registry; this
+    pins the minimum population they must cover."""
+    for name in ("original", "race_to_halt", "cp_aware", "algorithmic", "tx"):
+        assert name in ALL_STRATEGIES
+
+
+# ------------------------------------------------------ golden corpus
+# Recorded from the seed (pre-registry if/elif) implementation: the
+# refactored planner must reproduce the legacy strategies' schedules.
+def _golden_cases():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", _golden_cases(),
+                         ids=lambda c: f"{c['fact']}-T{c['n_tiles']}-{c['proc']}")
+def test_legacy_strategies_match_seed_golden(case):
+    graph = build_dag(case["fact"], case["n_tiles"], case["tile"],
+                      tuple(case["grid"]))
+    proc = make_processor(case["proc"])
+    cost = CostModel()
+    for strategy, exp in case["results"].items():
+        sched = simulate(graph, proc, cost,
+                         make_plan(strategy, graph, proc, cost))
+        assert sched.switch_count == exp["switches"], strategy
+        assert sched.makespan == pytest.approx(exp["makespan"], rel=1e-9), \
+            strategy
+        assert sched.total_energy_j() == pytest.approx(exp["energy"],
+                                                       rel=1e-9), strategy

@@ -1,0 +1,208 @@
+"""Unit tests for the Task Dependency Set analysis (core/tds.py).
+
+Two layers:
+
+  * hand-checked classifications on tiny synthetic DAGs where the binding
+    dependency / consumer and the resulting wait/slack class are derivable
+    on paper;
+  * tiny real Cholesky/LU/QR graphs (T=2 on a (1,2) grid) where each
+    rank-1 head task's wait is forced by construction, plus structural
+    invariants on slightly larger graphs of all three factorizations.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, PlanContext, build_dag, make_processor,
+                        simulate)
+from repro.core.dag import Task, TaskGraph
+from repro.core.strategies import make_plan
+from repro.core.tds import (WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE, WAIT_PANEL,
+                            analyze_tds, compute_tds)
+
+PROC = make_processor("arc_opteron_6128")
+COST = CostModel()
+
+
+def _graph(tasks, grid=(1, 2)):
+    return TaskGraph("synthetic", n_tiles=2, tile_size=128, grid=grid,
+                     tasks=tasks)
+
+
+def _task(tid, kind, owner, flops, deps, tile):
+    return Task(tid=tid, kind=kind, k=0, i=tile[0], j=tile[1], owner=owner,
+                flops=flops, deps=deps, out_tile=tile)
+
+
+def _tds_of(graph, cost=COST):
+    base = simulate(graph, PROC, cost, make_plan("original", graph, PROC,
+                                                 cost))
+    return analyze_tds(graph, base.start, base.finish, cost.comm_time(graph))
+
+
+# --------------------------------------------------- hand-built wait classes
+def test_panel_wait_class():
+    """rank1's task waits on a cross-rank POTRF -> panel wait."""
+    g = _graph([
+        _task(0, "POTRF", 0, 1e9, [], (0, 0)),
+        _task(1, "TRSM", 1, 1e8, [0], (1, 0)),
+    ])
+    tds = _tds_of(g)
+    assert tds.wait_class[0] == WAIT_NONE
+    assert tds.wait_class[1] == WAIT_PANEL
+    assert tds.binding_dep[1] == 0
+    assert tds.wait_s[1] > 0.0
+
+
+def test_comm_wait_class():
+    """The producer finished while rank1 was still busy: the residual wait
+    is pure wire time -> communication wait."""
+    # rank0 and rank1 run equal-duration local tasks, so the producer is
+    # done exactly when rank1 goes idle: the whole wait is the transfer.
+    g = _graph([
+        _task(0, "GEMM", 0, 1e8, [], (0, 0)),      # producer on rank0
+        _task(1, "GEMM", 1, 1e8, [], (1, 1)),      # same duration on rank1
+        _task(2, "GEMM", 1, 1e8, [0, 1], (0, 1)),  # consumer on rank1
+    ])
+    tds = _tds_of(g)
+    assert tds.wait_class[2] == WAIT_COMM
+    assert tds.binding_dep[2] == 0
+    assert tds.wait_s[2] == pytest.approx(COST.comm_time(g), rel=1e-9)
+
+
+def test_imbalance_wait_class():
+    """rank1 runs out of work while the (non-panel) producer still
+    computes -> load-imbalance wait."""
+    g = _graph([
+        _task(0, "GEMM", 0, 1e10, [], (0, 0)),     # long producer
+        _task(1, "GEMM", 1, 1e8, [0], (1, 1)),     # rank1 idles from t=0
+    ])
+    tds = _tds_of(g)
+    assert tds.wait_class[1] == WAIT_IMBALANCE
+    assert tds.wait_s[1] > COST.comm_time(g)
+
+
+# --------------------------------------------------- hand-built slack classes
+def test_panel_slack_class():
+    """Early-finishing producer whose tightest consumer is a (late) panel
+    task -> panel-bound slack."""
+    g = _graph([
+        _task(0, "GEMM", 0, 1e8, [], (0, 0)),       # finishes early
+        _task(1, "GEMM", 1, 1e10, [], (1, 1)),      # delays the panel
+        _task(2, "POTRF", 1, 1e9, [0, 1], (0, 1)),  # panel consumer
+    ])
+    tds = _tds_of(g)
+    assert tds.slack_s[0] > 0.0
+    assert tds.slack_class[0] == WAIT_PANEL
+    assert tds.binding_consumer[0] == 2
+
+
+def test_comm_slack_class():
+    """Same shape with a non-panel cross-rank consumer -> comm slack."""
+    g = _graph([
+        _task(0, "GEMM", 0, 1e8, [], (0, 0)),
+        _task(1, "GEMM", 1, 1e10, [], (1, 1)),
+        _task(2, "SYRK", 1, 1e9, [0, 1], (0, 1)),
+    ])
+    tds = _tds_of(g)
+    assert tds.slack_s[0] > 0.0
+    assert tds.slack_class[0] == WAIT_COMM
+    assert tds.binding_consumer[0] == 2
+
+
+def test_imbalance_slack_class():
+    """A terminal task on an early-finishing rank stretches to the
+    makespan -> imbalance slack, no binding consumer."""
+    g = _graph([
+        _task(0, "GEMM", 0, 1e8, [], (0, 0)),      # rank0 done early
+        _task(1, "GEMM", 1, 1e10, [], (1, 1)),     # rank1 sets the makespan
+    ])
+    tds = _tds_of(g)
+    assert tds.slack_class[0] == WAIT_IMBALANCE
+    assert tds.binding_consumer[0] == -1
+    assert tds.slack_class[1] == WAIT_NONE         # defines the makespan
+
+
+# --------------------------------------------------- tiny real factorizations
+def test_cholesky_t2_hand_checked():
+    """T=2 Cholesky on (1,2): rank1's first task (SYRK) waits on the
+    cross-rank TRSM that is still computing when rank1 starts idle ->
+    imbalance; POTRF(1) follows its own rank's SYRK -> no wait."""
+    g = build_dag("cholesky", 2, 256, (1, 2))
+    kinds = {t.tid: (t.kind, t.owner) for t in g.tasks}
+    tds = compute_tds(g, PROC, COST)
+    (syrk,) = [t.tid for t in g.tasks if t.kind == "SYRK"]
+    (potrf1,) = [t.tid for t in g.tasks if t.kind == "POTRF" and t.k == 1]
+    assert kinds[syrk][1] == 1                    # block-cyclic: rank 1
+    assert tds.wait_class[syrk] == WAIT_IMBALANCE
+    assert g.tasks[tds.binding_dep[syrk]].kind == "TRSM"
+    assert tds.wait_class[potrf1] == WAIT_NONE
+
+
+def test_lu_t2_hand_checked():
+    """T=2 LU on (1,2): TRSM_ROW (rank1) waits on the cross-rank GETRF ->
+    panel wait; the GEMM's cross-rank input (TRSM_COL: equal duration,
+    started comm earlier than TRSM_ROW) arrives exactly at rank-ready ->
+    no wait."""
+    g = build_dag("lu", 2, 256, (1, 2))
+    tds = compute_tds(g, PROC, COST)
+    (trsm_row,) = [t.tid for t in g.tasks if t.kind == "TRSM_ROW"]
+    (gemm,) = [t.tid for t in g.tasks if t.kind == "GEMM"]
+    assert tds.wait_class[trsm_row] == WAIT_PANEL
+    assert g.tasks[tds.binding_dep[trsm_row]].kind == "GETRF"
+    # TRSM_ROW paid the GETRF broadcast delay before starting, so the
+    # TRSM_COL transfer fully overlaps rank1's own work: zero wait
+    assert tds.wait_class[gemm] == WAIT_NONE
+    assert tds.wait_s[gemm] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_qr_t2_hand_checked():
+    """T=2 QR on (1,2): UNMQR (rank1) waits on the cross-rank GEQRT ->
+    panel wait; SSRFB's binding dep is the slower TSQRT (also a panel
+    kind) -> panel wait."""
+    g = build_dag("qr", 2, 256, (1, 2))
+    tds = compute_tds(g, PROC, COST)
+    (unmqr,) = [t.tid for t in g.tasks if t.kind == "UNMQR"]
+    (ssrfb,) = [t.tid for t in g.tasks if t.kind == "SSRFB"]
+    assert tds.wait_class[unmqr] == WAIT_PANEL
+    assert g.tasks[tds.binding_dep[unmqr]].kind == "GEQRT"
+    assert tds.wait_class[ssrfb] == WAIT_PANEL
+    assert g.tasks[tds.binding_dep[ssrfb]].kind == "TSQRT"
+
+
+# --------------------------------------------------- structural invariants
+@pytest.mark.parametrize("fact", ["cholesky", "lu", "qr"])
+def test_tds_invariants(fact):
+    g = build_dag(fact, 6, 256, (2, 2))
+    ctx = PlanContext(g, PROC, COST)
+    tds = ctx.tds
+    n = len(g.tasks)
+    assert tds.wait_s.shape == tds.slack_s.shape == (n,)
+    assert np.all(tds.wait_s >= 0) and np.all(tds.slack_s >= 0)
+    assert set(np.unique(tds.wait_class)) <= {0, 1, 2, 3}
+    assert set(np.unique(tds.slack_class)) <= {0, 1, 2, 3}
+    # every classified wait has a binding dependency, and vice versa a
+    # zero wait is classified none
+    waiting = tds.wait_s > 1e-15
+    assert np.all(tds.binding_dep[waiting] >= 0)
+    assert np.all(tds.wait_class[~waiting] == WAIT_NONE)
+    assert np.all(tds.wait_class[waiting] != WAIT_NONE)
+    # binding deps really are dependencies
+    for tid in np.flatnonzero(waiting):
+        assert tds.binding_dep[tid] in tds.dependency_set(tid)
+    # slack matches PlanContext's (same baseline, same analysis)
+    np.testing.assert_array_equal(tds.slack_s, ctx.slack)
+    # wait seconds decompose the schedule's idle-before-task time exactly
+    base = ctx.baseline
+    total_wait = sum(tds.wait_seconds_by_class().values())
+    gaps = base.start - tds.rank_ready
+    assert total_wait == pytest.approx(float(np.maximum(gaps, 0.0).sum()))
+    # dependency sets are exactly the DAG's deps
+    assert tds.dependency_counts().sum() == sum(len(t.deps) for t in g.tasks)
+
+
+def test_empty_graph_tds():
+    g = TaskGraph("empty", 1, 128, (1, 1), [])
+    tds = analyze_tds(g, np.zeros(0), np.zeros(0), 1e-4)
+    assert len(tds.wait_s) == 0
+    assert tds.wait_seconds_by_class()["panel"] == 0.0
