@@ -9,6 +9,12 @@ A second table gives each factorization's TDS wait mix (panel / comm /
 imbalance idle fractions on the matching task DAG): the wait taxonomy that
 explains *why* the scaling curves flatten -- panel waits serialize, and the
 trailing-matrix imbalance grows with the tile count.
+
+A third table gives the per-kind gear-policy view (Costero-style): each
+factorization's task mix by gear class (panel / solve / update, with the
+gears its class table allows) and the realized savings of the
+`task_type_gears` asymmetric-table plan next to the unrestricted
+`algorithmic` plan and the `single_freq_opt` uniform-frequency bound.
 """
 
 from __future__ import annotations
@@ -22,7 +28,8 @@ import numpy as np
 from repro.core.dag import build_dag, factorization_flops
 from repro.core.energy_model import make_processor
 from repro.core.scheduler import CostModel
-from repro.core.tds import compute_tds
+from repro.core.strategies import StrategyConfig, evaluate_strategies
+from repro.core.tds import GEAR_CLASS_NAMES, compute_tds, task_gear_classes
 from repro.linalg.tiled import (dense_to_tiles, tiled_cholesky, tiled_lu,
                                 tiled_qr)
 
@@ -81,6 +88,31 @@ def run_tds_mix(n: int = SIZES[-1], tile: int = TILE, grid=TDS_GRID,
     return rows
 
 
+def run_kind_gears(n: int = SIZES[-1], tile: int = TILE, grid=TDS_GRID,
+                   proc_name: str = "arc_opteron_6128"):
+    """Per-kind gear rows: class task mix + asymmetric-table savings."""
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    cfg = StrategyConfig()
+    depth = cfg.kind_gear_depth
+    rows = []
+    for name in ("cholesky", "lu", "qr"):
+        graph = build_dag(name, n // tile, tile, grid)
+        classes = task_gear_classes(graph)
+        res = evaluate_strategies(
+            graph, proc, cost, cfg=cfg,
+            names=("original", "algorithmic", "task_type_gears",
+                   "single_freq_opt"))
+        row = {"factorization": name}
+        for code, cls in enumerate(GEAR_CLASS_NAMES):
+            row[f"{cls}_tasks"] = int((classes == code).sum())
+            row[f"{cls}_gears"] = len(proc.gear_prefix(depth[cls]))
+        for s in ("algorithmic", "task_type_gears", "single_freq_opt"):
+            row[f"saved_{s}_pct"] = res[s].energy_saved_pct
+        rows.append(row)
+    return rows
+
+
 def bench() -> tuple[list[str], dict]:
     rows = run()
     out = ["factorization,n,tile,seconds,gflops"]
@@ -99,6 +131,23 @@ def bench() -> tuple[list[str], dict]:
                    f"{r['total_wait_s']:.4f}")
         metrics[f"{r['factorization']}.panel_wait_frac"] = \
             round(r["panel_frac"], 3)
+    kind_rows = run_kind_gears()
+    out.append("factorization,panel_tasks/gears,solve_tasks/gears,"
+               "update_tasks/gears,saved_algorithmic_pct,"
+               "saved_task_type_gears_pct,saved_single_freq_opt_pct")
+    for r in kind_rows:
+        out.append(
+            f"{r['factorization']},"
+            f"{r['panel_tasks']}/{r['panel_gears']},"
+            f"{r['solve_tasks']}/{r['solve_gears']},"
+            f"{r['update_tasks']}/{r['update_gears']},"
+            f"{r['saved_algorithmic_pct']:.2f},"
+            f"{r['saved_task_type_gears_pct']:.2f},"
+            f"{r['saved_single_freq_opt_pct']:.2f}")
+        metrics[f"{r['factorization']}.task_type_gears.saved_pct"] = \
+            round(r["saved_task_type_gears_pct"], 3)
+        metrics[f"{r['factorization']}.single_freq_opt.saved_pct"] = \
+            round(r["saved_single_freq_opt_pct"], 3)
     return out, metrics
 
 

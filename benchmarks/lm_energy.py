@@ -6,6 +6,13 @@ This is the hardware-adaptation experiment of DESIGN.md S3.2: it shows the
 energy-saving *gap* between race-to-halt and (CP-aware/algorithmic) slack
 reclamation collapsing on voltage-flat silicon -- the paper's conclusion,
 measured on modern workloads.
+
+When no `results/roofline.json` has been generated (the dry-run + roofline
+pipeline needs real compile artifacts), the section falls back to the
+checked-in synthetic fixture `benchmarks/data/roofline_fixture.json` --
+seven hand-built (arch x shape) lane profiles spanning compute-, memory-,
+and collective-bound steps -- so the section always exercises in CI
+instead of silently no-opping.
 """
 
 from __future__ import annotations
@@ -19,11 +26,20 @@ from repro.core.energy_aware_step import (StepProfile, evaluate_step,
 
 ROOFLINE_JSON = os.path.join(os.path.dirname(__file__), "..",
                              "results", "roofline.json")
+FIXTURE_JSON = os.path.join(os.path.dirname(__file__), "data",
+                            "roofline_fixture.json")
 DEVICES = ("tpu_like", "amd_opteron_2218", "intel_core_i7_2760qm")
 
 
+def _resolve_path(path: str | None) -> str:
+    """Real roofline results when present, else the synthetic fixture."""
+    if path is not None:
+        return path
+    return ROOFLINE_JSON if os.path.exists(ROOFLINE_JSON) else FIXTURE_JSON
+
+
 def _profiles(path: str | None = None, mesh: str = "16x16"):
-    path = path or ROOFLINE_JSON
+    path = _resolve_path(path)
     if not os.path.exists(path):
         return []
     with open(path) as f:
@@ -60,7 +76,13 @@ def bench() -> tuple[list[str], dict]:
     if not rows:
         return (["# no roofline.json yet -- run the dry-run + roofline "
                  "first"], {"profiles": 0})
-    out = ["arch,shape,device,step_s,critical_lane,saved_race_to_halt_pct,"
+    synthetic = _resolve_path(None) == FIXTURE_JSON
+    out = []
+    if synthetic:
+        out.append("# synthetic fixture (benchmarks/data/"
+                   "roofline_fixture.json); run the dry-run + roofline "
+                   "pipeline for measured numbers")
+    out += ["arch,shape,device,step_s,critical_lane,saved_race_to_halt_pct,"
            "saved_cp_aware_pct,saved_algorithmic_pct,saved_tx_pct,"
            "gap_race_vs_algo_pct"]
     for r in rows:
@@ -71,7 +93,8 @@ def bench() -> tuple[list[str], dict]:
             f"{r['saved_algorithmic_pct']:.2f},"
             f"{r['saved_tx_pct']:.2f},"
             f"{r['gap_race_vs_algo_pct']:.3f}")
-    metrics = {"profiles": len(rows) // max(len(DEVICES), 1)}
+    metrics = {"profiles": len(rows) // max(len(DEVICES), 1),
+               "synthetic_fixture": synthetic}
     # aggregate: mean gap per device -- the paper's conclusion in one line
     for dev in DEVICES:
         gaps = [r["gap_race_vs_algo_pct"] for r in rows if r["device"] == dev]

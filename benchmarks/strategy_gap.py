@@ -10,7 +10,16 @@ advantage of slack reclamation over race-to-halt.
 A second sweep measures the same gap *simulated* rather than analytic: per
 gear table, a small Cholesky DAG is planned by the registry strategies
 (race_to_halt / algorithmic / tx) and the realized savings differences are
-reported -- the full-simulator counterpart of the closed-form terms."""
+reported -- the full-simulator counterpart of the closed-form terms.
+
+A third sweep is the cost-model noise study: `tx_online` plans from
+duration estimates perturbed by a relative error eps ~ U[-err, +err]
+(knobs: `StrategyConfig.tx_online_rel_err` sets the error magnitude,
+`StrategyConfig.tx_online_seed` the noise draw; this module sweeps
+`NOISE_LEVELS` x `NOISE_SEEDS` and reports the mean). The headline number
+per error level is *retention*: the fraction of perfect-knowledge TX
+savings the online planner still realizes once its mispredicted stretches
+are charged against the true task durations."""
 
 from __future__ import annotations
 
@@ -21,9 +30,14 @@ from repro.core.energy_model import (GEAR_TABLES, make_processor,
                                      max_slack_ratio, strategy_gap_terms,
                                      verify_worked_example)
 from repro.core.scheduler import CostModel
-from repro.core.strategies import evaluate_strategies
+from repro.core.strategies import StrategyConfig, evaluate_strategies
 
 SIM_STRATEGIES = ("race_to_halt", "algorithmic", "tx")
+
+# tx_online noise study: relative cost-model error levels and the seeds
+# averaged per level (see module docstring).
+NOISE_LEVELS = (0.0, 0.05, 0.10, 0.20, 0.40)
+NOISE_SEEDS = (0, 1, 2)
 
 
 def run():
@@ -57,6 +71,38 @@ def run_simulated(fact: str = "cholesky", n_tiles: int = 8, tile: int = 512,
     return rows
 
 
+def run_noise_sweep(fact: str = "cholesky", n_tiles: int = 8, tile: int = 512,
+                    grid=(2, 2), proc_name: str = "arc_opteron_6128",
+                    levels=NOISE_LEVELS, seeds=NOISE_SEEDS):
+    """Savings of tx_online vs perfect-knowledge tx per noise level.
+
+    Every (level, seed) cell replans with its own StrategyConfig (the
+    perturbed-duration baseline/slack/TDS is rebuilt from scratch) and is
+    simulated against the true durations; rows are per-level means.
+    """
+    graph = build_dag(fact, n_tiles, tile, grid)
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    tx_saved = evaluate_strategies(
+        graph, proc, cost, names=("original", "tx"))["tx"].energy_saved_pct
+    rows = []
+    for err in levels:
+        saved, slow = [], []
+        for seed in seeds:
+            cfg = StrategyConfig(tx_online_rel_err=err, tx_online_seed=seed)
+            r = evaluate_strategies(graph, proc, cost,
+                                    names=("original", "tx_online"),
+                                    cfg=cfg)["tx_online"]
+            saved.append(r.energy_saved_pct)
+            slow.append(r.slowdown_pct)
+        mean_saved = float(np.mean(saved))
+        rows.append({"rel_err": err, "saved_pct": mean_saved,
+                     "slowdown_pct": float(np.mean(slow)),
+                     "tx_saved_pct": tx_saved,
+                     "retention": mean_saved / tx_saved if tx_saved else 0.0})
+    return rows
+
+
 def bench() -> tuple[list[str], dict]:
     ex, rows = run()
     out = [f"# worked example ok: dEd={ex['dEd']:.4f} dEl={ex['dEl']:.4f}",
@@ -85,6 +131,18 @@ def bench() -> tuple[list[str], dict]:
                    f"{r['gap_algo_vs_race']:.3f},{r['gap_tx_vs_race']:.3f}")
         metrics[f"{r['processor']}.sim_gap_tx_vs_race"] = \
             round(r["gap_tx_vs_race"], 3)
+    # cost-model noise study: how much of TX survives online estimation
+    noise = run_noise_sweep()
+    out.append("tx_online_rel_err,saved_pct,slowdown_pct,tx_saved_pct,"
+               "retention")
+    for r in noise:
+        out.append(f"{r['rel_err']:.2f},{r['saved_pct']:.3f},"
+                   f"{r['slowdown_pct']:.3f},{r['tx_saved_pct']:.3f},"
+                   f"{r['retention']:.3f}")
+        metrics[f"tx_online.err{r['rel_err']:.2f}.saved_pct"] = \
+            round(r["saved_pct"], 3)
+        metrics[f"tx_online.err{r['rel_err']:.2f}.retention"] = \
+            round(r["retention"], 3)
     return out, metrics
 
 

@@ -52,6 +52,23 @@ print("  TDS slack classes (recl s):",
       {k: round(v, 3) for k, v in tds.slack_seconds_by_class().items()
        if k != "none"})
 
+# how much of TX survives an imperfect cost model (the tx_online rows
+# above used the default 10% relative error; sweep it here)
+print("\n=== tx_online: savings vs cost-model error ===")
+from repro.core.strategies import StrategyConfig  # noqa: E402
+tx_saved = None
+for err in (0.0, 0.1, 0.2, 0.4):
+    cfg = StrategyConfig(tx_online_rel_err=err)
+    r = evaluate_strategies(graph, proc, cost,
+                            names=("original", "tx_online"),
+                            cfg=cfg)["tx_online"]
+    if tx_saved is None:
+        tx_saved = r.energy_saved_pct          # err=0 == offline tx
+    keep = (r.energy_saved_pct / tx_saved) if tx_saved else 0.0
+    print(f"  rel_err {err:4.2f}: saved {r.energy_saved_pct:6.2f} %  "
+          f"slowdown {r.slowdown_pct:5.2f} %  "
+          f"(keeps {100.0 * keep:5.1f} % of offline TX)")
+
 # --------------------------------------------- the actual numerical kernel
 print("\n=== the same algorithm, numerically, on this host's devices ===")
 n_dev = jax.device_count()

@@ -35,10 +35,19 @@ for name, r in res.items():
           f"   slowdown {r.slowdown_pct:5.2f} %")
 
 # the TDS wait taxonomy behind the tx strategy's per-class gear policy
-tds = PlanContext(graph, proc, cost).tds
+ctx = PlanContext(graph, proc, cost)
+tds = ctx.tds
 print("  TDS wait classes (idle ms):",
       {k: round(v * 1e3, 1) for k, v in tds.wait_seconds_by_class().items()
        if k != "none"})
+
+# the task-type mix behind task_type_gears' asymmetric tables (panel /
+# solve / update tasks, each confined to its own slice of the gear ladder)
+from repro.core.tds import GEAR_CLASS_NAMES  # noqa: E402
+classes = ctx.gear_classes
+print("  task-type gear classes    :",
+      {name: int((classes == code).sum())
+       for code, name in enumerate(GEAR_CLASS_NAMES)})
 
 # ------------------------------------------------------------ 2. substrate
 print("\n=== 20 training steps of a reduced qwen2.5 config (CPU) ===")

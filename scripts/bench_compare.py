@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Diff two `benchmarks.run --json` files and gate perf regressions.
+
+    python scripts/bench_compare.py OLD.json NEW.json [--threshold 0.2]
+
+Compares every metric the two files share and exits nonzero when a gated
+metric regressed by more than --threshold (default 20%, relative to the
+old value):
+
+  * simulator speed  -- `sim_speed` keys ending in `.speedup` plus
+                        `worst_speedup` (higher is better). Speedups are
+                        wall-clock-derived and noisy across machines and
+                        loaded CI runners, so the gate for them is the
+                        repo's hard acceptance target (--speedup-floor,
+                        default 5.0, the >=5x sim_speed target), applied
+                        unconditionally: 9x -> 6x on a busy runner is
+                        noise (reported as drift), anything under 5x
+                        fails -- however small the relative drop, so the
+                        per-PR baseline refresh cannot ratchet below it.
+  * energy savings   -- any section metric whose key contains `saved`
+                        (strategy energy-savings percentages; higher is
+                        better, fully deterministic). Near-zero baselines
+                        are exempted by an absolute floor (--abs-floor,
+                        default 0.25 points) so noise around 0% cannot
+                        flap CI.
+
+Also fails if `sim_speed.all_agree` flipped from true to false (the
+engines disagreeing is a correctness red flag, not a perf regression).
+
+Non-gated metrics (timings, wait fractions, gflops) are reported as
+informational drift only. Metrics present in only one file are listed but
+never fail the gate: sections grow across PRs by design.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _flat_metrics(report: dict) -> dict[str, float]:
+    """{'section.key': value} for every numeric, non-timing metric."""
+    out: dict[str, float] = {}
+    for section, metrics in report.get("sections", {}).items():
+        for key, val in metrics.items():
+            if key == "seconds":
+                continue
+            if isinstance(val, bool) or not isinstance(val, (int, float)):
+                continue
+            out[f"{section}.{key}"] = float(val)
+    return out
+
+
+def _is_speedup(name: str) -> bool:
+    section, _, key = name.partition(".")
+    return section == "sim_speed" and (key.endswith(".speedup")
+                                       or key == "worst_speedup")
+
+
+def _gated(name: str) -> bool:
+    return _is_speedup(name) or "saved" in name.partition(".")[2]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="gate >threshold regressions between two BENCH_*.json")
+    ap.add_argument("old", help="previous trajectory file (BENCH_pr<N>.json)")
+    ap.add_argument("new", help="fresh benchmarks.run --json output")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed relative drop on gated metrics")
+    ap.add_argument("--abs-floor", type=float, default=0.25,
+                    help="ignore drops smaller than this many absolute "
+                         "points (de-noises near-zero savings)")
+    ap.add_argument("--speedup-floor", type=float, default=5.0,
+                    help="sim_speed speedup drops only fail when the new "
+                         "value is also below this hard target (timing "
+                         "noise across machines is otherwise expected)")
+    args = ap.parse_args()
+
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    old_m, new_m = _flat_metrics(old), _flat_metrics(new)
+
+    regressions: list[str] = []
+    drifts: list[str] = []
+    for name in sorted(old_m.keys() & new_m.keys()):
+        o, n = old_m[name], new_m[name]
+        drop = o - n
+        rel = drop / abs(o) if o else 0.0
+        line = f"{name}: {o:g} -> {n:g}"
+        if _is_speedup(name):
+            # hard floor, independent of the relative drop: a refreshed
+            # baseline must not let the target erode PR by PR
+            if n < args.speedup_floor:
+                regressions.append(
+                    f"{line}  (below the {args.speedup_floor:g}x target)")
+            elif drop > args.abs_floor and rel > args.threshold:
+                drifts.append(f"{line}  (timing noise, still >= "
+                              f"{args.speedup_floor:g}x)")
+            continue
+        if _gated(name):
+            if drop > args.abs_floor and rel > args.threshold:
+                regressions.append(f"{line}  (-{100 * rel:.1f}%)")
+            continue
+        if o and abs(rel) > args.threshold:
+            drifts.append(line)
+
+    agree_old = old.get("sections", {}).get("sim_speed", {}).get("all_agree")
+    agree_new = new.get("sections", {}).get("sim_speed", {}).get("all_agree")
+    if agree_old is True and agree_new is False:
+        regressions.append("sim_speed.all_agree: True -> False "
+                           "(engine disagreement)")
+
+    only_old = sorted(old_m.keys() - new_m.keys())
+    only_new = sorted(new_m.keys() - old_m.keys())
+    print(f"compared {len(old_m.keys() & new_m.keys())} shared metrics "
+          f"({args.old} vs {args.new})")
+    if only_old:
+        print(f"  dropped metrics ({len(only_old)}): "
+              + ", ".join(only_old[:8]) + ("..." if len(only_old) > 8 else ""))
+    if only_new:
+        print(f"  new metrics ({len(only_new)}): "
+              + ", ".join(only_new[:8]) + ("..." if len(only_new) > 8 else ""))
+    for line in drifts:
+        print(f"  drift (informational): {line}")
+    if regressions:
+        print(f"\nREGRESSIONS (> {100 * args.threshold:.0f}% drop):")
+        for line in regressions:
+            print(f"  {line}")
+        return 1
+    print("no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

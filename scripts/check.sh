@@ -2,8 +2,11 @@
 # One-stop verification entry point for PRs.
 #
 #   scripts/check.sh          tier-1 suite + simulator differential suite
+#                             + full benchmark run compared against the
+#                             committed BENCH_pr<N>.json trajectory
 #   scripts/check.sh --fast   skip tests marked `slow` (multi-device
-#                             subprocess runs take minutes)
+#                             subprocess runs take minutes) and the
+#                             benchmark-trajectory comparison
 #
 # Tier-1 (ROADMAP.md): PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
@@ -11,10 +14,18 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAST=0
 MARK=()
 if [[ "${1:-}" == "--fast" ]]; then
+    FAST=1
     MARK=(-m "not slow")
 fi
+
+# fail fast on collection errors before anything expensive runs (listing
+# suppressed on success, shown with the error on failure)
+echo "== collection preflight =="
+python -m pytest --co -q >/tmp/collect.log 2>&1 \
+    || { cat /tmp/collect.log; exit 1; }
 
 # differential suite runs as its own step below; keep tier-1 disjoint
 echo "== tier-1 test suite =="
@@ -24,5 +35,19 @@ python -m pytest -x -q --ignore=tests/test_scheduler_differential.py \
 echo "== scheduler differential suite =="
 python -m pytest -x -q tests/test_scheduler_differential.py
 
-echo "== simulator speedup benchmark (target >= 5x) =="
-python -m benchmarks.run --only sim_speed
+# benchmark trajectory: when a committed BENCH_pr<N>.json exists (and not
+# --fast), run the FULL suite once -- it includes sim_speed, so the
+# standalone speedup step would be a duplicate -- and gate >20% regressions
+# against the newest trajectory file. Otherwise just run sim_speed.
+prev=""
+if [[ "$FAST" -eq 0 ]]; then
+    prev=$(ls BENCH_pr*.json 2>/dev/null | sort -V | tail -1 || true)
+fi
+if [[ -n "$prev" ]]; then
+    echo "== full benchmark suite + trajectory vs $prev =="
+    python -m benchmarks.run --json /tmp/bench_head.json
+    python scripts/bench_compare.py "$prev" /tmp/bench_head.json
+else
+    echo "== simulator speedup benchmark (target >= 5x) =="
+    python -m benchmarks.run --only sim_speed
+fi

@@ -21,7 +21,7 @@ from .dag import (DAG_BUILDERS, PANEL_KINDS, TaskGraph, Task,
                   block_cyclic_owner, build_cholesky_dag, build_dag,
                   build_lu_dag, build_qr_dag, factorization_flops)
 from .dvfs import (duration_at, plan_energy_j, two_gear_split,
-                   two_gear_split_batch)
+                   two_gear_split_batch, two_gear_split_batch_by_table)
 from .energy_model import (GEAR_TABLES, Gear, ProcessorModel, make_processor,
                            make_tpu_like, max_slack_ratio, strategy_gap_terms,
                            verify_worked_example)
@@ -30,8 +30,10 @@ from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
 from .strategies import (STRATEGIES, PlanContext, Strategy, StrategyConfig,
                          StrategyResult, evaluate_strategies, get_strategy,
                          make_plan, register_strategy, registered_strategies)
-from .tds import (WAIT_CLASS_NAMES, WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE,
-                  WAIT_PANEL, TdsResult, analyze_tds, compute_tds)
+from .tds import (GEAR_CLASS_NAMES, GEAR_CLASS_PANEL, GEAR_CLASS_SOLVE,
+                  GEAR_CLASS_UPDATE, SOLVE_KINDS, WAIT_CLASS_NAMES,
+                  WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE, WAIT_PANEL,
+                  TdsResult, analyze_tds, compute_tds, task_gear_classes)
 
 __all__ = [
     "CpResult", "cp_analysis", "schedule_slack",
@@ -39,6 +41,7 @@ __all__ = [
     "build_cholesky_dag", "build_dag", "build_lu_dag", "build_qr_dag",
     "factorization_flops",
     "duration_at", "plan_energy_j", "two_gear_split", "two_gear_split_batch",
+    "two_gear_split_batch_by_table",
     "GEAR_TABLES", "Gear", "ProcessorModel", "make_processor",
     "make_tpu_like", "max_slack_ratio", "strategy_gap_terms",
     "verify_worked_example",
@@ -47,6 +50,9 @@ __all__ = [
     "STRATEGIES", "PlanContext", "Strategy", "StrategyConfig",
     "StrategyResult", "evaluate_strategies", "get_strategy", "make_plan",
     "register_strategy", "registered_strategies",
+    "GEAR_CLASS_NAMES", "GEAR_CLASS_PANEL", "GEAR_CLASS_SOLVE",
+    "GEAR_CLASS_UPDATE", "SOLVE_KINDS",
     "WAIT_CLASS_NAMES", "WAIT_COMM", "WAIT_IMBALANCE", "WAIT_NONE",
     "WAIT_PANEL", "TdsResult", "analyze_tds", "compute_tds",
+    "task_gear_classes",
 ]

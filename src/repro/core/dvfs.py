@@ -11,13 +11,24 @@ Frequency sensitivity: a task's runtime does not always scale 1/f (memory-
 bound phases don't). We model d(f) = d_h * (beta * f_h / f + (1 - beta))
 with beta = 1 for compute-bound kernels (the paper's assumption) and
 beta < 1 available for memory-bound kinds.
+
+Asymmetric gear tables (Costero et al.): every split function accepts an
+optional `gears` subsequence of the processor's ladder -- the gears a task
+of a given type is *allowed* to use. Durations stay referenced to the full
+processor's top gear (`proc.f_max`); a restricted table whose fastest gear
+is slower than f_max therefore overruns the task's nominal window, which is
+exactly the big.LITTLE semantics: a task pinned to the LITTLE cluster runs
+slow regardless of slack. `two_gear_split_batch_by_table` dispatches a
+whole graph through per-task-type tables in one pass per table.
 """
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
-from .energy_model import Gear, ProcessorModel
+from .energy_model import Gear, ProcessorModel, bracketing_gears_in
 
 Segment = tuple[Gear, float]      # (gear, seconds)
 
@@ -30,35 +41,52 @@ def duration_at(d_top: float, f_top: float, f: float, beta: float = 1.0) -> floa
 
 
 def two_gear_split(proc: ProcessorModel, d_top: float, slack: float,
-                   beta: float = 1.0) -> list[Segment]:
+                   beta: float = 1.0,
+                   gears: tuple[Gear, ...] | None = None) -> list[Segment]:
     """Frequency plan filling [0, d_top + slack] with the least energy.
 
     Returns a list of (gear, seconds) segments whose total *work* equals the
     task and whose total time is <= d_top + slack (equality when the slack
     is reclaimable within the gear table's range).
+
+    `gears` restricts the plan to a subsequence of the processor's ladder
+    (asymmetric per-task-type tables); `d_top` is always referenced to the
+    full processor's top gear. A restricted table whose fastest gear is
+    below `proc.f_max` overruns `d_top + slack` when the slack is smaller
+    than the forced slowdown -- the caller opted that task type into the
+    slow cluster.
     """
-    top = proc.gears[0]
+    if gears is None:
+        gears = proc.gears
+    top = gears[0]
+    f_ref = proc.f_max            # the frequency d_top is measured at
     if d_top <= 0.0:
         return []
+    d_at_top = d_top if top.freq_ghz == f_ref else \
+        duration_at(d_top, f_ref, top.freq_ghz, beta)
     if slack <= 1e-15:
-        return [(top, d_top)]
+        return [(top, d_at_top)]
     target = d_top + slack
-    # time the task would take entirely at the lowest gear
-    t_floor = duration_at(d_top, top.freq_ghz, proc.f_min, beta)
+    if target <= d_at_top + 1e-15:
+        # the restricted table's fastest gear already fills (or overruns)
+        # the window: nothing to split
+        return [(top, d_at_top)]
+    # time the task would take entirely at the table's lowest gear
+    t_floor = duration_at(d_top, f_ref, gears[-1].freq_ghz, beta)
     if t_floor <= target + 1e-15:
-        # even the lowest gear cannot absorb all the slack: run at f_min,
-        # residual slack stays idle (the caller halts during it).
-        return [(proc.gears[-1], t_floor)]
+        # even the lowest gear cannot absorb all the slack: run at the
+        # floor, residual slack stays idle (the caller halts during it).
+        return [(gears[-1], t_floor)]
     # effective continuous frequency that lands exactly on target
     # beta*f_h/f + (1-beta) = target/d_top  =>  f = beta*f_h / (target/d - (1-beta))
     denom = target / d_top - (1.0 - beta)
-    f_m = beta * top.freq_ghz / denom
-    g_hi, g_lo = proc.bracketing_gears(f_m)
+    f_m = beta * f_ref / denom
+    g_hi, g_lo = bracketing_gears_in(gears, f_m)
     if g_hi.index == g_lo.index:
-        return [(g_hi, duration_at(d_top, top.freq_ghz, g_hi.freq_ghz, beta))]
+        return [(g_hi, duration_at(d_top, f_ref, g_hi.freq_ghz, beta))]
     # split work fraction w at g_hi, (1-w) at g_lo so total time == target
-    t_hi_full = duration_at(d_top, top.freq_ghz, g_hi.freq_ghz, beta)
-    t_lo_full = duration_at(d_top, top.freq_ghz, g_lo.freq_ghz, beta)
+    t_hi_full = duration_at(d_top, f_ref, g_hi.freq_ghz, beta)
+    t_lo_full = duration_at(d_top, f_ref, g_lo.freq_ghz, beta)
     w = (target - t_lo_full) / (t_hi_full - t_lo_full)
     w = min(max(w, 0.0), 1.0)
     segs: list[Segment] = []
@@ -71,7 +99,8 @@ def two_gear_split(proc: ProcessorModel, d_top: float, slack: float,
 
 def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
                          slack: np.ndarray,
-                         beta: np.ndarray | float = 1.0
+                         beta: np.ndarray | float = 1.0,
+                         gears: tuple[Gear, ...] | None = None
                          ) -> list[list[Segment]]:
     """Vectorized `two_gear_split` over arrays of tasks.
 
@@ -81,25 +110,33 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
     the same first-match rule). The per-strategy plan builders call this
     once per graph instead of looping `two_gear_split` per task; the only
     remaining Python loop assembles the output lists from precomputed
-    arrays.
+    arrays. `gears` restricts the whole batch to a subtable, as in the
+    scalar function.
     """
+    if gears is None:
+        gears = proc.gears
     d = np.asarray(d_top, dtype=float)
     s = np.asarray(slack, dtype=float)
     b = np.broadcast_to(np.asarray(beta, dtype=float), d.shape)
     n = len(d)
-    gears = proc.gears
     top = gears[0]
-    f_top = top.freq_ghz
+    f_ref = proc.f_max
     freqs = np.asarray([g.freq_ghz for g in gears])
     target = d + s
+    if top.freq_ghz == f_ref:
+        d_at_top = d
+    else:
+        d_at_top = d * (b * f_ref / top.freq_ghz + (1.0 - b))
 
     empty = d <= 0.0
     flat = ~empty & (s <= 1e-15)
     live = ~empty & ~flat
+    overrun = live & (target <= d_at_top + 1e-15)
+    live = live & ~overrun
     with np.errstate(divide="ignore", invalid="ignore"):
-        t_floor = d * (b * f_top / proc.f_min + (1.0 - b))
+        t_floor = d * (b * f_ref / freqs[-1] + (1.0 - b))
         denom = target / d - (1.0 - b)
-        f_m = b * f_top / denom
+        f_m = b * f_ref / denom
     floor = live & (t_floor <= target + 1e-15)
     split = live & ~floor
 
@@ -116,8 +153,8 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
 
     single = split & (hi_idx == lo_idx)
     with np.errstate(divide="ignore", invalid="ignore"):
-        t_hi_full = d * (b * f_top / freqs[hi_idx] + (1.0 - b))
-        t_lo_full = d * (b * f_top / freqs[lo_idx] + (1.0 - b))
+        t_hi_full = d * (b * f_ref / freqs[hi_idx] + (1.0 - b))
+        t_lo_full = d * (b * f_ref / freqs[lo_idx] + (1.0 - b))
         w = (target - t_lo_full) / (t_hi_full - t_lo_full)
     w = np.clip(w, 0.0, 1.0)
     w_rem = 1.0 - w
@@ -129,8 +166,8 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
     for i in range(n):
         if empty[i]:
             out.append([])
-        elif flat[i]:
-            out.append([(top, float(d[i]))])
+        elif flat[i] or overrun[i]:
+            out.append([(top, float(d_at_top[i]))])
         elif floor[i]:
             out.append([(low_gear, float(t_floor[i]))])
         elif single[i]:
@@ -142,6 +179,38 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
             if w_rem[i] > 1e-12:
                 segs.append((gears[int(lo_idx[i])], float(t_lo[i])))
             out.append(segs)
+    return out
+
+
+def two_gear_split_batch_by_table(proc: ProcessorModel, d_top: np.ndarray,
+                                  slack: np.ndarray,
+                                  beta: np.ndarray | float,
+                                  table_ids: np.ndarray,
+                                  tables: Sequence[tuple[Gear, ...]]
+                                  ) -> list[list[Segment]]:
+    """Per-task asymmetric gear tables: task i may only use tables[table_ids[i]].
+
+    One `two_gear_split_batch` call per distinct table (a handful, e.g.
+    panel/solve/update classes), scattered back into task order; each task's
+    segments are exactly what the scalar `two_gear_split` with its table
+    would produce.
+    """
+    d = np.asarray(d_top, dtype=float)
+    s = np.asarray(slack, dtype=float)
+    b = np.broadcast_to(np.asarray(beta, dtype=float), d.shape)
+    ids = np.asarray(table_ids)
+    if ids.shape != d.shape:
+        raise ValueError("table_ids must have one entry per task")
+    if len(d) and (ids.min() < 0 or ids.max() >= len(tables)):
+        raise ValueError(f"table_ids out of range [0, {len(tables)})")
+    out: list[list[Segment]] = [[] for _ in range(len(d))]
+    for t, table in enumerate(tables):
+        sel = np.flatnonzero(ids == t)
+        if not len(sel):
+            continue
+        sub = two_gear_split_batch(proc, d[sel], s[sel], b[sel], gears=table)
+        for j, i in enumerate(sel):
+            out[i] = sub[j]
     return out
 
 

@@ -64,6 +64,24 @@ class Gear:
     voltage: float
 
 
+def bracketing_gears_in(gears: Sequence[Gear],
+                        freq_ghz: float) -> tuple[Gear, Gear]:
+    """Adjacent gears of a descending table with g_lo.f <= freq <= g_hi.f.
+
+    Clamps to the table's ends. Shared by `ProcessorModel.bracketing_gears`
+    (full ladder) and the dvfs split functions (asymmetric subtables), so
+    the first-match rule cannot diverge between the two paths.
+    """
+    if freq_ghz >= gears[0].freq_ghz:
+        return gears[0], gears[0]
+    if freq_ghz <= gears[-1].freq_ghz:
+        return gears[-1], gears[-1]
+    for hi, lo in zip(gears[:-1], gears[1:]):
+        if lo.freq_ghz <= freq_ghz <= hi.freq_ghz:
+            return hi, lo
+    return gears[0], gears[-1]
+
+
 @dataclasses.dataclass(frozen=True)
 class ProcessorModel:
     """Per-node power model with a discrete DVFS gear table."""
@@ -97,16 +115,38 @@ class ProcessorModel:
                 return g
         return self.gears[0]
 
+    def gear_subtable(self, indices: Sequence[int]) -> tuple[Gear, ...]:
+        """An asymmetric (per-task-type) table: the gears at `indices`.
+
+        Indices must be strictly increasing positions into `self.gears`
+        (which is descending in frequency), so the subtable is itself a
+        valid descending ladder whose Gear objects keep their original
+        indices -- the simulator's power/switch lookups stay valid.
+        """
+        idx = tuple(indices)
+        if not idx:
+            raise ValueError("a gear subtable needs at least one gear")
+        if any(i < 0 or i >= len(self.gears) for i in idx):
+            raise ValueError(f"gear index out of range [0, {len(self.gears)})")
+        if any(a >= b for a, b in zip(idx, idx[1:])):
+            raise ValueError("gear indices must be strictly increasing")
+        return tuple(self.gears[i] for i in idx)
+
+    def gear_prefix(self, depth: float) -> tuple[Gear, ...]:
+        """The top portion of the ladder, by fractional depth.
+
+        depth 0.0 -> top gear only (latency-critical task types stay on the
+        'big' operating points); depth 1.0 -> the full table. Intermediate
+        depths round to the nearest ladder position.
+        """
+        if not 0.0 <= depth <= 1.0:
+            raise ValueError(f"depth must be in [0, 1], got {depth}")
+        k = 1 + int(round(depth * (len(self.gears) - 1)))
+        return self.gears[:k]
+
     def bracketing_gears(self, freq_ghz: float) -> tuple[Gear, Gear]:
         """Adjacent gears (g_hi, g_lo) with g_lo.f <= freq <= g_hi.f."""
-        if freq_ghz >= self.f_max:
-            return self.gears[0], self.gears[0]
-        if freq_ghz <= self.f_min:
-            return self.gears[-1], self.gears[-1]
-        for hi, lo in zip(self.gears[:-1], self.gears[1:]):
-            if lo.freq_ghz <= freq_ghz <= hi.freq_ghz:
-                return hi, lo
-        return self.gears[0], self.gears[-1]
+        return bracketing_gears_in(self.gears, freq_ghz)
 
     # -- power -------------------------------------------------------------
     def core_dynamic_w(self, gear: Gear, active: bool) -> float:

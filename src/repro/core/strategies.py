@@ -15,6 +15,19 @@ Built-in strategies:
                       cost model: zero runtime detection overhead, gear
                       switches pre-armed during waits (no wake-up stall),
                       plus scheduled-communication low gear during waits.
+ * task_type_gears -- per-task-type gear policy on asymmetric gear tables
+                      (Costero et al.): panel / solve / update task classes
+                      each reclaim slack within their own slice of the
+                      ladder (`kind_gear_depth`), so latency-critical kinds
+                      are robust by construction.
+ * single_freq_opt -- optimal single-frequency selection (Rizvandi et
+                      al.): the energy-minimizing uniform gear under a
+                      makespan bound, swept over the table with the fast
+                      engine pricing communication and switch stalls.
+ * tx_online       -- TX planned from noise-perturbed duration estimates
+                      (seeded, `tx_online_rel_err`) but realized on the
+                      true work: quantifies how much of TX's savings
+                      survive an imperfect cost model.
  * tx              -- the paper's TDS mechanism made explicit: classify
                       every wait/slack window via `core/tds.py` (panel /
                       communication / load imbalance) and apply a per-class
@@ -54,16 +67,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Protocol, runtime_checkable
+from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from .critical_path import schedule_slack
 from .dag import TaskGraph
-from .dvfs import two_gear_split_batch
+from .dvfs import two_gear_split_batch, two_gear_split_batch_by_table
 from .energy_model import ProcessorModel
 from .scheduler import CostModel, Schedule, StrategyPlan, simulate
-from .tds import WAIT_PANEL, TdsResult, analyze_tds
+from .tds import (GEAR_CLASS_NAMES, WAIT_PANEL, TdsResult, analyze_tds,
+                  task_gear_classes)
 
 # The four strategies the paper evaluates (fixed, used by the paper-table
 # benchmarks); `registered_strategies()` additionally includes `tx` and any
@@ -91,6 +105,21 @@ class StrategyConfig:
     # tx: comm/imbalance slack is reclaimed down to this many switch
     # latencies (the wait is scheduled, so even short windows pay off)
     tx_min_reclaim_switches: float = 4.0
+    # task_type_gears: ladder depth allowed per gear class (Costero-style
+    # asymmetric tables). 0.0 = top gear only, 1.0 = the full table; keys
+    # are `tds.GEAR_CLASS_NAMES`. Panel tasks stay on the fast operating
+    # points (they bound every iteration), solves get the upper half,
+    # trailing updates may stretch through the whole ladder.
+    kind_gear_depth: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {"panel": 0.0, "solve": 0.5, "update": 1.0})
+    # single_freq_opt: makespan bound as a fraction over the baseline
+    # (Rizvandi-style optimal uniform frequency under a deadline)
+    single_freq_slowdown_cap: float = 0.05
+    # tx_online: relative cost-model error of the planner's duration
+    # estimates (uniform in [-err, +err], per task; must be in [0, 1) so
+    # an estimate can never go non-positive) and the noise seed
+    tx_online_rel_err: float = 0.10
+    tx_online_seed: int = 0
 
 
 class PlanContext:
@@ -123,6 +152,23 @@ class PlanContext:
     def betas(self) -> np.ndarray:
         """Per-task frequency sensitivity (beta) from the cost model."""
         return np.asarray([self.cost.beta(t.kind) for t in self.graph.tasks])
+
+    @functools.cached_property
+    def gear_classes(self) -> np.ndarray:
+        """Per-task gear-class codes (panel / solve / update)."""
+        return task_gear_classes(self.graph)
+
+    def with_durations(self, durations: np.ndarray) -> "PlanContext":
+        """A sibling context whose baseline/slack/TDS derive from the given
+        durations instead of the cost model's.
+
+        This is how an *online* planner with an imperfect cost model is
+        expressed: plan against the estimated durations, then realize the
+        chosen gears on the true work (see `TxOnlineStrategy`).
+        """
+        ctx = PlanContext(self.graph, self.proc, self.cost, self.cfg)
+        ctx.__dict__["durations"] = np.asarray(durations, dtype=float)
+        return ctx
 
     @functools.cached_property
     def baseline(self) -> Schedule:
@@ -160,17 +206,26 @@ class PlanContext:
         return [[(top, float(d))] for d in self.durations]
 
     def reclaimed_segments(self, usable_slack: np.ndarray,
-                           min_reclaim_s: np.ndarray | float) -> list[list]:
+                           min_reclaim_s: np.ndarray | float,
+                           tables: Sequence[tuple] | None = None,
+                           table_ids: np.ndarray | None = None) -> list[list]:
         """Two-gear-split every task into its usable slack, batched.
 
         Tasks whose usable slack is below `min_reclaim_s` (scalar or
-        per-task array) run flat-out at the top gear.
+        per-task array) run flat-out at the top gear. With `tables` +
+        `table_ids` (asymmetric per-task-type gear tables), every task --
+        including the non-reclaimed ones -- is confined to its table, so a
+        task type pinned below the processor's top gear runs slow even
+        with zero slack (the big.LITTLE semantics).
         """
         d = self.durations
         reclaim = usable_slack >= min_reclaim_s
-        segs = two_gear_split_batch(self.proc, d,
-                                    np.where(reclaim, usable_slack, 0.0),
-                                    self.betas)
+        gated = np.where(reclaim, usable_slack, 0.0)
+        if tables is not None:
+            return two_gear_split_batch_by_table(self.proc, d, gated,
+                                                 self.betas, table_ids,
+                                                 tables)
+        segs = two_gear_split_batch(self.proc, d, gated, self.betas)
         top = self.proc.gears[0]
         for i in np.flatnonzero(~reclaim):
             segs[i] = [(top, float(d[i]))]
@@ -309,6 +364,136 @@ class TxStrategy:
             panel_bound, cfg.min_reclaim_s,
             cfg.tx_min_reclaim_switches * ctx.proc.switch_latency_s)
         segs = ctx.reclaimed_segments(usable, threshold)
+        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+                            per_task_overhead=np.zeros(ctx.n_tasks),
+                            hide_switch_in_wait=True)
+
+
+@register_strategy
+class TaskTypeGearsStrategy:
+    """Per-task-type gear policy on asymmetric gear tables (Costero et al.).
+
+    Asymmetric architectures (and policy-restricted DVFS domains) give each
+    task *type* its own operating-point table rather than one global
+    ladder. This strategy reclaims slack exactly like the algorithmic plan
+    but confines every task to its class's table
+    (`StrategyConfig.kind_gear_depth`, resolved through
+    `ProcessorModel.gear_prefix`):
+
+      * panel tasks   -- fast gears only: they bound each iteration, so a
+                         mispredicted stretch would serialize the whole
+                         factorization; restricting the table makes the
+                         plan robust by construction rather than by a
+                         slack-fraction guard band.
+      * solve tasks   -- the upper half of the ladder.
+      * update tasks  -- the full ladder: abundant, off-critical-path
+                         GEMM-like work is where deep downshifts pay.
+
+    Segments come from `two_gear_split_batch_by_table`: one batched split
+    per class table, exact scalar parity.
+    """
+
+    name = "task_type_gears"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        cfg = ctx.cfg
+        tables = tuple(ctx.proc.gear_prefix(cfg.kind_gear_depth[name])
+                       for name in GEAR_CLASS_NAMES)
+        segs = ctx.reclaimed_segments(
+            ctx.slack * cfg.algorithmic_slack_use, cfg.min_reclaim_s,
+            tables=tables, table_ids=ctx.gear_classes)
+        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+                            per_task_overhead=np.zeros(ctx.n_tasks),
+                            hide_switch_in_wait=True)
+
+
+@register_strategy
+class SingleFreqOptStrategy:
+    """Optimal single-frequency selection (Rizvandi et al.).
+
+    The degenerate-but-strong baseline for any per-task policy: run *every*
+    task at one uniform gear, chosen to minimize total energy subject to a
+    makespan bound (`single_freq_slowdown_cap` over the context's
+    baseline). The candidate durations for all gears are built in one
+    vectorized (n_gears x n_tasks) expression -- no per-task Python loops --
+    and each candidate plan is scored with the fast event-driven engine, so
+    communication (which does not scale with frequency) and visible switch
+    stalls are priced exactly rather than via the linear-scaling
+    approximation. The top gear is always feasible (it reproduces the
+    baseline makespan), so the sweep never comes back empty.
+    """
+
+    name = "single_freq_opt"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        proc = ctx.proc
+        cap = ctx.baseline.makespan * (1.0 + ctx.cfg.single_freq_slowdown_cap)
+        freqs = np.asarray([g.freq_ghz for g in proc.gears])
+        # durations of every task at every gear: (n_gears, n_tasks)
+        durs = ctx.durations[None, :] * (
+            ctx.betas[None, :] * proc.f_max / freqs[:, None]
+            + (1.0 - ctx.betas[None, :]))
+        best: tuple[float, StrategyPlan] | None = None
+        for gi, gear in enumerate(proc.gears):
+            cand = StrategyPlan(
+                self.name,
+                [[(gear, float(t))] for t in durs[gi]],
+                idle_gear=proc.gears[-1],
+                per_task_overhead=np.zeros(ctx.n_tasks),
+                hide_switch_in_wait=True)
+            sched = simulate(ctx.graph, proc, ctx.cost, cand)
+            energy = sched.total_energy_j()
+            if sched.makespan <= cap + 1e-12 and \
+                    (best is None or energy < best[0]):
+                best = (energy, cand)
+        assert best is not None    # the top gear meets the bound
+        return best[1]
+
+
+@register_strategy
+class TxOnlineStrategy:
+    """TX planned from noise-perturbed duration estimates (online variant).
+
+    Quantifies how much of TX's savings survive an imperfect cost model:
+    the planner sees durations d * (1 + eps), eps ~ U[-rel_err, +rel_err]
+    (seeded, deterministic), computes the baseline schedule / slack / TDS
+    *from those estimates*, and commits to gears and work fractions. The
+    emitted plan then realizes those decisions on the TRUE work: each
+    task's segment times are the estimate-derived split rescaled by
+    d_true / d_est, which -- because d(f) is linear in the task's work --
+    is exactly the time the chosen gears take on the real task. A task
+    whose duration was underestimated therefore overruns its window and
+    pushes its consumers, and the simulator charges that delay; with
+    rel_err = 0 the plan is bit-identical to `tx`.
+    """
+
+    name = "tx_online"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        cfg = ctx.cfg
+        if not 0.0 <= cfg.tx_online_rel_err < 1.0:
+            # err >= 1 could drive an estimated duration negative, breaking
+            # the executes-true-work guarantee
+            raise ValueError("tx_online_rel_err must be in [0, 1), got "
+                             f"{cfg.tx_online_rel_err}")
+        d_true = ctx.durations
+        rng = np.random.default_rng(cfg.tx_online_seed)
+        eps = rng.uniform(-cfg.tx_online_rel_err, cfg.tx_online_rel_err,
+                          ctx.n_tasks)
+        d_est = d_true * (1.0 + eps)
+        est = ctx.with_durations(d_est)
+        tds = est.tds
+        panel_bound = tds.slack_class == WAIT_PANEL
+        usable = tds.slack_s * np.where(panel_bound,
+                                        cfg.tx_panel_slack_use, 1.0)
+        threshold = np.where(
+            panel_bound, cfg.min_reclaim_s,
+            cfg.tx_min_reclaim_switches * ctx.proc.switch_latency_s)
+        segs = est.reclaimed_segments(usable, threshold)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratio = np.where(d_est > 0.0, d_true / d_est, 1.0)
+        segs = [[(g, t * r) for g, t in s] if r != 1.0 else s
+                for s, r in zip(segs, ratio)]
         return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
                             per_task_overhead=np.zeros(ctx.n_tasks),
                             hide_switch_in_wait=True)

@@ -61,6 +61,39 @@ WAIT_IMBALANCE = 3   # bound by uneven work distribution / schedule end
 
 WAIT_CLASS_NAMES = ("none", "panel", "comm", "imbalance")
 
+# ---------------------------------------------------------------------------
+# Task-type gear classes (Costero et al.): the grouping a per-task-type gear
+# policy assigns asymmetric tables to. Panel kinds sit on the iteration's
+# critical path (keep them on the fast operating points); solve kinds
+# (triangular solves / Q applications) feed the trailing update; update
+# kinds (GEMM-like) dominate the flops and tolerate the full ladder.
+# ---------------------------------------------------------------------------
+GEAR_CLASS_PANEL = 0
+GEAR_CLASS_SOLVE = 1
+GEAR_CLASS_UPDATE = 2
+
+GEAR_CLASS_NAMES = ("panel", "solve", "update")
+
+SOLVE_KINDS = frozenset({"TRSM", "TRSM_ROW", "TRSM_COL", "UNMQR"})
+
+
+def task_gear_classes(graph: TaskGraph) -> np.ndarray:
+    """Per-task gear-class codes (int8): panel / solve / update.
+
+    Panel membership reuses `PANEL_KINDS` (the wait taxonomy's notion of
+    'on the critical panel'); solve kinds are the triangular/orthogonal
+    applies; everything else (GEMM, SYRK, SSRFB, unknown kinds) is a
+    trailing-matrix update.
+    """
+    codes = np.full(len(graph.tasks), GEAR_CLASS_UPDATE, dtype=np.int8)
+    for t in graph.tasks:
+        if t.kind in PANEL_KINDS:
+            codes[t.tid] = GEAR_CLASS_PANEL
+        elif t.kind in SOLVE_KINDS:
+            codes[t.tid] = GEAR_CLASS_SOLVE
+    return codes
+
+
 _EPS = 1e-15         # same "is there a wait at all" threshold the engines use
 
 

@@ -8,13 +8,19 @@ every gear table (plus hypothesis-driven cases when it is installed):
     reclaimable within the gear table's range (f_m >= f_min);
   * the gears of a two-segment split are adjacent in the table;
   * `two_gear_split_batch` reproduces the scalar function exactly
-    (identical gears and identical floats), per task.
+    (identical gears and identical floats), per task;
+  * asymmetric (per-kind) subtables: batch==scalar parity on every gear
+    subtable, segments confined to the subtable, overrun semantics for
+    tables whose fastest gear is below f_max, and
+    `two_gear_split_batch_by_table` matching the per-task scalar calls.
 """
 
 import numpy as np
 import pytest
 
-from repro.core.dvfs import duration_at, two_gear_split, two_gear_split_batch
+from repro.core.dvfs import (duration_at, two_gear_split,
+                             two_gear_split_batch,
+                             two_gear_split_batch_by_table)
 from repro.core.energy_model import GEAR_TABLES, make_processor, make_tpu_like
 
 PROCS = [make_processor(name) for name in sorted(GEAR_TABLES)]
@@ -89,6 +95,138 @@ def test_single_gear_table_runs_flat():
                                      np.array([0.5, 0.0])):
         assert len(segs) == 1
         assert segs[0][0].index == 0
+
+
+# ------------------------------------------------- asymmetric (per-kind) tables
+def _subtables(proc):
+    """A spread of gear subtables: prefixes, suffixes, stride-2, singletons."""
+    n = len(proc.gears)
+    index_sets = {(0,), (n - 1,), tuple(range(n))}
+    index_sets.add(tuple(range(0, n, 2)))
+    if n >= 2:
+        index_sets.add(tuple(range(n // 2 + 1)))       # top half
+        index_sets.add(tuple(range(n // 2, n)))        # bottom half
+        index_sets.add((0, n - 1))                     # extremes only
+    return [proc.gear_subtable(idx) for idx in sorted(index_sets)]
+
+
+@pytest.mark.parametrize("proc", PROCS, ids=lambda p: p.name)
+def test_subtable_batch_matches_scalar_exactly(proc):
+    """batch==scalar parity must hold under every asymmetric subtable."""
+    d, s = _sweep(seed=11, n=150)
+    rng = np.random.default_rng(12)
+    betas = (1.0, rng.uniform(0.1, 1.0, len(d)))
+    for gears in _subtables(proc):
+        for beta in betas:
+            batch = two_gear_split_batch(proc, d, s, beta, gears=gears)
+            for i in range(len(d)):
+                bi = beta if np.isscalar(beta) else float(beta[i])
+                scalar = two_gear_split(proc, float(d[i]), float(s[i]), bi,
+                                        gears=gears)
+                assert len(scalar) == len(batch[i]), (i, gears)
+                for (g_a, t_a), (g_b, t_b) in zip(scalar, batch[i]):
+                    assert g_a.index == g_b.index, (i, gears)
+                    assert t_a == t_b, (i, gears)      # identical floats
+
+
+@pytest.mark.parametrize("proc", PROCS, ids=lambda p: p.name)
+@pytest.mark.parametrize("beta", [1.0, 0.6])
+def test_subtable_invariants(proc, beta):
+    """Work conservation + confinement + adjacency within each subtable."""
+    d, s = _sweep(seed=13, n=150)
+    for gears in _subtables(proc):
+        allowed = {g.index for g in gears}
+        positions = {g.index: p for p, g in enumerate(gears)}
+        for di, si in zip(d, s):
+            segs = two_gear_split(proc, float(di), float(si), beta,
+                                  gears=gears)
+            assert all(g.index in allowed for g, _ in segs)
+            if di > 0.0:
+                work = sum(t / duration_at(di, proc.f_max, g.freq_ghz, beta)
+                           for g, t in segs)
+                assert work == pytest.approx(1.0, rel=1e-9)
+            if len(segs) == 2:
+                (g1, _), (g2, _) = segs
+                # adjacent in the SUBTABLE (not necessarily the full ladder)
+                assert positions[g1.index] + 1 == positions[g2.index]
+            assert len(segs) <= 2
+            # total time never exceeds the window... unless the subtable's
+            # fastest gear forces an overrun (big.LITTLE semantics)
+            total_t = sum(t for _, t in segs)
+            d_at_top = duration_at(di, proc.f_max, gears[0].freq_ghz, beta) \
+                if di > 0.0 else 0.0
+            assert total_t <= max(di + si, d_at_top) + 1e-12
+
+
+def test_restricted_table_overruns_when_forced():
+    """A task pinned below f_max runs slow regardless of slack."""
+    proc = PROCS[0]
+    assert len(proc.gears) >= 2
+    low_only = proc.gear_subtable((len(proc.gears) - 1,))
+    d = 1.0
+    segs = two_gear_split(proc, d, 0.0, 1.0, gears=low_only)
+    assert len(segs) == 1
+    g, t = segs[0]
+    assert g.index == len(proc.gears) - 1
+    assert t == pytest.approx(d * proc.f_max / proc.f_min, rel=1e-12)
+    # tiny slack cannot help: same forced duration
+    segs2 = two_gear_split(proc, d, 1e-3, 1.0, gears=low_only)
+    assert segs2[0][1] >= segs[0][1] - 1e-12
+
+
+def test_default_gears_kwarg_is_identity():
+    """gears=proc.gears must be byte-for-byte the default behavior."""
+    proc = make_processor("arc_opteron_6128")
+    d, s = _sweep(seed=17, n=100)
+    default = two_gear_split_batch(proc, d, s, 0.7)
+    explicit = two_gear_split_batch(proc, d, s, 0.7, gears=proc.gears)
+    for a, b in zip(default, explicit):
+        assert [(g.index, t) for g, t in a] == [(g.index, t) for g, t in b]
+
+
+@pytest.mark.parametrize("proc", PROCS, ids=lambda p: p.name)
+def test_batch_by_table_matches_scalar(proc):
+    """Random per-task table assignment == per-task scalar with that table."""
+    tables = _subtables(proc)[:3]
+    rng = np.random.default_rng(19)
+    d, s = _sweep(seed=19, n=120)
+    ids = rng.integers(0, len(tables), len(d))
+    beta = rng.uniform(0.1, 1.0, len(d))
+    out = two_gear_split_batch_by_table(proc, d, s, beta, ids, tables)
+    assert len(out) == len(d)
+    for i in range(len(d)):
+        scalar = two_gear_split(proc, float(d[i]), float(s[i]),
+                                float(beta[i]), gears=tables[ids[i]])
+        assert [(g.index, t) for g, t in out[i]] == \
+            [(g.index, t) for g, t in scalar], i
+
+
+def test_batch_by_table_validates_ids():
+    proc = PROCS[0]
+    tables = [proc.gears]
+    with pytest.raises(ValueError):
+        two_gear_split_batch_by_table(proc, np.ones(3), np.zeros(3), 1.0,
+                                      np.array([0, 1, 0]), tables)
+    with pytest.raises(ValueError):
+        two_gear_split_batch_by_table(proc, np.ones(3), np.zeros(3), 1.0,
+                                      np.array([0, 0]), tables)
+
+
+def test_gear_subtable_validation():
+    proc = PROCS[0]
+    with pytest.raises(ValueError):
+        proc.gear_subtable(())
+    with pytest.raises(ValueError):
+        proc.gear_subtable((1, 0))          # not increasing
+    with pytest.raises(ValueError):
+        proc.gear_subtable((0, len(proc.gears)))
+    sub = proc.gear_subtable((0, len(proc.gears) - 1))
+    assert [g.index for g in sub] == [0, len(proc.gears) - 1]
+    # prefixes by depth
+    assert proc.gear_prefix(0.0) == proc.gears[:1]
+    assert proc.gear_prefix(1.0) == proc.gears
+    with pytest.raises(ValueError):
+        proc.gear_prefix(1.5)
 
 
 # ---------------------------------------------------------------- hypothesis

@@ -195,7 +195,8 @@ def test_segment_columns_bit_identical():
 def test_registry_covers_legacy_and_tx():
     """The randomized cases above parametrize over the live registry; this
     pins the minimum population they must cover."""
-    for name in ("original", "race_to_halt", "cp_aware", "algorithmic", "tx"):
+    for name in ("original", "race_to_halt", "cp_aware", "algorithmic", "tx",
+                 "task_type_gears", "single_freq_opt", "tx_online"):
         assert name in ALL_STRATEGIES
 
 
