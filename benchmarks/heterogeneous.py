@@ -1,0 +1,100 @@
+"""Asymmetric-cluster section: the paper's strategies on big.LITTLE-style
+machines across big:LITTLE ratios (Costero et al.'s framing), plus the
+mixed-accelerator pod.
+
+For each machine configuration the full strategy registry runs through
+`evaluate_strategies` (savings are vs that machine's own `original`), and
+the machine's baseline energy/makespan are additionally compared against
+the all-big homogeneous cluster -- the cost of the LITTLE ranks themselves.
+Everything is simulator-deterministic, so the `*.saved_pct` metrics join
+the bench-trajectory gate (scripts/bench_compare.py) like the homogeneous
+sections' do; first recorded in BENCH_pr4.json.
+"""
+
+from __future__ import annotations
+
+from repro.core.dag import build_dag
+from repro.core.energy_model import (MachineModel, make_big_little,
+                                     make_processor, make_tpu_mixed,
+                                     scale_processor)
+from repro.core.scheduler import CostModel
+from repro.core.strategies import evaluate_strategies, registered_strategies
+
+FACT = "cholesky"
+N_TILES = 16
+TILE = 512
+GRID = (4, 4)              # 16 ranks; ratios below partition them
+
+
+def machines() -> dict[str, MachineModel]:
+    """Homogeneous reference + big:LITTLE ratios + the accelerator pod."""
+    big = make_processor("arc_opteron_6128")
+    little = scale_processor(big, big.name + "_little", freq_scale=0.6,
+                             volt_scale=0.85, cap_scale=0.45, leak_scale=0.6)
+    out = {"homog_big": MachineModel.homogeneous(big)}
+    for n_big, n_little in ((3, 1), (1, 1), (1, 3)):
+        out[f"bl_{n_big}_{n_little}"] = make_big_little(
+            big, little, n_big=n_big, n_little=n_little)
+    out["tpu_mixed"] = make_tpu_mixed()
+    return out
+
+
+def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID):
+    cost = CostModel()
+    graph = build_dag(FACT, n_tiles, tile, grid)
+    names = registered_strategies()
+    rows = []
+    homog_base = None
+    for cfg, machine in machines().items():
+        res = evaluate_strategies(graph, machine, cost, names=names)
+        base = res["original"]
+        if homog_base is None:
+            homog_base = base            # machines() lists homog_big first
+        for name in names:
+            r = res[name]
+            rows.append({
+                "machine": cfg, "strategy": name,
+                "makespan_s": r.makespan_s, "energy_j": r.energy_j,
+                "slowdown_pct": r.slowdown_pct,
+                "energy_saved_pct": r.energy_saved_pct,
+                "gear_switches": r.switch_count,
+                # this machine's baseline vs the all-big cluster's
+                "base_energy_ratio": base.energy_j / homog_base.energy_j,
+                "base_makespan_ratio": base.makespan_s
+                / homog_base.makespan_s,
+            })
+    return rows
+
+
+def bench() -> tuple[list[str], dict]:
+    rows = run()
+    out = ["machine,strategy,makespan_s,energy_j,slowdown_pct,"
+           "energy_saved_pct,gear_switches"]
+    for r in rows:
+        out.append(f"{r['machine']},{r['strategy']},{r['makespan_s']:.4f},"
+                   f"{r['energy_j']:.1f},{r['slowdown_pct']:.2f},"
+                   f"{r['energy_saved_pct']:.2f},{r['gear_switches']}")
+    metrics: dict[str, float] = {}
+    seen_cfg = set()
+    for r in rows:
+        if r["strategy"] != "original":
+            metrics[f"{r['machine']}.{r['strategy']}.saved_pct"] = \
+                round(r["energy_saved_pct"], 3)
+        if r["machine"] not in seen_cfg:
+            seen_cfg.add(r["machine"])
+            out.append(f"# {r['machine']}: baseline energy "
+                       f"{100.0 * r['base_energy_ratio']:.1f}% / makespan "
+                       f"{100.0 * r['base_makespan_ratio']:.1f}% of homog_big")
+            metrics[f"{r['machine']}.base_energy_vs_homog"] = \
+                round(r["base_energy_ratio"], 4)
+            metrics[f"{r['machine']}.base_makespan_vs_homog"] = \
+                round(r["base_makespan_ratio"], 4)
+    return out, metrics
+
+
+def main() -> list[str]:
+    return bench()[0]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

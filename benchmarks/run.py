@@ -7,6 +7,7 @@ Sections:
     energy_savings     strategies x factorizations, 16x16 grid   (main table)
     power_trace        3-node power traces, Cholesky             (Figure 2)
     factorization_perf tiled factorization GFLOP/s + TDS mix     (perf table)
+    heterogeneous      strategies on big.LITTLE machines          (Costero)
     lm_energy          technique on LM step DAGs (all archs)     (adaptation)
     sim_speed          event-driven simulator vs pick-loop oracle (infra)
 
@@ -23,14 +24,15 @@ import json
 import platform
 import time
 
-from . import (energy_savings, factorization_perf, lm_energy, power_trace,
-               sim_speed, strategy_gap)
+from . import (energy_savings, factorization_perf, heterogeneous, lm_energy,
+               power_trace, sim_speed, strategy_gap)
 
 SECTIONS = {
     "strategy_gap": strategy_gap.bench,
     "energy_savings": energy_savings.bench,
     "power_trace": power_trace.bench,
     "factorization_perf": factorization_perf.bench,
+    "heterogeneous": heterogeneous.bench,
     "lm_energy": lm_energy.bench,
     "sim_speed": sim_speed.bench,
 }

@@ -28,8 +28,13 @@ Also fails if `sim_speed.all_agree` flipped from true to false (the
 engines disagreeing is a correctness red flag, not a perf regression).
 
 Non-gated metrics (timings, wait fractions, gflops) are reported as
-informational drift only. Metrics present in only one file are listed but
-never fail the gate: sections grow across PRs by design.
+informational drift only. Metrics present in only one file NEVER fail the
+gate: sections grow across PRs by design, so a metric that exists only in
+NEW.json is reported as an addition (it starts gating once a trajectory
+file containing it is committed), and one that exists only in OLD.json is
+reported as dropped. Malformed sections (non-dict payloads) are skipped
+rather than crashing the gate. Behavior pinned by
+tests/test_bench_compare.py.
 """
 
 from __future__ import annotations
@@ -43,6 +48,8 @@ def _flat_metrics(report: dict) -> dict[str, float]:
     """{'section.key': value} for every numeric, non-timing metric."""
     out: dict[str, float] = {}
     for section, metrics in report.get("sections", {}).items():
+        if not isinstance(metrics, dict):
+            continue            # malformed/foreign section: skip, don't crash
         for key, val in metrics.items():
             if key == "seconds":
                 continue
@@ -119,10 +126,10 @@ def main() -> int:
     print(f"compared {len(old_m.keys() & new_m.keys())} shared metrics "
           f"({args.old} vs {args.new})")
     if only_old:
-        print(f"  dropped metrics ({len(only_old)}): "
+        print(f"  dropped metrics ({len(only_old)}, not gated): "
               + ", ".join(only_old[:8]) + ("..." if len(only_old) > 8 else ""))
     if only_new:
-        print(f"  new metrics ({len(only_new)}): "
+        print(f"  additions ({len(only_new)}, gate from next trajectory): "
               + ", ".join(only_new[:8]) + ("..." if len(only_new) > 8 else ""))
     for line in drifts:
         print(f"  drift (informational): {line}")

@@ -6,6 +6,9 @@ Public API:
     analyze_tds, compute_tds, TdsResult     -- Task Dependency Set analysis
                                                (per-task wait/slack classes)
     make_processor, GEAR_TABLES             -- CMOS power model + gears
+    MachineModel, as_machine                -- per-rank processor assignment
+    make_big_little, make_tpu_mixed         -- canned asymmetric machines
+    scale_processor                         -- derated/overclocked siblings
     two_gear_split, two_gear_split_batch    -- Ishihara-Yasuura frequency split
     register_strategy, Strategy             -- pluggable strategy registry
     PlanContext, registered_strategies      -- shared planning inputs + listing
@@ -22,8 +25,10 @@ from .dag import (DAG_BUILDERS, PANEL_KINDS, TaskGraph, Task,
                   build_lu_dag, build_qr_dag, factorization_flops)
 from .dvfs import (duration_at, plan_energy_j, two_gear_split,
                    two_gear_split_batch, two_gear_split_batch_by_table)
-from .energy_model import (GEAR_TABLES, Gear, ProcessorModel, make_processor,
-                           make_tpu_like, max_slack_ratio, strategy_gap_terms,
+from .energy_model import (GEAR_TABLES, Gear, MachineModel, ProcessorModel,
+                           as_machine, make_big_little, make_processor,
+                           make_tpu_like, make_tpu_mixed, max_slack_ratio,
+                           scale_processor, strategy_gap_terms,
                            verify_worked_example)
 from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
                         simulate, simulate_reference)
@@ -42,8 +47,9 @@ __all__ = [
     "factorization_flops",
     "duration_at", "plan_energy_j", "two_gear_split", "two_gear_split_batch",
     "two_gear_split_batch_by_table",
-    "GEAR_TABLES", "Gear", "ProcessorModel", "make_processor",
-    "make_tpu_like", "max_slack_ratio", "strategy_gap_terms",
+    "GEAR_TABLES", "Gear", "MachineModel", "ProcessorModel", "as_machine",
+    "make_big_little", "make_processor", "make_tpu_like", "make_tpu_mixed",
+    "max_slack_ratio", "scale_processor", "strategy_gap_terms",
     "verify_worked_example",
     "CostModel", "RankSegment", "Schedule", "StrategyPlan", "simulate",
     "simulate_reference",

@@ -23,6 +23,7 @@ the 2380's V/f slope and flagged as such).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Sequence
 
@@ -192,6 +193,135 @@ def make_tpu_like(name: str = "tpu_v5e_like") -> ProcessorModel:
         p_const_watts=52.0,
         switch_latency_s=10e-6,
     )
+
+
+# --------------------------------------------------------------------------
+# Machine models: per-rank processor assignment (asymmetric clusters).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """A cluster as a per-rank assignment of ProcessorModels.
+
+    `procs` is a repeating pattern over ranks: rank r runs
+    `procs[r % len(procs)]` -- a single-entry pattern is a homogeneous
+    machine, `(big, little)` interleaves two core types, and
+    `(big,) * 4 + (little,) * 12` carves a 16-core node into clusters
+    (Costero et al.'s big.LITTLE framing). The pattern form keeps a
+    machine independent of any particular task graph's rank count.
+
+    Every API that accepts a `ProcessorModel` (both simulator engines,
+    `PlanContext`, `CostModel.durations_top`, `evaluate_strategies`)
+    also accepts a `MachineModel`; `as_machine` normalizes between the
+    two. `MachineModel.homogeneous(proc)` wraps a single processor and
+    is a provable no-op: every per-rank lookup returns the *same object*
+    the bare-processor path would use, so schedules, energies, and gear
+    switches are bit-identical (pinned by tests/test_heterogeneous.py
+    against tests/data/strategy_golden.json).
+    """
+
+    name: str
+    procs: tuple[ProcessorModel, ...]
+
+    def __post_init__(self):
+        if not self.procs:
+            raise ValueError("a MachineModel needs at least one processor")
+
+    @classmethod
+    def homogeneous(cls, proc: ProcessorModel) -> "MachineModel":
+        """Every rank runs `proc` -- equivalent to passing `proc` directly."""
+        return cls(name=proc.name, procs=(proc,))
+
+    @functools.cached_property
+    def is_homogeneous(self) -> bool:
+        p0 = self.procs[0]
+        return all(p is p0 or p == p0 for p in self.procs[1:])
+
+    def proc_for_rank(self, rank: int) -> ProcessorModel:
+        return self.procs[rank % len(self.procs)]
+
+    def rank_procs(self, n_ranks: int) -> list[ProcessorModel]:
+        """The concrete per-rank processor list for an n_ranks-rank job."""
+        return [self.procs[r % len(self.procs)] for r in range(n_ranks)]
+
+    def distinct_procs(self, n_ranks: int) -> list[ProcessorModel]:
+        """Distinct processors among the first n_ranks ranks (by identity,
+        first-appearance order) -- the grouping unit for batched planning."""
+        seen: dict[int, ProcessorModel] = {}
+        for p in self.rank_procs(n_ranks):
+            seen.setdefault(id(p), p)
+        return list(seen.values())
+
+
+def as_machine(proc: "ProcessorModel | MachineModel") -> MachineModel:
+    """Normalize a bare processor to its homogeneous machine wrapper."""
+    if isinstance(proc, MachineModel):
+        return proc
+    return MachineModel.homogeneous(proc)
+
+
+def scale_processor(proc: ProcessorModel, name: str,
+                    freq_scale: float = 1.0, volt_scale: float = 1.0,
+                    cap_scale: float = 1.0, leak_scale: float = 1.0,
+                    const_scale: float = 1.0) -> ProcessorModel:
+    """A derated/overclocked sibling of `proc` with its own power curve.
+
+    Scales the gear table's frequencies/voltages and the lumped power
+    parameters; gear indices are preserved so the sibling's ladder is the
+    same shape as the original's (per-rank plans may still mix the two in
+    one machine).
+    """
+    gears = tuple(Gear(g.index, g.freq_ghz * freq_scale,
+                       g.voltage * volt_scale) for g in proc.gears)
+    return dataclasses.replace(
+        proc, name=name, gears=gears,
+        eff_cap_nf=proc.eff_cap_nf * cap_scale,
+        i_sub_amps=proc.i_sub_amps * leak_scale,
+        p_const_watts=proc.p_const_watts * const_scale)
+
+
+def make_big_little(big: "ProcessorModel | str" = "arc_opteron_6128",
+                    little: ProcessorModel | None = None,
+                    n_big: int = 1, n_little: int = 1,
+                    name: str | None = None) -> MachineModel:
+    """Canned asymmetric cluster: `n_big` fast ranks per `n_little` slow
+    ranks, repeating block-wise over the rank space.
+
+    The default LITTLE core is a derated sibling of the big one: 60% of
+    the clock at 85% of the voltage, ~45% of the switched capacitance and
+    ~60% of the leakage (small-core scaling a la big.LITTLE); the nodal
+    constant stays the big core's (boards are shared). Pass an explicit
+    `little` ProcessorModel to model a genuinely different part.
+    """
+    if isinstance(big, str):
+        big = make_processor(big)
+    if little is None:
+        little = scale_processor(big, big.name + "_little",
+                                 freq_scale=0.6, volt_scale=0.85,
+                                 cap_scale=0.45, leak_scale=0.6)
+    if n_big < 1 or n_little < 1:
+        raise ValueError("need at least one big and one LITTLE rank")
+    procs = (big,) * n_big + (little,) * n_little
+    return MachineModel(
+        name=name or f"{big.name}+{little.name}_{n_big}b{n_little}l",
+        procs=procs)
+
+
+def make_tpu_mixed(n_full: int = 1, n_lite: int = 1,
+                   name: str = "tpu_v5e_mixed") -> MachineModel:
+    """Mixed accelerator pod: full-clock `tpu_v5e_like` chips alongside a
+    derated (70% clock, ~55% dynamic power) variant -- the accelerator
+    analogue of a big.LITTLE cluster, with single-gear parts on both
+    sides (race-to-halt is the only per-chip policy; heterogeneity shows
+    up purely through per-rank durations and power curves).
+    """
+    full = make_tpu_like()
+    lite = scale_processor(full, "tpu_v5e_lite", freq_scale=0.7,
+                           volt_scale=0.9, cap_scale=0.68, leak_scale=0.8,
+                           const_scale=0.9)
+    if n_full < 1 or n_lite < 1:
+        raise ValueError("need at least one full and one lite chip")
+    return MachineModel(name=name, procs=(full,) * n_full + (lite,) * n_lite)
 
 
 # --------------------------------------------------------------------------

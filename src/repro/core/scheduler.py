@@ -38,6 +38,16 @@ Because a task's timing depends only on its rank's previous task and its
 dependencies' finish times, dispatch order between ranks cannot change the
 result; both engines produce bit-identical timelines and switch counts (the
 switch-energy sum may differ by accumulation order, within 1e-9).
+
+Heterogeneous machines: both engines accept a `MachineModel` (per-rank
+ProcessorModels -- asymmetric clusters) wherever a `ProcessorModel` is
+taken; gear indices in a plan's segments are then interpreted against the
+*owning rank's* gear table, and switch latency/energy, idle gears, and
+power curves are all per-rank. `MachineModel.homogeneous(proc)` is a
+provable no-op (every per-rank lookup returns the same object), so the
+homogeneous path stays bit-identical to the legacy single-processor code.
+Per the PR 1 policy, the per-rank generalization was applied to BOTH
+engines in lockstep and the differential suite gained mixed-machine cases.
 """
 
 from __future__ import annotations
@@ -51,7 +61,7 @@ import numpy as np
 
 from .dag import KIND_EFFICIENCY, TaskGraph
 from .dvfs import Segment
-from .energy_model import Gear, ProcessorModel
+from .energy_model import Gear, MachineModel, ProcessorModel, as_machine
 
 
 @dataclasses.dataclass
@@ -70,17 +80,31 @@ class CostModel:
         return self.freq_sensitivity.get(kind, 1.0)
 
     def duration_top(self, flops: float, kind: str, proc: ProcessorModel) -> float:
+        """Duration at the *owning rank's* top gear; pass that rank's
+        ProcessorModel (`MachineModel.proc_for_rank`) on mixed machines."""
         rate = (proc.f_max * 1e9 * self.flops_per_cycle
                 * self.kind_efficiency.get(kind, 0.8))
         return flops / rate
 
     def durations_top(self, graph: TaskGraph,
-                      proc: ProcessorModel) -> np.ndarray:
-        """Vectorized `duration_top` over every task in the graph."""
+                      proc: ProcessorModel | MachineModel) -> np.ndarray:
+        """Vectorized `duration_top` over every task in the graph.
+
+        With a `MachineModel`, each task's duration is referenced to its
+        owner rank's own top gear (fast ranks finish sooner), which is
+        what keeps downstream slack/TDS classification correct when fast
+        and slow ranks coexist.
+        """
         eff = np.asarray([self.kind_efficiency.get(t.kind, 0.8)
                           for t in graph.tasks])
         flops = np.asarray([t.flops for t in graph.tasks])
-        return flops / (proc.f_max * 1e9 * self.flops_per_cycle * eff)
+        machine = as_machine(proc)
+        if machine.is_homogeneous:
+            f_max = machine.procs[0].f_max
+        else:
+            procs = machine.rank_procs(graph.n_ranks)
+            f_max = np.asarray([procs[t.owner].f_max for t in graph.tasks])
+        return flops / (f_max * 1e9 * self.flops_per_cycle * eff)
 
     def comm_time(self, graph: TaskGraph) -> float:
         return graph.tile_bytes / (self.comm_bandwidth_gbs * 1e9) \
@@ -103,7 +127,7 @@ SegColumns = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 @dataclasses.dataclass
 class Schedule:
     graph: TaskGraph
-    proc: ProcessorModel
+    proc: ProcessorModel | MachineModel
     start: np.ndarray
     finish: np.ndarray
     seg_columns: list[SegColumns]
@@ -112,7 +136,8 @@ class Schedule:
     cores_per_node: int = 16
 
     @classmethod
-    def from_rank_segments(cls, graph: TaskGraph, proc: ProcessorModel,
+    def from_rank_segments(cls, graph: TaskGraph,
+                           proc: ProcessorModel | MachineModel,
                            start: np.ndarray, finish: np.ndarray,
                            rank_segments: list[list[RankSegment]],
                            switch_count: int, switch_energy_j: float,
@@ -129,13 +154,18 @@ class Schedule:
                    switch_energy_j, cores_per_node)
 
     @functools.cached_property
+    def machine(self) -> MachineModel:
+        return as_machine(self.proc)
+
+    @functools.cached_property
     def rank_segments(self) -> list[list[RankSegment]]:
-        """Materialized per-rank RankSegment lists (cached)."""
-        gears = self.proc.gears
+        """Materialized per-rank RankSegment lists (cached). Gear indices
+        resolve against each rank's own gear table."""
+        procs = self.machine.rank_procs(self.graph.n_ranks)
         return [
-            [RankSegment(float(a), float(b), gears[g], bool(ac))
+            [RankSegment(float(a), float(b), procs[r].gears[g], bool(ac))
              for a, b, g, ac in zip(*cols)]
-            for cols in self.seg_columns
+            for r, cols in enumerate(self.seg_columns)
         ]
 
     @property
@@ -146,23 +176,63 @@ class Schedule:
     def n_nodes(self) -> int:
         return max(1, self.graph.n_ranks // self.cores_per_node)
 
-    def _power_table(self) -> np.ndarray:
+    @staticmethod
+    def _power_table(proc: ProcessorModel) -> np.ndarray:
         """power_w[gear_index, active_as_int]."""
-        return np.array([[self.proc.core_power_w(g, False),
-                          self.proc.core_power_w(g, True)]
-                         for g in self.proc.gears])
+        return np.array([[proc.core_power_w(g, False),
+                          proc.core_power_w(g, True)]
+                         for g in proc.gears])
+
+    def _rank_power_tables(self) -> list[np.ndarray]:
+        """One power table per rank, computed once per distinct processor."""
+        cache: dict[int, np.ndarray] = {}
+        tables = []
+        for p in self.machine.rank_procs(self.graph.n_ranks):
+            t = cache.get(id(p))
+            if t is None:
+                t = cache[id(p)] = self._power_table(p)
+            tables.append(t)
+        return tables
+
+    def _node_ranks(self, nd: int) -> range:
+        return range(nd * self.cores_per_node,
+                     min((nd + 1) * self.cores_per_node, self.graph.n_ranks))
+
+    def nodal_const_power_w(self, nodes: Sequence[int] | None = None) -> float:
+        """Total non-CPU constant power of the given nodes (default: all).
+
+        Homogeneous machines use the legacy n_nodes * P_const expression
+        verbatim; on a mixed machine each node charges the mean P_const of
+        its ranks' processor models (mixed nodes share boards/fans).
+        """
+        if nodes is None:
+            nodes = range(self.n_nodes)
+        nodes = list(nodes)
+        if self.machine.is_homogeneous:
+            return float(len(nodes)) * self.machine.procs[0].p_const_watts
+        procs = self.machine.rank_procs(self.graph.n_ranks)
+        total = 0.0
+        for nd in nodes:
+            ranks = self._node_ranks(nd)
+            if len(ranks):
+                total += sum(procs[r].p_const_watts for r in ranks) \
+                    / len(ranks)
+            else:
+                total += self.machine.proc_for_rank(
+                    nd * self.cores_per_node).p_const_watts
+        return total
 
     def core_energy_j(self) -> float:
-        pw = self._power_table()
+        pw_tables = self._rank_power_tables()
         e = 0.0
-        for t0, t1, gi, act in self.seg_columns:
+        for pw, (t0, t1, gi, act) in zip(pw_tables, self.seg_columns):
             if len(t0):
                 e += float(pw[gi, act.astype(np.int64)] @ (t1 - t0))
         return e
 
     def total_energy_j(self) -> float:
         return (self.core_energy_j() + self.switch_energy_j
-                + self.n_nodes * self.proc.p_const_watts * self.makespan)
+                + self.nodal_const_power_w() * self.makespan)
 
     def power_trace(self, times: np.ndarray,
                     nodes: Sequence[int] | None = None) -> np.ndarray:
@@ -172,16 +242,14 @@ class Schedule:
         nodes = list(nodes)
         ranks: list[int] = []
         for nd in nodes:
-            ranks.extend(range(nd * self.cores_per_node,
-                               min((nd + 1) * self.cores_per_node,
-                                   self.graph.n_ranks)))
-        pw = self._power_table()
-        watts = np.full(times.shape, float(len(nodes)) *
-                        self.proc.p_const_watts)
+            ranks.extend(self._node_ranks(nd))
+        pw_tables = self._rank_power_tables()
+        watts = np.full(times.shape, self.nodal_const_power_w(nodes))
         for r in ranks:
             t0, t1, gi, act = self.seg_columns[r]
             if not len(t0):
                 continue
+            pw = pw_tables[r]
             idx = np.searchsorted(t0, times, side="right") - 1
             idx = np.clip(idx, 0, len(t0) - 1)
             p = pw[gi, act.astype(np.int64)]
@@ -193,7 +261,16 @@ class Schedule:
 
 @dataclasses.dataclass
 class StrategyPlan:
-    """Everything a strategy decides; consumed by `simulate`."""
+    """Everything a strategy decides; consumed by `simulate`.
+
+    On a heterogeneous machine every gear in `task_segments[tid]` must
+    belong to the *owning rank's* gear table (the engines index power and
+    switch tables by `gear.index` against that rank's processor), and
+    `rank_idle_gears` supplies the per-rank idle gear -- `idle_gear` alone
+    cannot name "each rank's lowest gear" when ladders differ. Leaving
+    `rank_idle_gears` as None (the homogeneous case) keeps the plan
+    byte-for-byte what the legacy single-processor planner emitted.
+    """
 
     name: str
     task_segments: list[list[Segment]]       # per task: [(gear, seconds)]
@@ -201,10 +278,16 @@ class StrategyPlan:
     per_task_overhead: np.ndarray             # seconds of runtime overhead
     hide_switch_in_wait: bool                 # pre-armed switches (offline plan)
     min_halt_window_s: float = 0.0            # don't downshift for tiny gaps
+    rank_idle_gears: Sequence[Gear] | None = None   # per-rank idle override
+
+    def idle_gear_for(self, rank: int) -> Gear:
+        if self.rank_idle_gears is not None:
+            return self.rank_idle_gears[rank]
+        return self.idle_gear
 
 
-def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
-             plan: StrategyPlan) -> Schedule:
+def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
+             cost: CostModel, plan: StrategyPlan) -> Schedule:
     """Event-driven engine: ready-heap + remaining-dependency counters.
 
     A task enters the heap the moment it becomes schedulable -- it is the
@@ -213,11 +296,14 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
     can only unlock (never re-time) other tasks, so each task is pushed
     exactly once and popped with its final start time. Produces timelines
     bit-identical to `simulate_reference` (the differential suite asserts
-    this across randomized DAGs, grids, gear tables, and strategies).
+    this across randomized DAGs, grids, gear tables, strategies, and
+    mixed per-rank machines).
     """
     n = len(graph.tasks)
     n_ranks = graph.n_ranks
     comm = cost.comm_time(graph)
+    machine = as_machine(proc)
+    procs = machine.rank_procs(n_ranks)
 
     per_rank = graph.tasks_by_rank()
     ptr = [0] * n_ranks
@@ -230,11 +316,20 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
     seg_act: list[list[bool]] = [[] for _ in range(n_ranks)]
     switch_count = 0
     switch_energy = 0.0
-    t_sw = proc.switch_latency_s
-    halt_win = max(plan.min_halt_window_s, 2.0 * t_sw)
-    # memoized per-transition energies (identical floats to switch_energy_j)
-    sw_e = [[proc.switch_energy_j(a, b) for b in proc.gears]
-            for a in proc.gears]
+    # per-rank DVFS mechanics: switch latency, halt window, idle gear, and
+    # memoized per-transition energies (identical floats to switch_energy_j;
+    # one table per distinct processor, shared across its ranks)
+    t_sw = [p.switch_latency_s for p in procs]
+    halt_win = [max(plan.min_halt_window_s, 2.0 * t) for t in t_sw]
+    idle_idx = [plan.idle_gear_for(r).index for r in range(n_ranks)]
+    _sw_cache: dict[int, list[list[float]]] = {}
+    sw_e = []
+    for p in procs:
+        tab = _sw_cache.get(id(p))
+        if tab is None:
+            tab = _sw_cache[id(p)] = [[p.switch_energy_j(a, b)
+                                       for b in p.gears] for a in p.gears]
+        sw_e.append(tab)
 
     # flat per-task state in plain Python lists: scalar access is the hot
     # path and list indexing is markedly faster than ndarray item access
@@ -248,7 +343,6 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
     queued = [False] * n
     task_segments = plan.task_segments
     overhead = plan.per_task_overhead.tolist()
-    idle_idx = plan.idle_gear.index
     hide = plan.hide_switch_in_wait
     heappush, heappop = heapq.heappush, heapq.heappop
 
@@ -273,11 +367,11 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
 
         # ---- waiting period handling (idle gear + switches) -------------
         if wait > 1e-15:
-            if idle_idx != gear_now and wait >= halt_win:
+            if idle_idx[r] != gear_now and wait >= halt_win[r]:
                 # downshift for the wait
                 switch_count += 1
-                switch_energy += sw_e[gear_now][idle_idx]
-                gear_now = idle_idx
+                switch_energy += sw_e[r][gear_now][idle_idx[r]]
+                gear_now = idle_idx[r]
             et0.append(t_now)
             et1.append(best_start)
             egi.append(gear_now)
@@ -287,13 +381,13 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
         t_exec = best_start
         if first_gear != gear_now:
             switch_count += 1
-            switch_energy += sw_e[gear_now][first_gear]
-            if not (hide and wait >= t_sw):
+            switch_energy += sw_e[r][gear_now][first_gear]
+            if not (hide and wait >= t_sw[r]):
                 et0.append(t_exec)
-                et1.append(t_exec + t_sw)
+                et1.append(t_exec + t_sw[r])
                 egi.append(first_gear)
                 eact.append(False)
-                t_exec += t_sw
+                t_exec += t_sw[r]
             gear_now = first_gear
 
         # ---- runtime overhead (detection / monitoring) -------------------
@@ -311,7 +405,7 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
             gi = gear.index
             if gi != gear_now:
                 switch_count += 1
-                switch_energy += sw_e[gear_now][gi]
+                switch_energy += sw_e[r][gear_now][gi]
                 # mid-task switches are always planned -> no stall modeled
                 gear_now = gi
             et0.append(t_exec)
@@ -363,12 +457,12 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
     makespan = float(finish_a.max()) if n else 0.0
     for r in range(n_ranks):
         if rank_free[r] < makespan - 1e-15:
-            if idle_idx != rank_gear[r]:
+            if idle_idx[r] != rank_gear[r]:
                 switch_count += 1
-                switch_energy += sw_e[rank_gear[r]][idle_idx]
+                switch_energy += sw_e[r][rank_gear[r]][idle_idx[r]]
             seg_t0[r].append(rank_free[r])
             seg_t1[r].append(makespan)
-            seg_gi[r].append(idle_idx)
+            seg_gi[r].append(idle_idx[r])
             seg_act[r].append(False)
 
     cols: list[SegColumns] = [
@@ -381,9 +475,11 @@ def simulate(graph: TaskGraph, proc: ProcessorModel, cost: CostModel,
                     switch_count, switch_energy)
 
 
-def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
+def simulate_reference(graph: TaskGraph, proc: ProcessorModel | MachineModel,
                        cost: CostModel, plan: StrategyPlan) -> Schedule:
-    """The original O(tasks x ranks x deps) pick-loop, kept verbatim.
+    """The original O(tasks x ranks x deps) pick-loop, kept structurally
+    verbatim (per-rank processor lookups are the only generalization,
+    applied in lockstep with `simulate` per the PR 1 policy).
 
     Slow but obviously correct: every pick scans all ranks' head tasks and
     re-derives feasibility from first principles. The differential suite
@@ -391,6 +487,8 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
     """
     n = len(graph.tasks)
     comm = cost.comm_time(graph)
+    machine = as_machine(proc)
+    procs = machine.rank_procs(graph.n_ranks)
     start = np.zeros(n)
     finish = np.zeros(n)
     done = np.zeros(n, dtype=bool)
@@ -398,12 +496,10 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
     per_rank = graph.tasks_by_rank()
     ptr = [0] * graph.n_ranks
     rank_free = [0.0] * graph.n_ranks
-    rank_gear: list[Gear] = [proc.gears[0]] * graph.n_ranks
+    rank_gear: list[Gear] = [p.gears[0] for p in procs]
     segments: list[list[RankSegment]] = [[] for _ in range(graph.n_ranks)]
     switch_count = 0
     switch_energy = 0.0
-    t_sw = proc.switch_latency_s
-    halt_win = max(plan.min_halt_window_s, 2.0 * t_sw)
 
     remaining = n
     while remaining:
@@ -428,6 +524,10 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
             raise RuntimeError("deadlock in schedule simulation")
 
         r = best_rank
+        proc_r = procs[r]
+        t_sw = proc_r.switch_latency_s
+        halt_win = max(plan.min_halt_window_s, 2.0 * t_sw)
+        idle_gear = plan.idle_gear_for(r)
         tid = per_rank[r][ptr[r]]
         segs = plan.task_segments[tid]
         first_gear = segs[0][0] if segs else rank_gear[r]
@@ -436,15 +536,15 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
 
         # ---- waiting period handling (idle gear + switches) -------------
         if wait > 1e-15:
-            if (plan.idle_gear.index != rank_gear[r].index
+            if (idle_gear.index != rank_gear[r].index
                     and wait >= halt_win):
                 # downshift for the wait
                 switch_count += 1
-                switch_energy += proc.switch_energy_j(rank_gear[r],
-                                                      plan.idle_gear)
+                switch_energy += proc_r.switch_energy_j(rank_gear[r],
+                                                        idle_gear)
                 segments[r].append(RankSegment(t_now, best_start,
-                                               plan.idle_gear, False))
-                rank_gear[r] = plan.idle_gear
+                                               idle_gear, False))
+                rank_gear[r] = idle_gear
             else:
                 segments[r].append(RankSegment(t_now, best_start,
                                                rank_gear[r], False))
@@ -453,7 +553,7 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
         t_exec = best_start
         if first_gear.index != rank_gear[r].index:
             switch_count += 1
-            switch_energy += proc.switch_energy_j(rank_gear[r], first_gear)
+            switch_energy += proc_r.switch_energy_j(rank_gear[r], first_gear)
             hidden = plan.hide_switch_in_wait and wait >= t_sw
             if not hidden:
                 segments[r].append(RankSegment(t_exec, t_exec + t_sw,
@@ -473,7 +573,7 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
         for gear, dt in segs:
             if gear.index != rank_gear[r].index:
                 switch_count += 1
-                switch_energy += proc.switch_energy_j(rank_gear[r], gear)
+                switch_energy += proc_r.switch_energy_j(rank_gear[r], gear)
                 # mid-task switches are always planned -> no stall modeled
                 rank_gear[r] = gear
             segments[r].append(RankSegment(t_exec, t_exec + dt, gear, True))
@@ -488,10 +588,10 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel,
     makespan = float(finish.max()) if n else 0.0
     for r in range(graph.n_ranks):
         if rank_free[r] < makespan - 1e-15:
-            gear = plan.idle_gear
+            gear = plan.idle_gear_for(r)
             if gear.index != rank_gear[r].index:
                 switch_count += 1
-                switch_energy += proc.switch_energy_j(rank_gear[r], gear)
+                switch_energy += procs[r].switch_energy_j(rank_gear[r], gear)
             segments[r].append(RankSegment(rank_free[r], makespan, gear, False))
 
     return Schedule.from_rank_segments(graph, proc, start, finish, segments,

@@ -58,9 +58,11 @@ Registry API (the extension point every scaling PR plugs into):
     registry; `registered_strategies()` lists names in registration order.
   * Differential-suite obligation: any registered strategy is automatically
     exercised by `tests/test_scheduler_differential.py` (fast engine vs the
-    `simulate_reference` oracle, exact agreement). A new strategy must keep
-    that suite green -- plans it emits may only use the `StrategyPlan`
-    vocabulary both engines implement.
+    `simulate_reference` oracle, exact agreement) -- including on randomized
+    heterogeneous machines. A new strategy must keep that suite green --
+    plans it emits may only use the `StrategyPlan` vocabulary both engines
+    implement, and on a `MachineModel` every gear in a task's segments (and
+    `rank_idle_gears`) must come from the owning rank's own ladder.
 """
 
 from __future__ import annotations
@@ -73,8 +75,9 @@ import numpy as np
 
 from .critical_path import schedule_slack
 from .dag import TaskGraph
-from .dvfs import two_gear_split_batch, two_gear_split_batch_by_table
-from .energy_model import ProcessorModel
+from .dvfs import (duration_at, two_gear_split_batch,
+                   two_gear_split_batch_by_table)
+from .energy_model import Gear, MachineModel, ProcessorModel, as_machine
 from .scheduler import CostModel, Schedule, StrategyPlan, simulate
 from .tds import (GEAR_CLASS_NAMES, WAIT_PANEL, TdsResult, analyze_tds,
                   task_gear_classes)
@@ -130,9 +133,18 @@ class PlanContext:
     the same context therefore share the baseline schedule, slack, and TDS
     arrays instead of recomputing them. All exposed arrays are read-only by
     convention.
+
+    `proc` may be a bare `ProcessorModel` (homogeneous cluster, the legacy
+    path -- kept bit-identical) or a `MachineModel` assigning a possibly
+    different processor to each rank. On a mixed machine, `durations` are
+    referenced to each task's *owner rank's* top gear, so the baseline
+    schedule, realized slack, and TDS classification all see fast and slow
+    ranks as they actually are; plan-construction helpers group tasks by
+    their owner's processor and split within that processor's own ladder.
     """
 
-    def __init__(self, graph: TaskGraph, proc: ProcessorModel,
+    def __init__(self, graph: TaskGraph,
+                 proc: ProcessorModel | MachineModel,
                  cost: CostModel, cfg: StrategyConfig | None = None):
         self.graph = graph
         self.proc = proc
@@ -144,8 +156,56 @@ class PlanContext:
         return len(self.graph.tasks)
 
     @functools.cached_property
+    def machine(self) -> MachineModel:
+        return as_machine(self.proc)
+
+    @functools.cached_property
+    def is_homogeneous(self) -> bool:
+        return self.machine.is_homogeneous
+
+    @functools.cached_property
+    def _uproc(self) -> ProcessorModel:
+        """The single processor of a homogeneous machine (identical to the
+        constructor's `proc` when a bare ProcessorModel was passed)."""
+        return self.machine.procs[0]
+
+    @functools.cached_property
+    def rank_procs(self) -> list[ProcessorModel]:
+        return self.machine.rank_procs(self.graph.n_ranks)
+
+    @functools.cached_property
+    def task_proc_groups(self) -> list[tuple[ProcessorModel, np.ndarray]]:
+        """Tasks grouped by their owner rank's processor (identity), in
+        first-appearance order -- the batching unit for mixed machines."""
+        procs = self.rank_procs
+        groups: dict[int, tuple[ProcessorModel, list[int]]] = {}
+        for t in self.graph.tasks:
+            p = procs[t.owner]
+            groups.setdefault(id(p), (p, []))[1].append(t.tid)
+        return [(p, np.asarray(tids, dtype=np.int64))
+                for p, tids in groups.values()]
+
+    @functools.cached_property
+    def task_switch_latency_s(self) -> "float | np.ndarray":
+        """Switch latency of each task's owner (scalar when homogeneous)."""
+        if self.is_homogeneous:
+            return self._uproc.switch_latency_s
+        procs = self.rank_procs
+        return np.asarray([procs[t.owner].switch_latency_s
+                           for t in self.graph.tasks])
+
+    def _idle_gears(self, pos: int) -> tuple[Gear, "Sequence[Gear] | None"]:
+        """(idle_gear, rank_idle_gears) pair for StrategyPlan: position 0 =
+        every rank's top gear, -1 = every rank's lowest. Homogeneous
+        machines get rank_idle_gears=None, i.e. the legacy plan shape."""
+        if self.is_homogeneous:
+            return self._uproc.gears[pos], None
+        per_rank = [p.gears[pos] for p in self.rank_procs]
+        return per_rank[0], per_rank
+
+    @functools.cached_property
     def durations(self) -> np.ndarray:
-        """Per-task top-gear durations."""
+        """Per-task durations at the owning rank's top gear."""
         return self.cost.durations_top(self.graph, self.proc)
 
     @functools.cached_property
@@ -177,13 +237,15 @@ class PlanContext:
         Identical timing/energy to the `original` strategy's schedule, so
         it doubles as the reference for slowdown/savings percentages.
         """
+        idle, rank_idle = self._idle_gears(0)
         return simulate(self.graph, self.proc, self.cost,
                         StrategyPlan(
                             name="baseline",
                             task_segments=self.top_gear_segments(),
-                            idle_gear=self.proc.gears[0],
+                            idle_gear=idle,
                             per_task_overhead=np.zeros(self.n_tasks),
-                            hide_switch_in_wait=True))
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle))
 
     @functools.cached_property
     def slack(self) -> np.ndarray:
@@ -202,12 +264,16 @@ class PlanContext:
 
     # -- plan-construction helpers (vectorized) ---------------------------
     def top_gear_segments(self) -> list[list]:
-        top = self.proc.gears[0]
-        return [[(top, float(d))] for d in self.durations]
+        if self.is_homogeneous:
+            top = self._uproc.gears[0]
+            return [[(top, float(d))] for d in self.durations]
+        procs = self.rank_procs
+        return [[(procs[t.owner].gears[0], float(d))]
+                for t, d in zip(self.graph.tasks, self.durations)]
 
     def reclaimed_segments(self, usable_slack: np.ndarray,
                            min_reclaim_s: np.ndarray | float,
-                           tables: Sequence[tuple] | None = None,
+                           tables=None,
                            table_ids: np.ndarray | None = None) -> list[list]:
         """Two-gear-split every task into its usable slack, batched.
 
@@ -216,20 +282,47 @@ class PlanContext:
         `table_ids` (asymmetric per-task-type gear tables), every task --
         including the non-reclaimed ones -- is confined to its table, so a
         task type pinned below the processor's top gear runs slow even
-        with zero slack (the big.LITTLE semantics).
+        with zero slack (the big.LITTLE semantics). `tables` is either a
+        sequence of gear tuples (one per table id) or, to support mixed
+        machines whose ladders differ per rank, a callable
+        `proc -> sequence of gear tuples` resolved per distinct processor.
+
+        On a heterogeneous machine the batch runs once per distinct
+        processor (`task_proc_groups`): each task splits within its owner's
+        own ladder, with durations referenced to that owner's top gear.
         """
         d = self.durations
         reclaim = usable_slack >= min_reclaim_s
         gated = np.where(reclaim, usable_slack, 0.0)
-        if tables is not None:
-            return two_gear_split_batch_by_table(self.proc, d, gated,
-                                                 self.betas, table_ids,
-                                                 tables)
-        segs = two_gear_split_batch(self.proc, d, gated, self.betas)
-        top = self.proc.gears[0]
-        for i in np.flatnonzero(~reclaim):
-            segs[i] = [(top, float(d[i]))]
-        return segs
+        resolve = tables if callable(tables) else \
+            (lambda proc: tables) if tables is not None else None
+        if self.is_homogeneous:
+            proc = self._uproc
+            if resolve is not None:
+                return two_gear_split_batch_by_table(proc, d, gated,
+                                                     self.betas, table_ids,
+                                                     resolve(proc))
+            segs = two_gear_split_batch(proc, d, gated, self.betas)
+            top = proc.gears[0]
+            for i in np.flatnonzero(~reclaim):
+                segs[i] = [(top, float(d[i]))]
+            return segs
+        betas = self.betas
+        out: list[list] = [[] for _ in range(self.n_tasks)]
+        for proc, sel in self.task_proc_groups:
+            if resolve is not None:
+                sub = two_gear_split_batch_by_table(
+                    proc, d[sel], gated[sel], betas[sel], table_ids[sel],
+                    resolve(proc))
+            else:
+                sub = two_gear_split_batch(proc, d[sel], gated[sel],
+                                           betas[sel])
+                top = proc.gears[0]
+                for j in np.flatnonzero(~reclaim[sel]):
+                    sub[j] = [(top, float(d[sel[j]]))]
+            for j, i in enumerate(sel):
+                out[i] = sub[j]
+        return out
 
 
 @runtime_checkable
@@ -277,10 +370,12 @@ class OriginalStrategy:
     name = "original"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        idle, rank_idle = ctx._idle_gears(0)
         return StrategyPlan(self.name, ctx.top_gear_segments(),
-                            idle_gear=ctx.proc.gears[0],
+                            idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
-                            hide_switch_in_wait=True)
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
 
 
 @register_strategy
@@ -290,11 +385,13 @@ class RaceToHaltStrategy:
     name = "race_to_halt"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        idle, rank_idle = ctx._idle_gears(-1)
         return StrategyPlan(self.name, ctx.top_gear_segments(),
-                            idle_gear=ctx.proc.gears[-1],
+                            idle_gear=idle,
                             per_task_overhead=ctx.durations *
                             ctx.cfg.monitor_overhead,
-                            hide_switch_in_wait=False)  # reactive wake-up
+                            hide_switch_in_wait=False,  # reactive wake-up
+                            rank_idle_gears=rank_idle)
 
 
 @register_strategy
@@ -307,10 +404,12 @@ class CpAwareStrategy:
         cfg = ctx.cfg
         segs = ctx.reclaimed_segments(ctx.slack * cfg.cp_aware_slack_use,
                                       cfg.min_reclaim_s)
-        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+        idle, rank_idle = ctx._idle_gears(-1)
+        return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=ctx.durations *
                             cfg.cp_detect_overhead,
-                            hide_switch_in_wait=True)
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
 
 
 @register_strategy
@@ -323,9 +422,11 @@ class AlgorithmicStrategy:
         cfg = ctx.cfg
         segs = ctx.reclaimed_segments(ctx.slack * cfg.algorithmic_slack_use,
                                       cfg.min_reclaim_s)
-        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+        idle, rank_idle = ctx._idle_gears(-1)
+        return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
-                            hide_switch_in_wait=True)
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
 
 
 @register_strategy
@@ -360,13 +461,16 @@ class TxStrategy:
         panel_bound = tds.slack_class == WAIT_PANEL
         usable = tds.slack_s * np.where(panel_bound,
                                         cfg.tx_panel_slack_use, 1.0)
+        # reclaim floor in units of the *owning rank's* switch latency
         threshold = np.where(
             panel_bound, cfg.min_reclaim_s,
-            cfg.tx_min_reclaim_switches * ctx.proc.switch_latency_s)
+            cfg.tx_min_reclaim_switches * ctx.task_switch_latency_s)
         segs = ctx.reclaimed_segments(usable, threshold)
-        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+        idle, rank_idle = ctx._idle_gears(-1)
+        return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
-                            hide_switch_in_wait=True)
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
 
 
 @register_strategy
@@ -397,14 +501,21 @@ class TaskTypeGearsStrategy:
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
         cfg = ctx.cfg
-        tables = tuple(ctx.proc.gear_prefix(cfg.kind_gear_depth[name])
-                       for name in GEAR_CLASS_NAMES)
+
+        # resolved per distinct processor: on a mixed machine each rank's
+        # class tables are prefixes of its OWN ladder
+        def tables_for(proc: ProcessorModel):
+            return tuple(proc.gear_prefix(cfg.kind_gear_depth[name])
+                         for name in GEAR_CLASS_NAMES)
+
         segs = ctx.reclaimed_segments(
             ctx.slack * cfg.algorithmic_slack_use, cfg.min_reclaim_s,
-            tables=tables, table_ids=ctx.gear_classes)
-        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+            tables=tables_for, table_ids=ctx.gear_classes)
+        idle, rank_idle = ctx._idle_gears(-1)
+        return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
-                            hide_switch_in_wait=True)
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
 
 
 @register_strategy
@@ -421,33 +532,72 @@ class SingleFreqOptStrategy:
     stalls are priced exactly rather than via the linear-scaling
     approximation. The top gear is always feasible (it reproduces the
     baseline makespan), so the sweep never comes back empty.
+
+    Heterogeneous machines: uniform-gear becomes *per-rank* uniform under
+    the shared makespan cap -- each rank runs all of its tasks at one gear
+    of its OWN ladder. The sweep enumerates fractional ladder depths (the
+    union of every distinct processor's gear positions); at depth d each
+    rank uses the gear nearest d down its own table, so ladders of
+    different lengths downshift together. Depth 0 is every rank's top
+    gear and reproduces the baseline makespan, keeping the sweep
+    non-empty.
     """
 
     name = "single_freq_opt"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
-        proc = ctx.proc
         cap = ctx.baseline.makespan * (1.0 + ctx.cfg.single_freq_slowdown_cap)
-        freqs = np.asarray([g.freq_ghz for g in proc.gears])
-        # durations of every task at every gear: (n_gears, n_tasks)
-        durs = ctx.durations[None, :] * (
-            ctx.betas[None, :] * proc.f_max / freqs[:, None]
-            + (1.0 - ctx.betas[None, :]))
+        if ctx.is_homogeneous:
+            proc = ctx._uproc
+            freqs = np.asarray([g.freq_ghz for g in proc.gears])
+            # durations of every task at every gear: (n_gears, n_tasks)
+            durs = ctx.durations[None, :] * (
+                ctx.betas[None, :] * proc.f_max / freqs[:, None]
+                + (1.0 - ctx.betas[None, :]))
+            candidates = [[[(gear, float(t))] for t in durs[gi]]
+                          for gi, gear in enumerate(proc.gears)]
+            idle, rank_idle = proc.gears[-1], None
+        else:
+            candidates = [self._depth_segments(ctx, depth)
+                          for depth in self._depths(ctx)]
+            idle, rank_idle = ctx._idle_gears(-1)
         best: tuple[float, StrategyPlan] | None = None
-        for gi, gear in enumerate(proc.gears):
+        for segs in candidates:
             cand = StrategyPlan(
-                self.name,
-                [[(gear, float(t))] for t in durs[gi]],
-                idle_gear=proc.gears[-1],
+                self.name, segs, idle_gear=idle,
                 per_task_overhead=np.zeros(ctx.n_tasks),
-                hide_switch_in_wait=True)
-            sched = simulate(ctx.graph, proc, ctx.cost, cand)
+                hide_switch_in_wait=True,
+                rank_idle_gears=rank_idle)
+            sched = simulate(ctx.graph, ctx.proc, ctx.cost, cand)
             energy = sched.total_energy_j()
             if sched.makespan <= cap + 1e-12 and \
                     (best is None or energy < best[0]):
                 best = (energy, cand)
-        assert best is not None    # the top gear meets the bound
+        assert best is not None    # the top gear / depth 0 meets the bound
         return best[1]
+
+    @staticmethod
+    def _depths(ctx: PlanContext) -> list[float]:
+        """Union of fractional ladder positions over distinct processors."""
+        depths = {0.0}
+        for p in ctx.machine.distinct_procs(ctx.graph.n_ranks):
+            if len(p.gears) > 1:
+                depths.update(i / (len(p.gears) - 1)
+                              for i in range(len(p.gears)))
+        return sorted(depths)
+
+    @staticmethod
+    def _depth_segments(ctx: PlanContext, depth: float) -> list[list]:
+        """One-gear-per-task segments at fractional ladder depth `depth`,
+        each task on its owner's gear nearest that depth."""
+        procs = ctx.rank_procs
+        segs = []
+        for t, d, b in zip(ctx.graph.tasks, ctx.durations, ctx.betas):
+            p = procs[t.owner]
+            gear = p.gears[int(round(depth * (len(p.gears) - 1)))]
+            segs.append([(gear, duration_at(float(d), p.f_max,
+                                            gear.freq_ghz, float(b)))])
+        return segs
 
 
 @register_strategy
@@ -488,19 +638,21 @@ class TxOnlineStrategy:
                                         cfg.tx_panel_slack_use, 1.0)
         threshold = np.where(
             panel_bound, cfg.min_reclaim_s,
-            cfg.tx_min_reclaim_switches * ctx.proc.switch_latency_s)
+            cfg.tx_min_reclaim_switches * ctx.task_switch_latency_s)
         segs = est.reclaimed_segments(usable, threshold)
         with np.errstate(divide="ignore", invalid="ignore"):
             ratio = np.where(d_est > 0.0, d_true / d_est, 1.0)
         segs = [[(g, t * r) for g, t in s] if r != 1.0 else s
                 for s, r in zip(segs, ratio)]
-        return StrategyPlan(self.name, segs, idle_gear=ctx.proc.gears[-1],
+        idle, rank_idle = ctx._idle_gears(-1)
+        return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
-                            hide_switch_in_wait=True)
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
 
 
-def make_plan(name: str, graph: TaskGraph, proc: ProcessorModel,
-              cost: CostModel,
+def make_plan(name: str, graph: TaskGraph,
+              proc: ProcessorModel | MachineModel, cost: CostModel,
               cfg: StrategyConfig | None = None) -> StrategyPlan:
     """Plan a single strategy (one-shot convenience around the registry).
 
@@ -523,7 +675,8 @@ class StrategyResult:
     schedule: Schedule
 
 
-def evaluate_strategies(graph: TaskGraph, proc: ProcessorModel,
+def evaluate_strategies(graph: TaskGraph,
+                        proc: ProcessorModel | MachineModel,
                         cost: CostModel,
                         names: tuple[str, ...] = STRATEGIES,
                         cfg: StrategyConfig | None = None,

@@ -42,6 +42,13 @@ as flat arrays (`wait_class`, `wait_s`, `slack_class`, `slack_s`,
 `PlanContext.tds`. The classification is deterministic: the binding edge is
 the latest-arriving (waits) / tightest (slack) one, ties broken toward the
 highest task id, and class precedence is panel > comm/imbalance.
+
+Heterogeneous machines: the analysis consumes a concrete baseline
+schedule's start/finish times, and `PlanContext` builds that baseline from
+*per-rank* top-gear durations (each task timed at its owner's own f_max via
+`CostModel.durations_top` on a `MachineModel`), so waits and slacks induced
+by slow ranks are classified exactly as the mixed cluster would realize
+them -- a LITTLE rank's long panel task genuinely binds its consumers.
 """
 
 from __future__ import annotations

@@ -1,0 +1,95 @@
+"""Pins scripts/bench_compare.py's gating semantics, most importantly that
+sections/metrics present in only one of the two JSONs are reported as
+additions/drops and NEVER fail the gate -- each PR that adds a benchmark
+section (PR 4: `heterogeneous`) relies on that to land its first
+trajectory point.
+"""
+
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    os.path.join(os.path.dirname(__file__), "..", "scripts",
+                 "bench_compare.py"))
+bench_compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_compare)
+
+
+def _report(sections):
+    return {"suite": "benchmarks.run", "sections": sections}
+
+
+def _run(tmp_path, old_sections, new_sections, extra_args=()):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_report(old_sections)))
+    new.write_text(json.dumps(_report(new_sections)))
+    argv = sys.argv
+    sys.argv = ["bench_compare.py", str(old), str(new), *extra_args]
+    try:
+        return bench_compare.main()
+    finally:
+        sys.argv = argv
+
+
+BASE = {"energy_savings": {"cholesky.tx.saved_pct": 16.0, "seconds": 1.0}}
+
+
+def test_identical_reports_pass(tmp_path):
+    assert _run(tmp_path, BASE, BASE) == 0
+
+
+def test_new_only_metrics_are_additions_not_failures(tmp_path, capsys):
+    """A section that exists only in NEW.json (a freshly landed benchmark)
+    must be reported, never gated -- no KeyError, exit 0."""
+    new = {**BASE,
+           "heterogeneous": {"bl_1_1.tx.saved_pct": 7.3, "seconds": 0.2}}
+    assert _run(tmp_path, BASE, new) == 0
+    out = capsys.readouterr().out
+    assert "additions" in out
+    assert "heterogeneous.bl_1_1.tx.saved_pct" in out
+
+
+def test_dropped_metrics_do_not_fail(tmp_path, capsys):
+    old = {**BASE, "retired": {"gone.saved_pct": 5.0}}
+    assert _run(tmp_path, old, BASE) == 0
+    assert "dropped metrics" in capsys.readouterr().out
+
+
+def test_malformed_section_skipped(tmp_path):
+    """A non-dict section payload must not crash the comparison."""
+    weird = {**BASE, "notes": "free-form string", "nullsec": None}
+    assert _run(tmp_path, weird, weird) == 0
+
+
+def test_saved_metric_regression_fails(tmp_path, capsys):
+    new = {"energy_savings": {"cholesky.tx.saved_pct": 10.0}}
+    assert _run(tmp_path, BASE, new) == 1
+    assert "REGRESSIONS" in capsys.readouterr().out
+
+
+def test_small_absolute_drops_denoised(tmp_path):
+    """Near-zero baselines: a big relative drop under the absolute floor
+    (default 0.25 points) must not flap the gate."""
+    old = {"energy_savings": {"x.saved_pct": 0.30}}
+    new = {"energy_savings": {"x.saved_pct": 0.10}}
+    assert _run(tmp_path, old, new) == 0
+
+
+def test_speedup_gated_by_hard_floor_only(tmp_path):
+    old = {"sim_speed": {"tx.speedup": 9.0, "all_agree": True}}
+    ok = {"sim_speed": {"tx.speedup": 5.5, "all_agree": True}}
+    bad = {"sim_speed": {"tx.speedup": 4.0, "all_agree": True}}
+    assert _run(tmp_path, old, ok) == 0     # noise, still above 5x target
+    assert _run(tmp_path, old, bad) == 1    # below the hard floor
+
+
+def test_engine_disagreement_fails(tmp_path):
+    old = {"sim_speed": {"all_agree": True}}
+    new = {"sim_speed": {"all_agree": False}}
+    assert _run(tmp_path, old, new) == 1

@@ -1,0 +1,306 @@
+"""Heterogeneous (per-rank processor) machine model tests: MachineModel
+semantics, the homogeneous no-op guarantee, per-rank energy accounting,
+and heterogeneity-aware strategy policy.
+
+Three layers:
+
+  * MachineModel unit tests -- rank cycling, homogeneity detection, the
+    canned asymmetric machines (`make_big_little`, `make_tpu_mixed`).
+  * Homogeneous equivalence -- `MachineModel.homogeneous(proc)` must
+    reproduce the bare-ProcessorModel path bit-identically: all four
+    legacy strategies re-pinned against tests/data/strategy_golden.json
+    through the machine wrapper, plus full segment-column identity.
+  * Per-rank accounting + policy -- hand-computed mixed-rank energies,
+    per-rank power traces, owner-ladder gear confinement, per-rank
+    durations, and the per-rank-uniform single_freq_opt sweep.
+
+Engine agreement on mixed machines is covered by the differential suite
+(tests/test_scheduler_differential.py's heterogeneous generators).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, MachineModel, StrategyConfig, build_dag,
+                        as_machine, evaluate_strategies, make_big_little,
+                        make_plan, make_processor, make_tpu_like,
+                        make_tpu_mixed, registered_strategies,
+                        scale_processor, simulate)
+from repro.core.dag import Task, TaskGraph
+from repro.core.strategies import PlanContext, get_strategy
+
+COST = CostModel()
+BIG = make_processor("arc_opteron_6128")
+LITTLE = scale_processor(BIG, "arc_little", freq_scale=0.5, volt_scale=0.85,
+                         cap_scale=0.45, leak_scale=0.6)
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "strategy_golden.json")
+
+
+# ------------------------------------------------------------- MachineModel
+def test_machine_model_rank_cycling():
+    m = MachineModel("bl", (BIG, LITTLE))
+    assert m.proc_for_rank(0) is BIG
+    assert m.proc_for_rank(1) is LITTLE
+    assert m.proc_for_rank(2) is BIG          # pattern repeats over ranks
+    assert m.rank_procs(5) == [BIG, LITTLE, BIG, LITTLE, BIG]
+    assert m.distinct_procs(5) == [BIG, LITTLE]
+    assert m.distinct_procs(1) == [BIG]
+
+
+def test_machine_model_homogeneity_detection():
+    assert MachineModel.homogeneous(BIG).is_homogeneous
+    assert MachineModel("same", (BIG, BIG, BIG)).is_homogeneous
+    # equal-by-value counts as homogeneous even without object identity
+    assert MachineModel("eq", (BIG, make_processor("arc_opteron_6128"))
+                        ).is_homogeneous
+    assert not MachineModel("bl", (BIG, LITTLE)).is_homogeneous
+    assert as_machine(BIG).is_homogeneous
+    assert as_machine(MachineModel("bl", (BIG, LITTLE))).procs == (BIG, LITTLE)
+
+
+def test_machine_model_rejects_empty():
+    with pytest.raises(ValueError):
+        MachineModel("empty", ())
+
+
+def test_scale_processor_scales_curve():
+    assert LITTLE.f_max == pytest.approx(BIG.f_max * 0.5)
+    assert len(LITTLE.gears) == len(BIG.gears)
+    for g_big, g_lil in zip(BIG.gears, LITTLE.gears):
+        assert g_lil.index == g_big.index
+        assert g_lil.freq_ghz == pytest.approx(g_big.freq_ghz * 0.5)
+    # the LITTLE's top-gear active power sits genuinely below the big's
+    assert LITTLE.core_power_w(LITTLE.gears[0], True) \
+        < 0.5 * BIG.core_power_w(BIG.gears[0], True)
+
+
+def test_make_big_little_canned():
+    m = make_big_little(n_big=1, n_little=3)
+    assert not m.is_homogeneous
+    assert len(m.procs) == 4
+    assert m.procs[0].f_max > m.procs[1].f_max
+    assert m.procs[1] is m.procs[2] is m.procs[3]
+    with pytest.raises(ValueError):
+        make_big_little(n_big=0)
+
+
+def test_make_tpu_mixed_canned():
+    m = make_tpu_mixed()
+    assert not m.is_homogeneous
+    full, lite = m.procs
+    assert len(full.gears) == len(lite.gears) == 1   # single-gear parts
+    assert lite.gears[0].freq_ghz == pytest.approx(
+        full.gears[0].freq_ghz * 0.7)
+
+
+# ------------------------------------------- homogeneous no-op (golden pins)
+def _golden_cases():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", _golden_cases(),
+                         ids=lambda c: f"{c['fact']}-T{c['n_tiles']}-{c['proc']}")
+def test_homogeneous_machine_matches_seed_golden(case):
+    """MachineModel.homogeneous must reproduce every legacy strategy's
+    golden numbers exactly -- the provable-no-op obligation."""
+    graph = build_dag(case["fact"], case["n_tiles"], case["tile"],
+                      tuple(case["grid"]))
+    machine = MachineModel.homogeneous(make_processor(case["proc"]))
+    for strategy, exp in case["results"].items():
+        sched = simulate(graph, machine, COST,
+                         make_plan(strategy, graph, machine, COST))
+        assert sched.switch_count == exp["switches"], strategy
+        assert sched.makespan == pytest.approx(exp["makespan"], rel=1e-9), \
+            strategy
+        assert sched.total_energy_j() == pytest.approx(exp["energy"],
+                                                       rel=1e-9), strategy
+
+
+def test_homogeneous_machine_bit_identical_to_bare_proc():
+    """Stronger than the golden pins: identical floats everywhere (segment
+    columns, switch energy, total energy) for every registered strategy."""
+    graph = build_dag("qr", 5, 256, (2, 2))
+    machine = MachineModel.homogeneous(BIG)
+    for strategy in registered_strategies():
+        a = simulate(graph, BIG, COST, make_plan(strategy, graph, BIG, COST))
+        b = simulate(graph, machine, COST,
+                     make_plan(strategy, graph, machine, COST))
+        np.testing.assert_array_equal(a.start, b.start, err_msg=strategy)
+        np.testing.assert_array_equal(a.finish, b.finish, err_msg=strategy)
+        assert a.switch_count == b.switch_count, strategy
+        assert a.switch_energy_j == b.switch_energy_j, strategy
+        assert a.total_energy_j() == b.total_energy_j(), strategy
+        for ca, cb in zip(a.seg_columns, b.seg_columns):
+            for x, y in zip(ca, cb):
+                np.testing.assert_array_equal(x, y, err_msg=strategy)
+
+
+# ------------------------------------------------- per-rank energy accounting
+def _two_rank_graph():
+    """Two independent equal-flops tasks, one per rank, on a (1, 2) grid."""
+    tasks = [
+        Task(tid=0, kind="GEMM", k=0, i=0, j=0, owner=0, flops=1e9,
+             deps=[], out_tile=(0, 0)),
+        Task(tid=1, kind="GEMM", k=0, i=0, j=1, owner=1, flops=1e9,
+             deps=[], out_tile=(0, 1)),
+    ]
+    return TaskGraph("synthetic", n_tiles=1, tile_size=128, grid=(1, 2),
+                     tasks=tasks)
+
+
+def test_per_rank_durations_top():
+    g = _two_rank_graph()
+    machine = MachineModel("bl", (BIG, LITTLE))
+    d = COST.durations_top(g, machine)
+    # same flops, half the clock -> exactly twice the duration
+    assert d[1] == pytest.approx(2.0 * d[0], rel=1e-12)
+    d_hom = COST.durations_top(g, BIG)
+    assert d_hom[0] == d[0]
+
+
+def test_per_rank_energy_accounting_hand_computed():
+    """Mixed 2-rank machine, `original` strategy: total energy decomposes
+    into each rank's own power curve plus the mean nodal constant."""
+    g = _two_rank_graph()
+    machine = MachineModel("bl", (BIG, LITTLE))
+    sched = simulate(g, machine, COST,
+                     make_plan("original", g, machine, COST))
+    d = COST.durations_top(g, machine)
+    d_a, d_b = float(d[0]), float(d[1])
+    assert sched.makespan == pytest.approx(d_b, rel=1e-12)
+    # rank 0: active at BIG top for d_a, then idles at top (original) to d_b;
+    # rank 1: active at LITTLE top the whole makespan. No gear switches.
+    assert sched.switch_count == 0
+    expect_core = (BIG.core_power_w(BIG.gears[0], True) * d_a
+                   + BIG.core_power_w(BIG.gears[0], False) * (d_b - d_a)
+                   + LITTLE.core_power_w(LITTLE.gears[0], True) * d_b)
+    assert sched.core_energy_j() == pytest.approx(expect_core, rel=1e-12)
+    # one node (2 ranks, 16 cores/node): mean of the two models' P_const
+    p_const = 0.5 * (BIG.p_const_watts + LITTLE.p_const_watts)
+    assert sched.nodal_const_power_w() == pytest.approx(p_const, rel=1e-12)
+    assert sched.total_energy_j() == pytest.approx(
+        expect_core + p_const * d_b, rel=1e-12)
+
+
+def test_per_rank_power_trace_levels():
+    g = _two_rank_graph()
+    machine = MachineModel("bl", (BIG, LITTLE))
+    sched = simulate(g, machine, COST,
+                     make_plan("original", g, machine, COST))
+    d = COST.durations_top(g, machine)
+    p_const = sched.nodal_const_power_w()
+    both = sched.power_trace(np.array([0.5 * float(d[0])]))[0]
+    tail = sched.power_trace(np.array([1.5 * float(d[0])]))[0]
+    assert both == pytest.approx(
+        p_const + BIG.core_power_w(BIG.gears[0], True)
+        + LITTLE.core_power_w(LITTLE.gears[0], True), rel=1e-12)
+    assert tail == pytest.approx(
+        p_const + BIG.core_power_w(BIG.gears[0], False)
+        + LITTLE.core_power_w(LITTLE.gears[0], True), rel=1e-12)
+
+
+def test_rank_segments_resolve_per_rank_gear_tables():
+    """Gear indices in the columns resolve against each rank's own ladder
+    (a single-gear TPU rank next to a 5-gear CPU rank must not collide)."""
+    g = _two_rank_graph()
+    machine = MachineModel("mix", (BIG, make_tpu_like()))
+    sched = simulate(g, machine, COST,
+                     make_plan("race_to_halt", g, machine, COST))
+    segs = sched.rank_segments
+    for s in segs[0]:
+        assert s.gear in BIG.gears
+    for s in segs[1]:
+        assert s.gear.freq_ghz == pytest.approx(0.94)   # the TPU's one gear
+
+
+# ----------------------------------------------- heterogeneity-aware policy
+def test_plans_confined_to_owner_ladder():
+    """Every strategy's segments and idle gears come from the owning
+    rank's own gear table."""
+    graph = build_dag("cholesky", 6, 256, (2, 2))
+    machine = MachineModel("bl", (BIG, LITTLE, make_tpu_like(), BIG))
+    procs = machine.rank_procs(graph.n_ranks)
+    for strategy in registered_strategies():
+        plan = make_plan(strategy, graph, machine, COST)
+        assert plan.rank_idle_gears is not None, strategy
+        for r, p in enumerate(procs):
+            assert plan.idle_gear_for(r) in p.gears, (strategy, r)
+        for t in graph.tasks:
+            table = procs[t.owner].gears
+            for gear, _ in plan.task_segments[t.tid]:
+                assert gear in table, (strategy, t.tid)
+
+
+def test_task_type_gears_uses_per_rank_prefixes():
+    """Class-depth confinement applies within each rank's OWN ladder."""
+    graph = build_dag("qr", 6, 256, (2, 2))
+    machine = MachineModel("bl", (BIG, LITTLE))
+    procs = machine.rank_procs(graph.n_ranks)
+    cfg = StrategyConfig()
+    ctx = PlanContext(graph, machine, COST, cfg)
+    plan = get_strategy("task_type_gears").plan(ctx)
+    from repro.core.tds import GEAR_CLASS_NAMES, task_gear_classes
+    classes = task_gear_classes(graph)
+    for t in graph.tasks:
+        depth = cfg.kind_gear_depth[GEAR_CLASS_NAMES[classes[t.tid]]]
+        allowed = {g.index for g in procs[t.owner].gear_prefix(depth)}
+        for gear, _ in plan.task_segments[t.tid]:
+            assert gear.index in allowed, (t.tid, t.kind)
+
+
+def test_single_freq_opt_per_rank_uniform():
+    """On a mixed machine each rank runs at ONE gear of its own ladder and
+    the shared makespan cap still holds."""
+    graph = build_dag("cholesky", 8, 256, (2, 2))
+    machine = MachineModel("bl", (BIG, LITTLE))
+    procs = machine.rank_procs(graph.n_ranks)
+    cfg = StrategyConfig(single_freq_slowdown_cap=0.10)
+    ctx = PlanContext(graph, machine, COST, cfg)
+    plan = get_strategy("single_freq_opt").plan(ctx)
+    per_rank_gears = [set() for _ in range(graph.n_ranks)]
+    for t in graph.tasks:
+        for gear, _ in plan.task_segments[t.tid]:
+            assert gear in procs[t.owner].gears
+            per_rank_gears[t.owner].add(gear.index)
+    for gears in per_rank_gears:
+        assert len(gears) <= 1
+    sched = simulate(graph, machine, COST, plan)
+    assert sched.makespan <= ctx.baseline.makespan * 1.10 + 1e-9
+
+
+def test_big_little_strategies_save_energy():
+    """The paper's strategies keep paying off on an asymmetric cluster,
+    and nothing slower than the LITTLE-bound baseline appears."""
+    graph = build_dag("cholesky", 8, 512, (2, 2))
+    machine = make_big_little(n_big=1, n_little=1)
+    res = evaluate_strategies(graph, machine, COST,
+                              names=registered_strategies())
+    assert res["algorithmic"].energy_j < res["original"].energy_j
+    assert res["tx"].energy_j < res["original"].energy_j
+    for name, r in res.items():
+        assert r.slowdown_pct < 8.0, name
+
+
+def test_tds_classification_respects_slow_ranks():
+    """A slow rank's long task genuinely binds its consumers: with the
+    producer on a LITTLE rank, the consumer's wait grows accordingly."""
+    tasks = [
+        Task(tid=0, kind="POTRF", k=0, i=0, j=0, owner=1, flops=1e9,
+             deps=[], out_tile=(0, 0)),
+        Task(tid=1, kind="TRSM", k=0, i=1, j=0, owner=0, flops=1e8,
+             deps=[0], out_tile=(1, 0)),
+    ]
+    g = TaskGraph("synthetic", n_tiles=2, tile_size=128, grid=(1, 2),
+                  tasks=tasks)
+    hom = PlanContext(g, BIG, COST)
+    het = PlanContext(g, MachineModel("bl", (BIG, LITTLE)), COST)
+    from repro.core.tds import WAIT_PANEL
+    assert hom.tds.wait_class[1] == WAIT_PANEL
+    assert het.tds.wait_class[1] == WAIT_PANEL
+    # the LITTLE producer runs 2x as long -> the panel wait roughly doubles
+    assert het.tds.wait_s[1] > 1.5 * hom.tds.wait_s[1]

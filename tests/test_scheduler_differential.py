@@ -16,13 +16,20 @@ randomized inputs is strong evidence of correctness. Three generators:
                          segment lists), overheads, idle gears, and both
                          switch-hiding policies;
   * synthetic DAGs    -- random task graphs (random deps/owners/flops) that
-                         need not look like a factorization at all.
+                         need not look like a factorization at all;
+  * heterogeneous     -- the same strategy/random-plan generators on
+                         randomized *mixed-rank* MachineModels (2-3 distinct
+                         ProcessorModels with different ladders, power
+                         curves, and switch latencies assigned randomly to
+                         ranks) -- any per-rank change to one engine must be
+                         mirrored in the other to stay green.
 
 Agreement asserted to 1e-9 (relative) on makespan, total energy, and
 exactly on switch count and per-task start/finish times. A golden corpus
 (tests/data/strategy_golden.json, recorded from the pre-registry seed
 implementation) additionally pins the four legacy strategies' makespan/
-energy/switch-count to the refactored planner's output.
+energy/switch-count to the refactored planner's output
+(tests/test_heterogeneous.py re-pins it through MachineModel.homogeneous).
 """
 
 import json
@@ -31,9 +38,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import (CostModel, GEAR_TABLES, StrategyPlan, build_dag,
-                        make_processor, make_plan, registered_strategies,
-                        simulate, simulate_reference)
+from repro.core import (CostModel, GEAR_TABLES, MachineModel, StrategyPlan,
+                        build_dag, make_processor, make_plan,
+                        registered_strategies, scale_processor, simulate,
+                        simulate_reference)
 from repro.core.dag import Task, TaskGraph
 
 FACTS = ("cholesky", "lu", "qr")
@@ -152,6 +160,104 @@ def test_synthetic_dags_differential(seed):
     fast = simulate(graph, proc, cost, plan)
     ref = simulate_reference(graph, proc, cost, plan)
     assert_schedules_match(fast, ref, f"synthetic seed={seed}")
+
+
+# ------------------------------------------------------ heterogeneous machines
+def _random_machine(rng, n_ranks) -> MachineModel:
+    """A genuinely mixed per-rank machine: 2-3 distinct processors (possibly
+    derated siblings with different ladders/power/switch latency) assigned
+    randomly to ranks, with at least two types present when ranks allow."""
+    base = make_processor(PROCS[rng.integers(len(PROCS))])
+    pool = [base,
+            scale_processor(base, base.name + "_lil",
+                            freq_scale=float(rng.uniform(0.4, 0.8)),
+                            volt_scale=float(rng.uniform(0.7, 1.0)),
+                            cap_scale=float(rng.uniform(0.3, 0.8))),
+            make_processor(PROCS[rng.integers(len(PROCS))],
+                           switch_latency_s=float(rng.choice([50e-6,
+                                                              200e-6])))]
+    k = int(rng.integers(2, len(pool) + 1))
+    assign = rng.integers(0, k, size=max(n_ranks, 1))
+    if n_ranks >= 2 and len(set(assign.tolist())) < 2:
+        assign[0], assign[1] = 0, 1       # force a real mix
+    return MachineModel(name="random_mix",
+                        procs=tuple(pool[i] for i in assign))
+
+
+def _random_hetero_plan(rng, graph, machine, cost):
+    """Adversarial plan on a mixed machine: every gear is drawn from the
+    owning rank's own ladder, idle gears are random per rank."""
+    procs = machine.rank_procs(graph.n_ranks)
+    durs = cost.durations_top(graph, machine)
+    segs = []
+    for t in graph.tasks:
+        p = procs[t.owner]
+        k = int(rng.integers(0, 4))        # 0 => empty segment list
+        segs.append([(p.gears[int(rng.integers(len(p.gears)))],
+                      float(durs[t.tid]) * float(rng.uniform(0.2, 2.0)))
+                     for _ in range(k)])
+    overhead = np.where(rng.random(len(graph.tasks)) < 0.5,
+                        rng.uniform(0.0, 2e-4, len(graph.tasks)), 0.0)
+    rank_idle = [p.gears[int(rng.integers(len(p.gears)))] for p in procs]
+    return StrategyPlan(
+        name="random_hetero",
+        task_segments=segs,
+        idle_gear=rank_idle[0],
+        per_task_overhead=overhead,
+        hide_switch_in_wait=bool(rng.integers(2)),
+        min_halt_window_s=float(rng.choice([0.0, 1e-4, 1e-2])),
+        rank_idle_gears=rank_idle,
+    )
+
+
+# 4 seeds x every registered strategy (>= 32 cases) on mixed machines, plus
+# 8 adversarial random heterogeneous plans below: >= 40 heterogeneous
+# differential cases in total (ISSUE 4 acceptance: >= 20).
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_heterogeneous_strategies_differential(seed, strategy):
+    rng = np.random.default_rng(4000 + seed)
+    name, n_tiles, tile, grid, _ = _random_graph_params(rng)
+    graph = build_dag(name, n_tiles, tile, grid)
+    machine = _random_machine(rng, graph.n_ranks)
+    if graph.n_ranks >= 2:
+        assert not machine.is_homogeneous     # a real mix, not a degenerate one
+    cost = CostModel(comm_bandwidth_gbs=float(rng.uniform(1.0, 40.0)))
+    plan = make_plan(strategy, graph, machine, cost)
+    fast = simulate(graph, machine, cost, plan)
+    ref = simulate_reference(graph, machine, cost, plan)
+    assert_schedules_match(fast, ref,
+                           f"hetero {name} T={n_tiles} {grid} {strategy}")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_heterogeneous_random_plans_differential(seed):
+    rng = np.random.default_rng(5000 + seed)
+    name, n_tiles, tile, grid, _ = _random_graph_params(rng)
+    graph = build_dag(name, n_tiles, tile, grid)
+    machine = _random_machine(rng, graph.n_ranks)
+    cost = CostModel()
+    plan = _random_hetero_plan(rng, graph, machine, cost)
+    fast = simulate(graph, machine, cost, plan)
+    ref = simulate_reference(graph, machine, cost, plan)
+    assert_schedules_match(fast, ref, f"hetero random plan seed={seed}")
+
+
+def test_heterogeneous_segment_columns_bit_identical():
+    """Stronger than 1e-9: identical per-rank timelines on a mixed machine."""
+    graph = build_dag("lu", 6, 128, (2, 2))
+    big = make_processor("arc_opteron_6128")
+    little = scale_processor(big, "arc_little", freq_scale=0.6,
+                             volt_scale=0.85, cap_scale=0.45)
+    machine = MachineModel("bl", (big, little, little, big))
+    cost = CostModel()
+    for strategy in ALL_STRATEGIES:
+        plan = make_plan(strategy, graph, machine, cost)
+        fast = simulate(graph, machine, cost, plan)
+        ref = simulate_reference(graph, machine, cost, plan)
+        for ca, cb in zip(fast.seg_columns, ref.seg_columns):
+            for x, y in zip(ca, cb):
+                np.testing.assert_array_equal(x, y)
 
 
 # ------------------------------------------------------ edge cases
