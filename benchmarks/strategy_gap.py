@@ -19,7 +19,15 @@ duration estimates perturbed by a relative error eps ~ U[-err, +err]
 `NOISE_LEVELS` x `NOISE_SEEDS` and reports the mean). The headline number
 per error level is *retention*: the fraction of perfect-knowledge TX
 savings the online planner still realizes once its mispredicted stretches
-are charged against the true task durations."""
+are charged against the true task durations.
+
+A fourth sweep closes the loop (ISSUE 5): `tx_replan` starts from the
+IDENTICAL noise draw but re-derives the residual slack/TDS from observed
+finish times every `replan_every` iterations (`core/replan.py`). The sweep
+crosses the same noise levels/seeds with `REPLAN_CADENCES` and reports
+per-cell retention next to the one-shot `tx_online` row -- the closed loop
+must retain at least as much at every error level (equal at rel_err = 0;
+pinned by tests/test_replan.py)."""
 
 from __future__ import annotations
 
@@ -38,6 +46,10 @@ SIM_STRATEGIES = ("race_to_halt", "algorithmic", "tx")
 # averaged per level (see module docstring).
 NOISE_LEVELS = (0.0, 0.05, 0.10, 0.20, 0.40)
 NOISE_SEEDS = (0, 1, 2)
+
+# tx_replan cadence study: iterations per re-planning wave (1 = replan
+# every panel iteration; large values converge to one-shot tx_online).
+REPLAN_CADENCES = (1, 2, 4)
 
 
 def run():
@@ -103,6 +115,67 @@ def run_noise_sweep(fact: str = "cholesky", n_tiles: int = 8, tile: int = 512,
     return rows
 
 
+def run_replan_sweep(fact: str = "cholesky", n_tiles: int = 8,
+                     tile: int = 512, grid=(2, 2),
+                     proc_name: str = "arc_opteron_6128",
+                     levels=NOISE_LEVELS, seeds=NOISE_SEEDS,
+                     cadences=REPLAN_CADENCES, noise_rows=None):
+    """Closed-loop retention: tx_replan vs tx_online per (rel_err, cadence).
+
+    Same graph/processor/noise grid as `run_noise_sweep`; every cell plans
+    `tx_replan` with its own StrategyConfig (identical noise draw to the
+    tx_online cell with the same seed) and simulates against the true
+    durations. Rows are per-(level, cadence) seed means, each carrying the
+    matching tx_online mean for the side-by-side retention comparison.
+    `noise_rows` lets `bench()` pass `run_noise_sweep`'s output so the
+    tx_online/tx reference cells are not recomputed; levels missing from
+    it (or all levels, when None) are evaluated here.
+    """
+    graph = build_dag(fact, n_tiles, tile, grid)
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    online_by_err = {r["rel_err"]: (r["saved_pct"], r["tx_saved_pct"])
+                     for r in (noise_rows or [])}
+    tx_saved = next(iter(online_by_err.values()))[1] if online_by_err else \
+        evaluate_strategies(graph, proc, cost,
+                            names=("original", "tx"))["tx"].energy_saved_pct
+    rows = []
+    for err in levels:
+        if err in online_by_err:
+            online_mean = online_by_err[err][0]
+        else:
+            online = []
+            for seed in seeds:
+                cfg = StrategyConfig(tx_online_rel_err=err,
+                                     tx_online_seed=seed)
+                online.append(evaluate_strategies(
+                    graph, proc, cost, names=("original", "tx_online"),
+                    cfg=cfg)["tx_online"].energy_saved_pct)
+            online_mean = float(np.mean(online))
+        for every in cadences:
+            saved, slow = [], []
+            for seed in seeds:
+                cfg = StrategyConfig(tx_online_rel_err=err,
+                                     tx_online_seed=seed,
+                                     replan_every=every)
+                r = evaluate_strategies(graph, proc, cost,
+                                        names=("original", "tx_replan"),
+                                        cfg=cfg)["tx_replan"]
+                saved.append(r.energy_saved_pct)
+                slow.append(r.slowdown_pct)
+            mean_saved = float(np.mean(saved))
+            rows.append({
+                "rel_err": err, "replan_every": every,
+                "saved_pct": mean_saved,
+                "slowdown_pct": float(np.mean(slow)),
+                "online_saved_pct": online_mean,
+                "tx_saved_pct": tx_saved,
+                "retention": mean_saved / tx_saved if tx_saved else 0.0,
+                "gain_vs_online_pts": mean_saved - online_mean,
+            })
+    return rows
+
+
 def bench() -> tuple[list[str], dict]:
     ex, rows = run()
     out = [f"# worked example ok: dEd={ex['dEd']:.4f} dEl={ex['dEl']:.4f}",
@@ -143,6 +216,19 @@ def bench() -> tuple[list[str], dict]:
             round(r["saved_pct"], 3)
         metrics[f"tx_online.err{r['rel_err']:.2f}.retention"] = \
             round(r["retention"], 3)
+    # closed-loop study: tx_replan retention per (noise level, cadence);
+    # the tx_online/tx reference cells are reused from the sweep above
+    replan = run_replan_sweep(noise_rows=noise)
+    out.append("tx_replan_rel_err,replan_every,saved_pct,slowdown_pct,"
+               "online_saved_pct,tx_saved_pct,retention,gain_vs_online_pts")
+    for r in replan:
+        out.append(f"{r['rel_err']:.2f},{r['replan_every']},"
+                   f"{r['saved_pct']:.3f},{r['slowdown_pct']:.3f},"
+                   f"{r['online_saved_pct']:.3f},{r['tx_saved_pct']:.3f},"
+                   f"{r['retention']:.3f},{r['gain_vs_online_pts']:.3f}")
+        key = f"tx_replan.err{r['rel_err']:.2f}.every{r['replan_every']}"
+        metrics[f"{key}.saved_pct"] = round(r["saved_pct"], 3)
+        metrics[f"{key}.retention"] = round(r["retention"], 3)
     return out, metrics
 
 

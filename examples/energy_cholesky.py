@@ -53,21 +53,26 @@ print("  TDS slack classes (recl s):",
        if k != "none"})
 
 # how much of TX survives an imperfect cost model (the tx_online rows
-# above used the default 10% relative error; sweep it here)
-print("\n=== tx_online: savings vs cost-model error ===")
+# above used the default 10% relative error; sweep it here) -- and how
+# much the closed loop wins back by re-planning from observed finishes
+# every panel iteration (tx_replan, same noise draw; core/replan.py)
+print("\n=== tx_online vs tx_replan: savings vs cost-model error ===")
 from repro.core.strategies import StrategyConfig  # noqa: E402
 tx_saved = None
 for err in (0.0, 0.1, 0.2, 0.4):
     cfg = StrategyConfig(tx_online_rel_err=err)
-    r = evaluate_strategies(graph, proc, cost,
-                            names=("original", "tx_online"),
-                            cfg=cfg)["tx_online"]
+    res = evaluate_strategies(graph, proc, cost,
+                              names=("original", "tx_online", "tx_replan"),
+                              cfg=cfg)
+    r, rp = res["tx_online"], res["tx_replan"]
     if tx_saved is None:
         tx_saved = r.energy_saved_pct          # err=0 == offline tx
     keep = (r.energy_saved_pct / tx_saved) if tx_saved else 0.0
-    print(f"  rel_err {err:4.2f}: saved {r.energy_saved_pct:6.2f} %  "
-          f"slowdown {r.slowdown_pct:5.2f} %  "
-          f"(keeps {100.0 * keep:5.1f} % of offline TX)")
+    print(f"  rel_err {err:4.2f}: one-shot saved {r.energy_saved_pct:6.2f} %"
+          f"  (keeps {100.0 * keep:5.1f} % of TX)   "
+          f"closed-loop saved {rp.energy_saved_pct:6.2f} %  "
+          f"({rp.energy_saved_pct - r.energy_saved_pct:+5.2f} pts, "
+          f"single seed)")
 
 # ----------------------------------- asymmetric (big.LITTLE) cluster demo
 # The same DAG on a heterogeneous machine: half the ranks are derated

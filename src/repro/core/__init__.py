@@ -17,9 +17,19 @@ Public API:
                                                event-driven engine)
     simulate_reference                      -- slow pick-loop oracle for
                                                differential testing
+    replan_tx, ReplanOutcome, WaveRecord    -- closed-loop re-planning
+                                               (the tx_replan strategy)
+    residual_schedule_times, residual_schedule_slack,
+    analyze_residual_tds                    -- residual-graph analyses
+
+See README.md for the user-facing tour and docs/ARCHITECTURE.md for the
+layer map, the two-engine differential-testing policy, and the
+heterogeneous-machine design.
 """
 
-from .critical_path import CpResult, cp_analysis, schedule_slack
+from .critical_path import (CpResult, cp_analysis, residual_schedule_slack,
+                            residual_schedule_times, schedule_slack,
+                            validate_frozen_closure)
 from .dag import (DAG_BUILDERS, PANEL_KINDS, TaskGraph, Task,
                   block_cyclic_owner, build_cholesky_dag, build_dag,
                   build_lu_dag, build_qr_dag, factorization_flops)
@@ -32,16 +42,25 @@ from .energy_model import (GEAR_TABLES, Gear, MachineModel, ProcessorModel,
                            verify_worked_example)
 from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
                         simulate, simulate_reference)
-from .strategies import (STRATEGIES, PlanContext, Strategy, StrategyConfig,
-                         StrategyResult, evaluate_strategies, get_strategy,
-                         make_plan, register_strategy, registered_strategies)
+from .strategies import (STRATEGIES, PlanContext, ResidualPlanContext,
+                         Strategy, StrategyConfig, StrategyResult,
+                         evaluate_strategies, get_strategy, make_plan,
+                         register_strategy, registered_strategies)
 from .tds import (GEAR_CLASS_NAMES, GEAR_CLASS_PANEL, GEAR_CLASS_SOLVE,
                   GEAR_CLASS_UPDATE, SOLVE_KINDS, WAIT_CLASS_NAMES,
                   WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE, WAIT_PANEL,
-                  TdsResult, analyze_tds, compute_tds, task_gear_classes)
+                  TdsResult, analyze_residual_tds, analyze_tds, compute_tds,
+                  task_gear_classes)
+# imported last: registers tx_replan (depends on .strategies' registry)
+from .replan import (ReplanOutcome, TxReplanStrategy, WaveRecord,
+                     iteration_waves, replan_tx)
 
 __all__ = [
     "CpResult", "cp_analysis", "schedule_slack",
+    "residual_schedule_slack", "residual_schedule_times",
+    "validate_frozen_closure",
+    "ReplanOutcome", "TxReplanStrategy", "WaveRecord", "iteration_waves",
+    "replan_tx", "ResidualPlanContext", "analyze_residual_tds",
     "DAG_BUILDERS", "PANEL_KINDS", "TaskGraph", "Task", "block_cyclic_owner",
     "build_cholesky_dag", "build_dag", "build_lu_dag", "build_qr_dag",
     "factorization_flops",

@@ -1,6 +1,6 @@
 """Critical-path and slack analysis over a scheduled task graph.
 
-Two related computations:
+Three related computations:
 
 1. `cp_analysis(graph, durations, comm)` -- classic earliest/latest times
    over the DAG alone (infinite processors): gives the critical-path length
@@ -15,12 +15,21 @@ Two related computations:
    (measured online, Adagio-style) and the paper's algorithmic schedule
    (computed offline from this very analysis) reclaim.
 
-Both are fully vectorized over the graph's cached NumPy edge arrays
-(`TaskGraph.dep_edge_arrays` / `dep_edges_by_level` / `rank_order_pairs`):
-`schedule_slack` is a single scatter-min over all edges, and `cp_analysis`
-sweeps the DAG level-by-level (consumers sit strictly above producers, so a
-per-level scatter-max/min is a valid topological pass). min/max are exact in
-floating point, so the results are bit-identical to an edge-at-a-time loop.
+3. Residual-graph entry points (`residual_schedule_times`,
+   `residual_schedule_slack`) -- the closed-loop re-planning substrate
+   (`core/replan.py`): mid-run, with some tasks already executed, predict
+   the top-gear times of everything still pending *anchored on the
+   observed finish times of the frozen past*, then restrict the slack
+   analysis to the pending (residual) subgraph. With nothing frozen they
+   reproduce the full baseline bit-identically.
+
+Both full-graph passes are fully vectorized over the graph's cached NumPy
+edge arrays (`TaskGraph.dep_edge_arrays` / `dep_edges_by_level` /
+`rank_order_pairs`): `schedule_slack` is a single scatter-min over all
+edges, and `cp_analysis` sweeps the DAG level-by-level (consumers sit
+strictly above producers, so a per-level scatter-max/min is a valid
+topological pass). min/max are exact in floating point, so the results are
+bit-identical to an edge-at-a-time loop.
 """
 
 from __future__ import annotations
@@ -34,6 +43,8 @@ from .dag import TaskGraph
 
 @dataclasses.dataclass
 class CpResult:
+    """Earliest/latest times and float of every task over the bare DAG."""
+
     earliest_start: np.ndarray
     earliest_finish: np.ndarray
     latest_start: np.ndarray
@@ -45,6 +56,24 @@ class CpResult:
 
 def cp_analysis(graph: TaskGraph, durations: np.ndarray,
                 comm_time: float = 0.0) -> CpResult:
+    """Classic forward/backward critical-path pass over the DAG alone.
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The task DAG (only its data edges are used -- no rank contention).
+    durations : np.ndarray
+        Per-task durations, indexed by task id.
+    comm_time : float
+        Transfer delay charged on every cross-rank dependency edge.
+
+    Returns
+    -------
+    CpResult
+        Earliest/latest start and finish arrays, the critical-path length
+        (a lower bound on any schedule's makespan), and per-task total
+        float with the zero-float (on-critical-path) mask.
+    """
     n = len(graph.tasks)
     durations = np.asarray(durations, dtype=float)
     src, dst, cross, bounds = graph.dep_edges_by_level()
@@ -77,7 +106,25 @@ def cp_analysis(graph: TaskGraph, durations: np.ndarray,
 
 def schedule_slack(start: np.ndarray, finish: np.ndarray,
                    graph: TaskGraph, comm_time: float = 0.0) -> np.ndarray:
-    """Realized local slack per task in a simulated schedule."""
+    """Realized local slack per task in a simulated schedule.
+
+    Parameters
+    ----------
+    start, finish : np.ndarray
+        Per-task times of a concrete schedule, indexed by task id.
+    graph : TaskGraph
+        The scheduled task graph (data edges + per-rank program order).
+    comm_time : float
+        Transfer delay charged on cross-rank dependency edges.
+
+    Returns
+    -------
+    np.ndarray
+        Per-task reclaimable window: the gap between the task's finish and
+        the earliest moment anything (a DAG consumer, the next task in its
+        rank's program order, or the end of the schedule) needs it.
+        Stretching a task within its local slack delays no other task.
+    """
     n = len(graph.tasks)
     makespan = float(finish.max()) if n else 0.0
     slack = np.full(n, np.inf)
@@ -94,3 +141,159 @@ def schedule_slack(start: np.ndarray, finish: np.ndarray,
     term = np.isinf(slack)
     slack[term] = makespan - finish[term]
     return np.maximum(slack, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Residual-graph entry points (closed-loop re-planning, core/replan.py).
+# ---------------------------------------------------------------------------
+
+def validate_frozen_closure(graph: TaskGraph, frozen: np.ndarray) -> None:
+    """Check that `frozen` is a valid executed prefix of the schedule.
+
+    A frozen (already-executed) set is only meaningful when it is closed
+    under everything that determines its members' timing: every frozen
+    task's dependencies must be frozen, and on each rank the frozen tasks
+    must form a prefix of the rank's program order (a rank cannot have run
+    its 3rd task without its 2nd). Iteration-prefix waves -- the shape
+    `core/replan.py` produces -- satisfy both by construction.
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The task graph the mask indexes into.
+    frozen : np.ndarray
+        Boolean mask of executed tasks, indexed by task id.
+
+    Returns
+    -------
+    None
+        Raises ``ValueError`` on the first violated closure property.
+    """
+    src, dst, _ = graph.dep_edge_arrays()
+    if len(src):
+        bad = frozen[dst] & ~frozen[src]
+        if bad.any():
+            e = int(np.flatnonzero(bad)[0])
+            raise ValueError(
+                f"frozen set is not dependency-closed: task {int(dst[e])} "
+                f"is frozen but its dependency {int(src[e])} is not")
+    prev, nxt = graph.rank_order_pairs()
+    if len(prev):
+        bad = frozen[nxt] & ~frozen[prev]
+        if bad.any():
+            e = int(np.flatnonzero(bad)[0])
+            raise ValueError(
+                f"frozen set is not a per-rank prefix: task {int(nxt[e])} "
+                f"is frozen but its program-order predecessor "
+                f"{int(prev[e])} is not")
+
+
+def residual_schedule_times(graph: TaskGraph, durations: np.ndarray,
+                            comm_time: float = 0.0,
+                            frozen: np.ndarray | None = None,
+                            observed_finish: np.ndarray | None = None,
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Predicted times of the residual schedule, anchored on observations.
+
+    The mid-run re-planning primitive: tasks in `frozen` have already
+    executed and their *realized* finish times are facts
+    (`observed_finish`); everything still pending is predicted forward at
+    the given (estimated top-gear) durations under the same semantics as
+    the baseline schedule -- each rank runs its pending tasks in program
+    order, starting each when the rank is free and every dependency's
+    output (observed for frozen producers, predicted for pending ones) has
+    arrived. With an empty frozen set this reproduces the zero-overhead
+    top-gear baseline's times bit-identically.
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The full task graph (the residual subgraph is selected by mask).
+    durations : np.ndarray
+        Per-task top-gear durations; only pending entries are read.
+    comm_time : float
+        Transfer delay charged on cross-rank dependency edges.
+    frozen : np.ndarray, optional
+        Boolean mask of already-executed tasks (default: none). Must be
+        dependency-closed and a per-rank program-order prefix
+        (`validate_frozen_closure`).
+    observed_finish : np.ndarray, optional
+        Realized finish times; only frozen entries are read. Required when
+        `frozen` selects any task.
+
+    Returns
+    -------
+    (start, finish) : tuple of np.ndarray
+        Hybrid per-task times: observed values for frozen tasks (their
+        `start` is set to the observed finish and is *undefined* -- no
+        residual quantity may depend on it), predictions for pending ones.
+    """
+    n = len(graph.tasks)
+    durations = np.asarray(durations, dtype=float)
+    if frozen is None:
+        frozen = np.zeros(n, dtype=bool)
+    else:
+        frozen = np.asarray(frozen, dtype=bool)
+        if frozen.shape != (n,):
+            raise ValueError("frozen mask must have one entry per task")
+    if frozen.any():
+        if observed_finish is None:
+            raise ValueError("observed_finish is required when any task "
+                             "is frozen")
+        validate_frozen_closure(graph, frozen)
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    if frozen.any():
+        obs = np.asarray(observed_finish, dtype=float)
+        finish[frozen] = obs[frozen]
+        start[frozen] = obs[frozen]      # undefined; see docstring
+    # forward pass in tid order (tids are topological and per-rank program
+    # order is tid order), same max() formula as the simulator engines --
+    # bit-identical to the baseline schedule when nothing is frozen
+    rank_free = [0.0] * graph.n_ranks
+    for t in graph.tasks:
+        if frozen[t.tid]:
+            rank_free[t.owner] = max(rank_free[t.owner],
+                                     float(finish[t.tid]))
+            continue
+        ready = rank_free[t.owner]
+        for d in t.deps:
+            arr = finish[d] + (comm_time if graph.tasks[d].owner != t.owner
+                               else 0.0)
+            if arr > ready:
+                ready = arr
+        start[t.tid] = ready
+        fin = ready + durations[t.tid]
+        finish[t.tid] = fin
+        rank_free[t.owner] = fin
+    return start, finish
+
+
+def residual_schedule_slack(start: np.ndarray, finish: np.ndarray,
+                            graph: TaskGraph, comm_time: float = 0.0,
+                            pending: np.ndarray | None = None) -> np.ndarray:
+    """`schedule_slack` restricted to the pending (residual) subgraph.
+
+    Parameters
+    ----------
+    start, finish : np.ndarray
+        Hybrid per-task times (see `residual_schedule_times`).
+    graph : TaskGraph
+        The full task graph.
+    comm_time : float
+        Transfer delay charged on cross-rank dependency edges.
+    pending : np.ndarray, optional
+        Boolean mask of not-yet-started tasks (default: all). Frozen
+        tasks' history cannot be re-planned, so their entries are zeroed.
+
+    Returns
+    -------
+    np.ndarray
+        Per-task reclaimable slack; exactly `schedule_slack` for pending
+        tasks (frozen producers bound them through their observed
+        finishes), 0.0 for frozen ones.
+    """
+    slack = schedule_slack(start, finish, graph, comm_time)
+    if pending is not None:
+        slack = np.where(np.asarray(pending, dtype=bool), slack, 0.0)
+    return slack

@@ -40,6 +40,8 @@ PANEL_KINDS = frozenset({"POTRF", "GETRF", "GEQRT", "TSQRT"})
 
 @dataclasses.dataclass
 class Task:
+    """One kernel invocation of the factorization (see module docstring)."""
+
     tid: int
     kind: str
     k: int
@@ -53,6 +55,8 @@ class Task:
 
 @dataclasses.dataclass
 class TaskGraph:
+    """A factorization's task DAG plus its block-cyclic layout metadata."""
+
     name: str                      # "cholesky" | "lu" | "qr"
     n_tiles: int                   # T: matrix is (T*b) x (T*b)
     tile_size: int                 # b
@@ -62,10 +66,12 @@ class TaskGraph:
 
     @property
     def n_ranks(self) -> int:
+        """Number of MPI ranks: P * Q of the block-cyclic process grid."""
         return self.grid[0] * self.grid[1]
 
     @property
     def tile_bytes(self) -> int:
+        """Bytes of one b x b tile (the unit of cross-rank transfer)."""
         return self.tile_size * self.tile_size * self.dtype_bytes
 
     def successors(self) -> list[list[int]]:
@@ -93,6 +99,7 @@ class TaskGraph:
         return per
 
     def total_flops(self) -> float:
+        """Sum of the analytic flop counts over every task."""
         return sum(t.flops for t in self.tasks)
 
     # -- cached NumPy views (shared by the scheduler, slack, and CP code) --
@@ -172,6 +179,7 @@ class TaskGraph:
 
 
 def block_cyclic_owner(i: int, j: int, grid: tuple[int, int]) -> int:
+    """Rank owning tile (i, j) under the 2-D block-cyclic (P x Q) map."""
     p, q = grid
     return (i % p) * q + (j % q)
 
@@ -273,6 +281,7 @@ DAG_BUILDERS: dict[str, Callable[[int, int, tuple[int, int]], TaskGraph]] = {
 
 def build_dag(name: str, n_tiles: int, tile_size: int,
               grid: tuple[int, int]) -> TaskGraph:
+    """Build the named factorization's DAG ("cholesky" | "lu" | "qr")."""
     return DAG_BUILDERS[name](n_tiles, tile_size, grid)
 
 

@@ -55,6 +55,24 @@ def two_gear_split(proc: ProcessorModel, d_top: float, slack: float,
     below `proc.f_max` overruns `d_top + slack` when the slack is smaller
     than the forced slowdown -- the caller opted that task type into the
     slow cluster.
+
+    Parameters
+    ----------
+    proc : ProcessorModel
+        Supplies the gear ladder and the reference frequency `f_max`.
+    d_top : float
+        Task duration at the processor's top gear.
+    slack : float
+        Reclaimable window beyond `d_top` the plan may fill.
+    beta : float
+        Frequency sensitivity: d(f) = d_top * (beta * f_max/f + 1 - beta).
+    gears : tuple of Gear, optional
+        Restrict the split to this descending subtable of the ladder.
+
+    Returns
+    -------
+    list of (Gear, float)
+        Frequency segments whose total work equals the task's.
     """
     if gears is None:
         gears = proc.gears
@@ -112,6 +130,22 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
     remaining Python loop assembles the output lists from precomputed
     arrays. `gears` restricts the whole batch to a subtable, as in the
     scalar function.
+
+    Parameters
+    ----------
+    proc : ProcessorModel
+        Supplies the gear ladder and the reference frequency `f_max`.
+    d_top, slack : np.ndarray
+        Per-task top-gear durations and reclaimable windows.
+    beta : np.ndarray or float
+        Per-task (or shared) frequency sensitivity.
+    gears : tuple of Gear, optional
+        Restrict the whole batch to this descending subtable.
+
+    Returns
+    -------
+    list of list of (Gear, float)
+        Per-task segments, exactly what the scalar function would emit.
     """
     if gears is None:
         gears = proc.gears
@@ -194,6 +228,25 @@ def two_gear_split_batch_by_table(proc: ProcessorModel, d_top: np.ndarray,
     panel/solve/update classes), scattered back into task order; each task's
     segments are exactly what the scalar `two_gear_split` with its table
     would produce.
+
+    Parameters
+    ----------
+    proc : ProcessorModel
+        Supplies the reference frequency the durations are measured at.
+    d_top, slack : np.ndarray
+        Per-task top-gear durations and reclaimable windows.
+    beta : np.ndarray or float
+        Per-task (or shared) frequency sensitivity.
+    table_ids : np.ndarray
+        Index into `tables` per task.
+    tables : sequence of gear tuples
+        The asymmetric tables (each a descending subsequence of the
+        ladder).
+
+    Returns
+    -------
+    list of list of (Gear, float)
+        Per-task segments, each confined to its task's table.
     """
     d = np.asarray(d_top, dtype=float)
     s = np.asarray(slack, dtype=float)

@@ -74,10 +74,12 @@ class StepProfile:
 
     @property
     def lane_busy(self) -> dict[str, float]:
+        """Busy seconds per lane (mxu / hbm / ici)."""
         return {"mxu": self.mxu_s, "hbm": self.hbm_s, "ici": self.ici_s}
 
     @property
     def step_s(self) -> float:
+        """Step wall time under the profile's overlap assumption."""
         busy = self.lane_busy
         lo = max(busy.values())                   # perfect overlap
         hi = sum(busy.values())                   # fully serial
@@ -85,9 +87,11 @@ class StepProfile:
 
     @property
     def critical_lane(self) -> str:
+        """The zero-slack lane bounding the step (its critical path)."""
         return max(self.lane_busy, key=lambda k: self.lane_busy[k])
 
     def slack(self) -> dict[str, float]:
+        """Per-lane idle seconds: step time minus the lane's busy time."""
         t = self.step_s
         return {k: t - v for k, v in self.lane_busy.items()}
 
@@ -166,6 +170,7 @@ def register_lane_strategy(name: str, overhead: float = 0.0):
 
 
 def registered_lane_strategies() -> tuple[str, ...]:
+    """All registered lane-strategy names, in registration order."""
     return tuple(_LANE_REGISTRY)
 
 

@@ -103,10 +103,12 @@ class ProcessorModel:
     # -- gear helpers ------------------------------------------------------
     @property
     def f_max(self) -> float:
+        """Top-gear frequency in GHz (the reference for durations)."""
         return self.gears[0].freq_ghz
 
     @property
     def f_min(self) -> float:
+        """Lowest-gear frequency in GHz (the halt gear)."""
         return self.gears[-1].freq_ghz
 
     def gear_for_freq(self, freq_ghz: float) -> Gear:
@@ -151,6 +153,7 @@ class ProcessorModel:
 
     # -- power -------------------------------------------------------------
     def core_dynamic_w(self, gear: Gear, active: bool) -> float:
+        """Per-core dynamic (switching) power A*C*f*V^2 at this gear."""
         act = 1.0 if active else self.idle_activity
         # eff_cap in nF * f in GHz -> nF*1e-9 * GHz*1e9 = F*Hz; watts = C f V^2
         return self.eff_cap_nf * gear.freq_ghz * gear.voltage**2 * act
@@ -160,6 +163,7 @@ class ProcessorModel:
         return self.core_dynamic_w(gear, active) + self.i_sub_amps * gear.voltage
 
     def node_power_w(self, gear: Gear, active: bool) -> float:
+        """Whole-node power: all cores at this gear plus the nodal const."""
         return self.n_cores * self.core_power_w(gear, active) + self.p_const_watts
 
     def switch_energy_j(self, from_gear: Gear, to_gear: Gear) -> float:
@@ -172,6 +176,11 @@ class ProcessorModel:
 
 
 def make_processor(name: str, **overrides) -> ProcessorModel:
+    """Build a ProcessorModel from a published gear table (`GEAR_TABLES`).
+
+    Keyword overrides replace any `ProcessorModel` field (e.g.
+    `switch_latency_s=50e-6`).
+    """
     table = GEAR_TABLES[name]
     gears = tuple(Gear(i, f, v) for i, (f, v) in enumerate(table))
     return ProcessorModel(name=name, gears=gears, **overrides)
@@ -181,6 +190,7 @@ def make_processor(name: str, **overrides) -> ProcessorModel:
 # states (race-to-halt is the only hardware-supported strategy). Used by the
 # hardware-adaptation experiments (DESIGN.md S3.2).
 def make_tpu_like(name: str = "tpu_v5e_like") -> ProcessorModel:
+    """A single-gear accelerator model: only active vs idle power states."""
     # Model a v5e-ish chip: ~200 W active, ~60 W idle, one "gear".
     gears = (Gear(0, 0.94, 0.75),)  # nominal core clock / core voltage
     return ProcessorModel(
@@ -234,10 +244,12 @@ class MachineModel:
 
     @functools.cached_property
     def is_homogeneous(self) -> bool:
+        """True when every rank resolves to one (equal) processor model."""
         p0 = self.procs[0]
         return all(p is p0 or p == p0 for p in self.procs[1:])
 
     def proc_for_rank(self, rank: int) -> ProcessorModel:
+        """The processor rank `rank` runs (the pattern repeats over ranks)."""
         return self.procs[rank % len(self.procs)]
 
     def rank_procs(self, n_ranks: int) -> list[ProcessorModel]:

@@ -1,0 +1,264 @@
+"""Closed-loop online re-planning: the `tx_replan` strategy + replay driver.
+
+The paper's TX scheduler (and PR 3's `tx_online` noise study) commits ONCE
+to a plan derived from predicted task durations. When those predictions are
+noisy, the committed stretches drift away from reality and the drift
+*accumulates*: a task overrunning its window in iteration 2 poisons the
+slack estimates of everything planned for iterations 3..T. Rizvandi et al.
+show optimal gear choice is sensitive to exactly these duration estimates,
+and Calore et al. measure the model-vs-hardware drift that makes one-shot
+plans stale -- the classic cure is a feedback loop, and this module closes
+it:
+
+    wave 0          plan ALL tasks from the noisy estimates (this is
+                    exactly the tx_online plan), but COMMIT only the
+                    first `replan_every` iterations' gears;
+    observe         execute the committed prefix on the true durations
+                    (replay driver: one fast-engine simulation per wave)
+                    and read the realized finish times -- because d(f) is
+                    linear in a task's work, each observed finish reveals
+                    the executed task's TRUE top-gear duration, so the
+                    planner's estimate for the past snaps to ground truth;
+    wave w          re-derive the residual baseline / slack / TDS through
+                    `PlanContext.restricted_to(pending, anchor)` -- the
+                    executed prefix pinned at the anchor finishes, pending
+                    tasks predicted at the (still noisy) estimated
+                    durations -- and re-plan every not-yet-started task
+                    with the unchanged TX policy (`tx_policy_segments`:
+                    per-owner switch-latency floors, full per-rank
+                    MachineModel awareness), then commit the next wave;
+    repeat          until every iteration's gears are committed.
+
+Receding-horizon control, in scheduling clothes: estimation error can hurt
+at most one wave before the planner re-anchors on ground truth.
+
+Two anchoring modes (`StrategyConfig.replan_anchor`):
+
+  * "model" (default) -- the prefix is pinned at the *duration-reconciled*
+    top-gear reconstruction: the corrected estimates replayed through the
+    same baseline recursion TX plans against. This keeps the residual
+    analysis consistent with the TX slack model, and makes rel_err = 0 a
+    provable fixed point: every wave re-derives the perfect-knowledge `tx`
+    plan bit-for-bit (pinned by tests/test_replan.py).
+  * "observed" -- the prefix is pinned at the raw realized finish times,
+    so the planner also re-plans around engine effects the slack model
+    does not price (visible gear-switch stalls), at the cost of the exact
+    rel_err = 0 identity (gears still match; times shift by stall-induced
+    anchor drift).
+
+With `replan_every` >= the iteration count the loop degenerates to a
+single wave whose plan IS `tx_online`'s, bit for bit (same seeded noise
+draw, same policy, same realize-on-true-work rescale).
+
+The composite plan is expressed entirely in the `StrategyPlan` vocabulary
+both engines already implement -- per-task gear segments, per-rank idle
+gears, hidden switches -- so no engine change was needed and the lockstep
+obligation (docs/ARCHITECTURE.md: any engine-visible semantic must land in
+BOTH `simulate` and `simulate_reference`) is preserved trivially;
+registering the strategy auto-enrolls it in
+`tests/test_scheduler_differential.py` with exact fast-vs-oracle agreement.
+
+Waves partition the graph by panel iteration (`Task.k`), the natural
+re-planning epoch of a right-looking factorization: iteration boundaries
+are dependency-closed and per-rank program-order prefixes (validated by
+`critical_path.validate_frozen_closure`), so "everything before the wave"
+is a well-formed executed past. Graphs whose tasks share one iteration
+(e.g. synthetic DAGs) simply get the single-wave = tx_online behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .dag import TaskGraph
+from .scheduler import StrategyPlan, simulate
+from .strategies import (PlanContext, draw_duration_noise,
+                         realize_on_true_work, register_strategy,
+                         tx_policy_segments)
+
+REPLAN_ANCHORS = ("model", "observed")
+
+
+@dataclasses.dataclass
+class WaveRecord:
+    """Bookkeeping for one re-planning wave of the replay driver."""
+
+    wave: int                     # wave index, 0-based
+    iterations: tuple[int, int]   # [first, last] panel iteration committed
+    n_committed: int              # tasks whose gears were fixed this wave
+    n_observed: int               # tasks already realized when planning
+    residual_slack_s: float       # total slack the planner saw for pending
+    max_drift_s: float            # max |observed - reconciled model| finish
+    #                               over the executed prefix (0.0 on wave 0)
+
+
+@dataclasses.dataclass
+class ReplanOutcome:
+    """Result of the replay/feedback driver: the plan plus its trace."""
+
+    plan: StrategyPlan
+    waves: list[WaveRecord]
+
+    @property
+    def n_waves(self) -> int:
+        """Number of re-planning waves the driver executed."""
+        return len(self.waves)
+
+
+def iteration_waves(graph: TaskGraph, every: int) -> np.ndarray:
+    """Per-task wave ids: `every` consecutive panel iterations per wave.
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The task graph; tasks are grouped by their `Task.k` iteration.
+    every : int
+        Iterations per wave (>= 1). Iteration values need not be
+        contiguous; grouping is by position in the sorted unique values.
+
+    Returns
+    -------
+    np.ndarray
+        int64 wave id per task; wave w is exactly the tasks of the w-th
+        group of `every` iterations, so each wave boundary is a
+        dependency-closed, per-rank program-order prefix.
+    """
+    if every < 1:
+        raise ValueError(f"replan_every must be >= 1, got {every}")
+    iters = np.asarray([t.k for t in graph.tasks], dtype=np.int64)
+    if not len(iters):
+        return iters
+    uniq = np.unique(iters)                     # sorted
+    pos = np.searchsorted(uniq, iters)          # iteration -> position
+    return pos // every
+
+
+def replan_tx(ctx: PlanContext, every: int | None = None,
+              anchor: str | None = None) -> ReplanOutcome:
+    """The closed-loop replay/feedback driver behind `tx_replan`.
+
+    Runs the wave loop described in the module docstring: plan from noisy
+    estimates (`draw_duration_noise` -- the identical draw `tx_online`
+    uses), commit one wave of gears, simulate the committed prefix on the
+    true durations with the fast engine, reconcile the estimates with the
+    true work each observed finish reveals, re-derive the residual
+    slack/TDS through `PlanContext.restricted_to`, and re-plan the
+    remaining subgraph until every task is committed.
+
+    Parameters
+    ----------
+    ctx : PlanContext
+        Ground-truth planning context (its `durations` are the true ones
+        the committed plan is realized against). Heterogeneous
+        `MachineModel` contexts are fully supported -- the TX policy
+        floors and two-gear splits resolve per owning rank throughout.
+    every : int, optional
+        Iterations per wave; defaults to `ctx.cfg.replan_every`.
+    anchor : str, optional
+        "model" or "observed" (see module docstring); defaults to
+        `ctx.cfg.replan_anchor`.
+
+    Returns
+    -------
+    ReplanOutcome
+        The composite `StrategyPlan` (consumable by both engines
+        unchanged) and one `WaveRecord` per wave.
+    """
+    cfg = ctx.cfg
+    if every is None:
+        every = cfg.replan_every
+    if anchor is None:
+        anchor = cfg.replan_anchor
+    if anchor not in REPLAN_ANCHORS:
+        raise ValueError(f"replan_anchor must be one of {REPLAN_ANCHORS}, "
+                         f"got {anchor!r}")
+    graph = ctx.graph
+    n = ctx.n_tasks
+    idle, rank_idle = ctx._idle_gears(-1)
+
+    def compose(segs: list[list]) -> StrategyPlan:
+        return StrategyPlan("tx_replan", segs, idle_gear=idle,
+                            per_task_overhead=np.zeros(n),
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
+
+    wave_id = iteration_waves(graph, every)
+    if not n:
+        return ReplanOutcome(compose([]), [])
+
+    d_true = ctx.durations
+    eps = draw_duration_noise(cfg, n)
+    # the planner's current belief: the tx_online draw initially, snapped
+    # to ground truth task by task as observed finishes reveal true work
+    d_known = d_true * (1.0 + eps)
+    iters = np.asarray([t.k for t in graph.tasks], dtype=np.int64)
+
+    n_waves = int(wave_id.max()) + 1
+    segments: list[list] = [[] for _ in range(n)]
+    frozen = np.zeros(n, dtype=bool)
+    observed = np.zeros(n)
+    waves: list[WaveRecord] = []
+    for w in range(n_waves):
+        in_wave = wave_id == w
+        pending = ~frozen
+        est = ctx.with_durations(d_known)
+        if not frozen.any():
+            # wave 0 has no past to anchor on: the view IS the estimate
+            # context, so the first wave's decisions match tx_online's
+            view = est
+            drift = 0.0
+        else:
+            model_finish = np.asarray(est.baseline.finish, dtype=float)
+            drift = float(np.abs(observed[frozen]
+                                 - model_finish[frozen]).max())
+            pin = observed if anchor == "observed" else model_finish
+            view = est.restricted_to(pending, pin)
+        segs_est = tx_policy_segments(view)
+        segs_true = realize_on_true_work(segs_est, d_true, d_known)
+        for tid in np.flatnonzero(in_wave):
+            segments[tid] = segs_true[tid]
+        waves.append(WaveRecord(
+            wave=w,
+            iterations=(int(iters[in_wave].min()),
+                        int(iters[in_wave].max())),
+            n_committed=int(in_wave.sum()),
+            n_observed=int(frozen.sum()),
+            residual_slack_s=float(view.tds.slack_s[pending].sum()),
+            max_drift_s=drift))
+        frozen |= in_wave
+        if w + 1 < n_waves:
+            # replay: realize the committed prefix on the TRUE durations.
+            # Uncommitted tasks run as empty segment lists; a frozen
+            # task's timing depends only on its (frozen) dependencies and
+            # same-rank predecessors, so their realized times are exactly
+            # what the final composite schedule will produce.
+            partial = compose([segments[i] if frozen[i] else []
+                               for i in range(n)])
+            sched = simulate(graph, ctx.proc, ctx.cost, partial)
+            observed = np.asarray(sched.finish, dtype=float)
+            # feedback channel 1: each observed finish reveals the frozen
+            # task's true top-gear duration (d(f) is linear in work, and
+            # the executed gears are known), so the belief snaps to truth
+            d_known = np.where(frozen, d_true, d_known)
+    return ReplanOutcome(compose(segments), waves)
+
+
+@register_strategy
+class TxReplanStrategy:
+    """Closed-loop TX: per-wave re-planning from observed finish times.
+
+    `tx_online` with the loop closed (see the module docstring): the same
+    seeded noisy duration estimates (`tx_online_rel_err` /
+    `tx_online_seed`), but gears are committed `replan_every` panel
+    iterations at a time and the remaining slack/TDS is re-derived from
+    the realized schedule before each commit, so estimation error can
+    accumulate across at most one wave.
+    """
+
+    name = "tx_replan"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Plan via the replay driver; see `replan_tx`."""
+        return replan_tx(ctx).plan

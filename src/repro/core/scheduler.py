@@ -77,6 +77,7 @@ class CostModel:
     comm_latency_s: float = 5e-6
 
     def beta(self, kind: str) -> float:
+        """Frequency sensitivity of a task kind (1.0 = compute-bound)."""
         return self.freq_sensitivity.get(kind, 1.0)
 
     def duration_top(self, flops: float, kind: str, proc: ProcessorModel) -> float:
@@ -107,12 +108,15 @@ class CostModel:
         return flops / (f_max * 1e9 * self.flops_per_cycle * eff)
 
     def comm_time(self, graph: TaskGraph) -> float:
+        """Cross-rank transfer time of one tile: bytes/bandwidth + latency."""
         return graph.tile_bytes / (self.comm_bandwidth_gbs * 1e9) \
             + self.comm_latency_s
 
 
 @dataclasses.dataclass
 class RankSegment:
+    """One piecewise-constant span of a rank's timeline."""
+
     t0: float
     t1: float
     gear: Gear
@@ -126,6 +130,8 @@ SegColumns = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
 @dataclasses.dataclass
 class Schedule:
+    """A simulated execution: per-task times, per-rank timelines, energy."""
+
     graph: TaskGraph
     proc: ProcessorModel | MachineModel
     start: np.ndarray
@@ -155,6 +161,7 @@ class Schedule:
 
     @functools.cached_property
     def machine(self) -> MachineModel:
+        """The (possibly homogeneous-wrapped) per-rank machine model."""
         return as_machine(self.proc)
 
     @functools.cached_property
@@ -170,10 +177,12 @@ class Schedule:
 
     @property
     def makespan(self) -> float:
+        """End-to-end wall time: the latest task finish."""
         return float(self.finish.max()) if len(self.finish) else 0.0
 
     @property
     def n_nodes(self) -> int:
+        """Node count at `cores_per_node` ranks per node (min 1)."""
         return max(1, self.graph.n_ranks // self.cores_per_node)
 
     @staticmethod
@@ -223,6 +232,7 @@ class Schedule:
         return total
 
     def core_energy_j(self) -> float:
+        """CPU-core energy: per-rank power curves integrated over segments."""
         pw_tables = self._rank_power_tables()
         e = 0.0
         for pw, (t0, t1, gi, act) in zip(pw_tables, self.seg_columns):
@@ -231,6 +241,7 @@ class Schedule:
         return e
 
     def total_energy_j(self) -> float:
+        """Core energy + gear-switch energy + nodal constant * makespan."""
         return (self.core_energy_j() + self.switch_energy_j
                 + self.nodal_const_power_w() * self.makespan)
 
@@ -281,6 +292,7 @@ class StrategyPlan:
     rank_idle_gears: Sequence[Gear] | None = None   # per-rank idle override
 
     def idle_gear_for(self, rank: int) -> Gear:
+        """The gear rank `rank` waits at (per-rank override or global)."""
         if self.rank_idle_gears is not None:
             return self.rank_idle_gears[rank]
         return self.idle_gear
@@ -298,6 +310,23 @@ def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
     bit-identical to `simulate_reference` (the differential suite asserts
     this across randomized DAGs, grids, gear tables, strategies, and
     mixed per-rank machines).
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The task DAG with its block-cyclic ownership (owner computes).
+    proc : ProcessorModel or MachineModel
+        Power/gear model; a `MachineModel` assigns one per rank.
+    cost : CostModel
+        Supplies the cross-rank communication time.
+    plan : StrategyPlan
+        Per-task frequency segments plus the idle-gear / switch policy.
+
+    Returns
+    -------
+    Schedule
+        Per-task start/finish, per-rank segment columns, switch counts
+        and energy -- everything the energy model integrates over.
     """
     n = len(graph.tasks)
     n_ranks = graph.n_ranks
@@ -484,6 +513,18 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel | MachineModel,
     Slow but obviously correct: every pick scans all ranks' head tasks and
     re-derives feasibility from first principles. The differential suite
     runs this oracle against `simulate` and asserts agreement to 1e-9.
+
+    Parameters
+    ----------
+    graph, proc, cost, plan
+        Exactly as for `simulate`; the two engines are drop-in
+        interchangeable by contract.
+
+    Returns
+    -------
+    Schedule
+        The same schedule `simulate` produces (bit-identical timelines
+        and switch counts; switch-energy sums agree to 1e-9).
     """
     n = len(graph.tasks)
     comm = cost.comm_time(graph)

@@ -28,6 +28,12 @@ Built-in strategies:
                       (seeded, `tx_online_rel_err`) but realized on the
                       true work: quantifies how much of TX's savings
                       survive an imperfect cost model.
+ * tx_replan       -- closed-loop variant of tx_online (`core/replan.py`):
+                      same noisy estimates, but the schedule executes in
+                      per-iteration waves and the remaining slack/TDS is
+                      re-derived from *observed* finish times before each
+                      wave's gears are committed (receding-horizon
+                      re-planning via `PlanContext.restricted_to`).
  * tx              -- the paper's TDS mechanism made explicit: classify
                       every wait/slack window via `core/tds.py` (panel /
                       communication / load imbalance) and apply a per-class
@@ -73,14 +79,15 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from .critical_path import schedule_slack
+from .critical_path import (residual_schedule_slack, residual_schedule_times,
+                            schedule_slack)
 from .dag import TaskGraph
 from .dvfs import (duration_at, two_gear_split_batch,
                    two_gear_split_batch_by_table)
 from .energy_model import Gear, MachineModel, ProcessorModel, as_machine
 from .scheduler import CostModel, Schedule, StrategyPlan, simulate
-from .tds import (GEAR_CLASS_NAMES, WAIT_PANEL, TdsResult, analyze_tds,
-                  task_gear_classes)
+from .tds import (GEAR_CLASS_NAMES, WAIT_PANEL, TdsResult,
+                  analyze_residual_tds, analyze_tds, task_gear_classes)
 
 # The four strategies the paper evaluates (fixed, used by the paper-table
 # benchmarks); `registered_strategies()` additionally includes `tx` and any
@@ -120,9 +127,26 @@ class StrategyConfig:
     single_freq_slowdown_cap: float = 0.05
     # tx_online: relative cost-model error of the planner's duration
     # estimates (uniform in [-err, +err], per task; must be in [0, 1) so
-    # an estimate can never go non-positive) and the noise seed
+    # an estimate can never go non-positive) and the noise seed.
+    # tx_replan shares BOTH knobs -- the closed-loop planner starts from
+    # the identical noise draw, so any savings difference between the two
+    # is attributable to the feedback loop alone.
     tx_online_rel_err: float = 0.10
     tx_online_seed: int = 0
+    # tx_replan: iterations (panel steps k) per re-planning wave. 1 =
+    # re-derive residual slack/TDS from observed finishes before every
+    # iteration; a value >= the graph's iteration count degenerates to a
+    # single wave, i.e. exactly tx_online's one-shot plan.
+    replan_every: int = 1
+    # tx_replan: what the residual view is anchored on. "model" (default)
+    # pins the executed prefix at the duration-reconciled top-gear
+    # reconstruction -- the estimates corrected by the true work each
+    # observed finish reveals -- which makes rel_err = 0 a provable fixed
+    # point (plan bit-identical to `tx`). "observed" pins the prefix at
+    # the raw realized finish times instead: the planner additionally
+    # re-plans around engine effects the TX slack model does not price
+    # (visible switch stalls), at the cost of the exact-identity property.
+    replan_anchor: str = "model"
 
 
 class PlanContext:
@@ -153,14 +177,17 @@ class PlanContext:
 
     @property
     def n_tasks(self) -> int:
+        """Number of tasks in the context's graph."""
         return len(self.graph.tasks)
 
     @functools.cached_property
     def machine(self) -> MachineModel:
+        """The (possibly homogeneous-wrapped) per-rank machine model."""
         return as_machine(self.proc)
 
     @functools.cached_property
     def is_homogeneous(self) -> bool:
+        """True when every rank runs one (equal) processor model."""
         return self.machine.is_homogeneous
 
     @functools.cached_property
@@ -171,6 +198,7 @@ class PlanContext:
 
     @functools.cached_property
     def rank_procs(self) -> list[ProcessorModel]:
+        """Concrete per-rank processor list for this graph's rank count."""
         return self.machine.rank_procs(self.graph.n_ranks)
 
     @functools.cached_property
@@ -230,6 +258,55 @@ class PlanContext:
         ctx.__dict__["durations"] = np.asarray(durations, dtype=float)
         return ctx
 
+    def restricted_to(self, tasks: "np.ndarray | Sequence[int]",
+                      observed_finishes: np.ndarray) -> "ResidualPlanContext":
+        """A residual view: plan only `tasks`, anchored on observed times.
+
+        The closed-loop re-planning primitive (`core/replan.py`): mid-run,
+        with everything outside `tasks` already executed, the view's
+        `slack` and `tds` are re-derived on the residual subgraph from the
+        *hybrid* schedule -- frozen tasks pinned at their realized finish
+        times, pending tasks predicted forward at this context's (possibly
+        estimated) top-gear durations. Gears already burned into the past
+        cannot be revised, so frozen entries come back neutral (zero
+        slack, `WAIT_NONE`); plan-construction helpers
+        (`reclaimed_segments` etc.) keep working and simply emit don't-care
+        segments for frozen tasks.
+
+        Parameters
+        ----------
+        tasks : array-like
+            The pending (not-yet-started) tasks: either a boolean mask
+            over all tasks or an array of task ids. Must leave a frozen
+            complement that is dependency-closed and a per-rank
+            program-order prefix (`validate_frozen_closure`).
+        observed_finishes : np.ndarray
+            Full-length array of realized finish times; only frozen
+            entries are read.
+
+        Returns
+        -------
+        ResidualPlanContext
+            A sibling context sharing this context's graph, machine, cost
+            model, config, and durations, whose `slack`/`tds` are the
+            residual analyses.
+        """
+        tasks = np.asarray(tasks)
+        if tasks.dtype == bool:
+            if tasks.shape != (self.n_tasks,):
+                raise ValueError("pending mask must have one entry per task")
+            pending = tasks.copy()
+        else:
+            pending = np.zeros(self.n_tasks, dtype=bool)
+            pending[tasks] = True
+        ctx = ResidualPlanContext(self.graph, self.proc, self.cost, self.cfg)
+        ctx.__dict__["durations"] = self.durations
+        ctx.pending = pending
+        ctx.observed_finish = np.asarray(observed_finishes, dtype=float)
+        if ctx.observed_finish.shape != (self.n_tasks,):
+            raise ValueError("observed_finishes must have one entry per task")
+        return ctx
+
     @functools.cached_property
     def baseline(self) -> Schedule:
         """Pure peak-gear schedule with no overheads (the timing oracle).
@@ -264,6 +341,7 @@ class PlanContext:
 
     # -- plan-construction helpers (vectorized) ---------------------------
     def top_gear_segments(self) -> list[list]:
+        """One flat-out segment per task at its owner's top gear."""
         if self.is_homogeneous:
             top = self._uproc.gears[0]
             return [[(top, float(d))] for d in self.durations]
@@ -325,13 +403,57 @@ class PlanContext:
         return out
 
 
+class ResidualPlanContext(PlanContext):
+    """A `PlanContext` over the residual (not-yet-started) subgraph.
+
+    Built by `PlanContext.restricted_to`; carries a `pending` mask and the
+    `observed_finish` times of the frozen complement. `slack` and `tds`
+    are overridden with the residual analyses
+    (`critical_path.residual_schedule_slack`, `tds.analyze_residual_tds`)
+    over the hybrid observed/predicted schedule; everything else --
+    durations, per-rank machine structure, plan-construction helpers -- is
+    inherited unchanged. With an all-true `pending` mask the overrides
+    reproduce the parent context's `slack`/`tds` bit-identically.
+    """
+
+    pending: np.ndarray           # bool mask of plannable tasks
+    observed_finish: np.ndarray   # realized finishes (frozen entries read)
+
+    @functools.cached_property
+    def hybrid_times(self) -> tuple[np.ndarray, np.ndarray]:
+        """(start, finish) of the residual schedule: observed finishes for
+        frozen tasks, top-gear predictions (at this context's durations)
+        for pending ones."""
+        return residual_schedule_times(
+            self.graph, self.durations, self.cost.comm_time(self.graph),
+            frozen=~self.pending, observed_finish=self.observed_finish)
+
+    @functools.cached_property
+    def slack(self) -> np.ndarray:
+        """Residual local slack (0.0 for frozen tasks)."""
+        start, finish = self.hybrid_times
+        return residual_schedule_slack(start, finish, self.graph,
+                                       self.cost.comm_time(self.graph),
+                                       pending=self.pending)
+
+    @functools.cached_property
+    def tds(self) -> TdsResult:
+        """Residual TDS analysis (neutral entries for frozen tasks)."""
+        start, finish = self.hybrid_times
+        return analyze_residual_tds(self.graph, start, finish,
+                                    self.cost.comm_time(self.graph),
+                                    pending=self.pending, slack=self.slack)
+
+
 @runtime_checkable
 class Strategy(Protocol):
     """A named planner: consumes a shared PlanContext, emits a StrategyPlan."""
 
     name: str
 
-    def plan(self, ctx: PlanContext) -> StrategyPlan: ...
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Emit this strategy's StrategyPlan for the given context."""
+        ...
 
 
 _REGISTRY: dict[str, Strategy] = {}
@@ -351,6 +473,7 @@ def register_strategy(cls: type) -> type:
 
 
 def get_strategy(name: str) -> Strategy:
+    """Look up a registered strategy by name (ValueError when unknown)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -370,6 +493,7 @@ class OriginalStrategy:
     name = "original"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Top gear everywhere, idle at the top gear too."""
         idle, rank_idle = ctx._idle_gears(0)
         return StrategyPlan(self.name, ctx.top_gear_segments(),
                             idle_gear=idle,
@@ -385,6 +509,7 @@ class RaceToHaltStrategy:
     name = "race_to_halt"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Top gear while computing, halt gear while idle."""
         idle, rank_idle = ctx._idle_gears(-1)
         return StrategyPlan(self.name, ctx.top_gear_segments(),
                             idle_gear=idle,
@@ -401,6 +526,7 @@ class CpAwareStrategy:
     name = "cp_aware"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Stretch into measured slack, minus the guard band."""
         cfg = ctx.cfg
         segs = ctx.reclaimed_segments(ctx.slack * cfg.cp_aware_slack_use,
                                       cfg.min_reclaim_s)
@@ -419,6 +545,7 @@ class AlgorithmicStrategy:
     name = "algorithmic"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Stretch into the full offline-computed slack."""
         cfg = ctx.cfg
         segs = ctx.reclaimed_segments(ctx.slack * cfg.algorithmic_slack_use,
                                       cfg.min_reclaim_s)
@@ -427,6 +554,101 @@ class AlgorithmicStrategy:
                             per_task_overhead=np.zeros(ctx.n_tasks),
                             hide_switch_in_wait=True,
                             rank_idle_gears=rank_idle)
+
+
+# -- shared TX policy machinery (used by tx, tx_online, and tx_replan) ------
+
+def tx_policy_segments(ctx: PlanContext) -> list[list]:
+    """The TX per-wait-class reclamation policy as segment lists.
+
+    Classifies every task's slack via `ctx.tds` (panel / communication /
+    load imbalance), reclaims comm/imbalance slack down to
+    `tx_min_reclaim_switches` of the *owning rank's* switch latency, stays
+    conservative (`tx_panel_slack_use`) on panel-bound slack, and batches
+    the two-gear splits per distinct processor. Shared verbatim by the
+    `tx`, `tx_online`, and `tx_replan` strategies -- on a
+    `ResidualPlanContext` the TDS arrays are the residual ones, so frozen
+    tasks come back with don't-care top-gear segments the caller discards.
+
+    Parameters
+    ----------
+    ctx : PlanContext
+        Shared planning inputs; may be a `with_durations` estimate sibling
+        or a `restricted_to` residual view.
+
+    Returns
+    -------
+    list of list of (Gear, float)
+        Per-task frequency segments, indexed by task id.
+    """
+    cfg = ctx.cfg
+    tds = ctx.tds
+    panel_bound = tds.slack_class == WAIT_PANEL
+    usable = tds.slack_s * np.where(panel_bound,
+                                    cfg.tx_panel_slack_use, 1.0)
+    # reclaim floor in units of the *owning rank's* switch latency
+    threshold = np.where(
+        panel_bound, cfg.min_reclaim_s,
+        cfg.tx_min_reclaim_switches * ctx.task_switch_latency_s)
+    return ctx.reclaimed_segments(usable, threshold)
+
+
+def draw_duration_noise(cfg: StrategyConfig, n_tasks: int) -> np.ndarray:
+    """The seeded relative duration-estimate noise of the online planners.
+
+    Validates and applies the `tx_online_rel_err` / `tx_online_seed`
+    knobs; `tx_online` and `tx_replan` both draw through this helper so
+    the two plan from the *identical* noisy estimates.
+
+    Parameters
+    ----------
+    cfg : StrategyConfig
+        Supplies `tx_online_rel_err` (must be in [0, 1)) and
+        `tx_online_seed`.
+    n_tasks : int
+        Number of per-task noise factors to draw.
+
+    Returns
+    -------
+    np.ndarray
+        eps with d_est = d_true * (1 + eps), eps ~ U[-err, +err].
+    """
+    if not 0.0 <= cfg.tx_online_rel_err < 1.0:
+        # err >= 1 could drive an estimated duration negative, breaking
+        # the executes-true-work guarantee
+        raise ValueError("tx_online_rel_err must be in [0, 1), got "
+                         f"{cfg.tx_online_rel_err}")
+    rng = np.random.default_rng(cfg.tx_online_seed)
+    return rng.uniform(-cfg.tx_online_rel_err, cfg.tx_online_rel_err,
+                       n_tasks)
+
+
+def realize_on_true_work(segs: list[list], d_true: np.ndarray,
+                         d_est: np.ndarray) -> list[list]:
+    """Rescale estimate-derived segments so they perform the true work.
+
+    Because d(f) is linear in a task's work, multiplying every segment
+    time by d_true / d_est makes the chosen gears execute exactly the real
+    task: a planner that underestimated overruns its window (and the
+    simulator charges the induced delays), but the work is never wrong.
+
+    Parameters
+    ----------
+    segs : list of list of (Gear, float)
+        Per-task segments planned from the estimated durations.
+    d_true, d_est : np.ndarray
+        True and estimated top-gear durations, indexed by task id.
+
+    Returns
+    -------
+    list of list of (Gear, float)
+        The realized segments (input lists are reused when the ratio is
+        exactly 1).
+    """
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = np.where(d_est > 0.0, d_true / d_est, 1.0)
+    return [[(g, t * r) for g, t in s] if r != 1.0 else s
+            for s, r in zip(segs, ratio)]
 
 
 @register_strategy
@@ -456,16 +678,8 @@ class TxStrategy:
     name = "tx"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
-        cfg = ctx.cfg
-        tds = ctx.tds
-        panel_bound = tds.slack_class == WAIT_PANEL
-        usable = tds.slack_s * np.where(panel_bound,
-                                        cfg.tx_panel_slack_use, 1.0)
-        # reclaim floor in units of the *owning rank's* switch latency
-        threshold = np.where(
-            panel_bound, cfg.min_reclaim_s,
-            cfg.tx_min_reclaim_switches * ctx.task_switch_latency_s)
-        segs = ctx.reclaimed_segments(usable, threshold)
+        """Apply the per-wait-class TX policy (tx_policy_segments)."""
+        segs = tx_policy_segments(ctx)
         idle, rank_idle = ctx._idle_gears(-1)
         return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
@@ -500,6 +714,7 @@ class TaskTypeGearsStrategy:
     name = "task_type_gears"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Slack reclamation confined to per-class tables."""
         cfg = ctx.cfg
 
         # resolved per distinct processor: on a mixed machine each rank's
@@ -546,6 +761,7 @@ class SingleFreqOptStrategy:
     name = "single_freq_opt"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Sweep uniform gears, keep the cheapest feasible."""
         cap = ctx.baseline.makespan * (1.0 + ctx.cfg.single_freq_slowdown_cap)
         if ctx.is_homogeneous:
             proc = ctx._uproc
@@ -620,30 +836,12 @@ class TxOnlineStrategy:
     name = "tx_online"
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
-        cfg = ctx.cfg
-        if not 0.0 <= cfg.tx_online_rel_err < 1.0:
-            # err >= 1 could drive an estimated duration negative, breaking
-            # the executes-true-work guarantee
-            raise ValueError("tx_online_rel_err must be in [0, 1), got "
-                             f"{cfg.tx_online_rel_err}")
+        """Plan TX on noisy estimates, realize the true work."""
         d_true = ctx.durations
-        rng = np.random.default_rng(cfg.tx_online_seed)
-        eps = rng.uniform(-cfg.tx_online_rel_err, cfg.tx_online_rel_err,
-                          ctx.n_tasks)
+        eps = draw_duration_noise(ctx.cfg, ctx.n_tasks)
         d_est = d_true * (1.0 + eps)
         est = ctx.with_durations(d_est)
-        tds = est.tds
-        panel_bound = tds.slack_class == WAIT_PANEL
-        usable = tds.slack_s * np.where(panel_bound,
-                                        cfg.tx_panel_slack_use, 1.0)
-        threshold = np.where(
-            panel_bound, cfg.min_reclaim_s,
-            cfg.tx_min_reclaim_switches * ctx.task_switch_latency_s)
-        segs = est.reclaimed_segments(usable, threshold)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            ratio = np.where(d_est > 0.0, d_true / d_est, 1.0)
-        segs = [[(g, t * r) for g, t in s] if r != 1.0 else s
-                for s, r in zip(segs, ratio)]
+        segs = realize_on_true_work(tx_policy_segments(est), d_true, d_est)
         idle, rank_idle = ctx._idle_gears(-1)
         return StrategyPlan(self.name, segs, idle_gear=idle,
                             per_task_overhead=np.zeros(ctx.n_tasks),
@@ -659,12 +857,32 @@ def make_plan(name: str, graph: TaskGraph,
     Evaluating several strategies on one graph? Build one `PlanContext`
     and call each strategy's `.plan(ctx)` -- or use `evaluate_strategies`
     -- so the baseline schedule/slack/TDS are computed once, not per call.
+
+    Parameters
+    ----------
+    name : str
+        A registered strategy name (`registered_strategies()` lists them).
+    graph : TaskGraph
+        The factorization DAG to plan.
+    proc : ProcessorModel or MachineModel
+        Power/gear model; a `MachineModel` assigns one per rank.
+    cost : CostModel
+        Task/communication cost model.
+    cfg : StrategyConfig, optional
+        Policy knobs (defaults when omitted).
+
+    Returns
+    -------
+    StrategyPlan
+        The strategy's plan, consumable by either engine.
     """
     return get_strategy(name).plan(PlanContext(graph, proc, cost, cfg))
 
 
 @dataclasses.dataclass
 class StrategyResult:
+    """One strategy's simulated outcome plus percentages vs `original`."""
+
     name: str
     makespan_s: float
     energy_j: float
@@ -686,6 +904,25 @@ def evaluate_strategies(graph: TaskGraph,
     The reference is the context's baseline schedule (identical to the
     `original` strategy's), simulated regardless of whether -- or where --
     "original" appears in `names`.
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The factorization DAG to plan and simulate.
+    proc : ProcessorModel or MachineModel
+        Power/gear model; a `MachineModel` assigns one per rank.
+    cost : CostModel
+        Task/communication cost model.
+    names : tuple of str
+        Registered strategy names to evaluate (default: the paper's four).
+    cfg : StrategyConfig, optional
+        Policy knobs shared by every strategy (defaults when omitted).
+
+    Returns
+    -------
+    dict of str to StrategyResult
+        Per-strategy makespan/energy/switches plus slowdown and savings
+        percentages vs `original`, keyed by strategy name.
     """
     ctx = PlanContext(graph, proc, cost, cfg)
     ref = ctx.baseline

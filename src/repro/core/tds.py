@@ -128,6 +128,7 @@ class TdsResult:
         return frozenset(self.graph.tasks[tid].deps)
 
     def dependency_counts(self) -> np.ndarray:
+        """Per-task TDS cardinality: how many producers each task consumes."""
         return np.asarray([len(t.deps) for t in self.graph.tasks],
                           dtype=np.int64)
 
@@ -155,10 +156,25 @@ def analyze_tds(graph: TaskGraph, start: np.ndarray, finish: np.ndarray,
                 slack: np.ndarray | None = None) -> TdsResult:
     """Classify every task's wait and slack on a concrete schedule.
 
-    `start`/`finish` are per-task times of a baseline (usually top-gear)
-    schedule; classification semantics assume ranks execute their tasks in
-    program order, as both simulator engines do. `slack` lets a caller that
-    already ran `schedule_slack` on this schedule (PlanContext) share it.
+    Parameters
+    ----------
+    graph : TaskGraph
+        The scheduled task graph.
+    start, finish : np.ndarray
+        Per-task times of a baseline (usually top-gear) schedule;
+        classification semantics assume ranks execute their tasks in
+        program order, as both simulator engines do.
+    comm_time : float
+        Transfer delay charged on cross-rank dependency edges.
+    slack : np.ndarray, optional
+        Lets a caller that already ran `schedule_slack` on this schedule
+        (PlanContext) share it instead of recomputing.
+
+    Returns
+    -------
+    TdsResult
+        Per-task wait/slack seconds, their panel/comm/imbalance classes,
+        and the binding dependency/consumer representatives.
     """
     n = len(graph.tasks)
     start = np.asarray(start, dtype=float)
@@ -229,6 +245,61 @@ def analyze_tds(graph: TaskGraph, start: np.ndarray, finish: np.ndarray,
                      wait_s=wait, wait_class=wait_class,
                      binding_dep=binding_dep, slack_s=slack,
                      slack_class=slack_class, binding_consumer=binding_consumer)
+
+
+def analyze_residual_tds(graph: TaskGraph, start: np.ndarray,
+                         finish: np.ndarray, comm_time: float = 0.0,
+                         pending: np.ndarray | None = None,
+                         slack: np.ndarray | None = None) -> TdsResult:
+    """TDS analysis restricted to the pending (residual) subgraph.
+
+    The closed-loop re-planning counterpart of `analyze_tds`
+    (`core/replan.py`): `start`/`finish` are *hybrid* times -- observed
+    realized finishes for already-executed (frozen) tasks, predicted
+    top-gear times for pending ones, as produced by
+    `critical_path.residual_schedule_times` -- so every pending task's
+    wait and slack is re-derived anchored on what actually happened.
+    Frozen tasks cannot be re-planned: their entries come back neutral
+    (zero seconds, `WAIT_NONE`, binding ids of -1).
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The full task graph (the residual subgraph is selected by mask).
+    start, finish : np.ndarray
+        Hybrid per-task times (see `residual_schedule_times`; frozen
+        tasks' `start` entries are never read).
+    comm_time : float
+        Transfer delay charged on cross-rank dependency edges.
+    pending : np.ndarray, optional
+        Boolean mask of not-yet-started tasks (default: all, in which
+        case this is exactly `analyze_tds`).
+    slack : np.ndarray, optional
+        Precomputed `residual_schedule_slack` over the same times.
+
+    Returns
+    -------
+    TdsResult
+        The full-graph result with frozen entries neutralized; pending
+        entries are identical to `analyze_tds` on the hybrid schedule.
+    """
+    res = analyze_tds(graph, start, finish, comm_time, slack=slack)
+    if pending is None:
+        return res
+    done = ~np.asarray(pending, dtype=bool)
+    if not done.any():
+        return res
+    # analyze_tds stores a caller-passed `slack` array into the result
+    # without copying; detach before neutralizing so the masking can never
+    # write through into the caller's array
+    res.slack_s = res.slack_s.copy()
+    res.wait_s[done] = 0.0
+    res.wait_class[done] = WAIT_NONE
+    res.binding_dep[done] = -1
+    res.slack_s[done] = 0.0
+    res.slack_class[done] = WAIT_NONE
+    res.binding_consumer[done] = -1
+    return res
 
 
 def compute_tds(graph: TaskGraph, proc, cost) -> TdsResult:

@@ -1,0 +1,310 @@
+"""Tests for closed-loop online re-planning (`core/replan.py`, ISSUE 5).
+
+Engine agreement for `tx_replan` is covered by the differential suite (it
+is registered, so `tests/test_scheduler_differential.py` auto-enrolls it);
+this module checks the *policy* and *substrate* semantics:
+
+  * fixed points -- with `rel_err = 0` the composite plan is bit-identical
+    to `tx` (the "model" anchor makes perfect knowledge a provable fixed
+    point of the wave loop), and a single-wave run (`replan_every` >= the
+    iteration count) is bit-identical to `tx_online`;
+  * retention -- on a seeded noise sweep (the `strategy_gap` benchmark's
+    configuration), `tx_replan`'s mean realized savings are never worse
+    than `tx_online`'s at any error level, for both anchoring modes;
+  * residual substrate -- `residual_schedule_times`, `analyze_residual_tds`
+    and `PlanContext.restricted_to` invariants on hand-built DAGs where
+    the anchored starts/waits/slacks are derivable on paper, plus the
+    closure validation that rejects ill-formed frozen sets;
+  * driver bookkeeping -- wave partitioning, commit counts, trace records,
+    and config validation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, PlanContext, StrategyConfig, build_dag,
+                        make_big_little, make_plan, make_processor,
+                        registered_strategies, replan_tx, simulate)
+from repro.core.critical_path import (residual_schedule_times,
+                                      validate_frozen_closure)
+from repro.core.dag import Task, TaskGraph
+from repro.core.replan import iteration_waves
+from repro.core.tds import WAIT_NONE, WAIT_PANEL, analyze_residual_tds
+
+PROC = make_processor("arc_opteron_6128")
+COST = CostModel()
+
+
+def _ctx(fact="cholesky", n_tiles=8, tile=512, grid=(2, 2), cfg=None,
+         proc=PROC):
+    return PlanContext(build_dag(fact, n_tiles, tile, grid), proc, COST, cfg)
+
+
+def _segments_identical(a, b):
+    """Exact (gear-index, seconds) equality of two plans' segment lists."""
+    if len(a.task_segments) != len(b.task_segments):
+        return False
+    return all([(g.index, t) for g, t in sa] == [(g.index, t) for g, t in sb]
+               for sa, sb in zip(a.task_segments, b.task_segments))
+
+
+# ------------------------------------------------------------- registration
+def test_registered_and_enrolled():
+    """tx_replan is in the registry => auto-enrolled in the differential
+    suite (which parametrizes over `registered_strategies()`)."""
+    assert "tx_replan" in registered_strategies()
+
+
+# -------------------------------------------------------------- fixed points
+@pytest.mark.parametrize("fact", ["cholesky", "lu", "qr"])
+def test_zero_error_plan_identical_to_tx(fact):
+    """rel_err = 0: every wave re-derives the perfect-knowledge TX plan,
+    so the composite is bit-identical to the one-shot `tx`."""
+    cfg = StrategyConfig(tx_online_rel_err=0.0)
+    ctx = _ctx(fact, n_tiles=6, cfg=cfg)
+    out = replan_tx(ctx)
+    tx = make_plan("tx", ctx.graph, PROC, COST, cfg)
+    assert out.n_waves == 6
+    assert _segments_identical(out.plan, tx)
+
+
+def test_zero_error_plan_identical_to_tx_heterogeneous():
+    """The fixed point survives per-rank machines (per-owner floors and
+    per-ladder splits throughout)."""
+    machine = make_big_little(n_big=2, n_little=2)
+    cfg = StrategyConfig(tx_online_rel_err=0.0)
+    ctx = _ctx("cholesky", n_tiles=6, cfg=cfg, proc=machine)
+    out = replan_tx(ctx)
+    tx = make_plan("tx", ctx.graph, machine, COST, cfg)
+    assert _segments_identical(out.plan, tx)
+
+
+def test_single_wave_equals_tx_online():
+    """replan_every >= iteration count => one wave => exactly the
+    tx_online plan (same seeded noise draw, same policy, same rescale)."""
+    cfg = StrategyConfig(tx_online_rel_err=0.25, tx_online_seed=5,
+                         replan_every=1000)
+    ctx = _ctx(cfg=cfg)
+    out = replan_tx(ctx)
+    online = make_plan("tx_online", ctx.graph, PROC, COST, cfg)
+    assert out.n_waves == 1
+    assert _segments_identical(out.plan, online)
+
+
+def test_deterministic():
+    """Same (seed, rel_err, cadence) => identical plans across calls."""
+    cfg = StrategyConfig(tx_online_rel_err=0.2, tx_online_seed=11)
+    a = replan_tx(_ctx(cfg=cfg)).plan
+    b = replan_tx(_ctx(cfg=cfg)).plan
+    assert _segments_identical(a, b)
+
+
+def test_executes_true_work():
+    """Whatever the noise and cadence, the committed segments perform each
+    task's real work (the planner may misjudge windows, never the work)."""
+    from repro.core import duration_at
+    cfg = StrategyConfig(tx_online_rel_err=0.4, tx_online_seed=7,
+                         replan_every=2)
+    ctx = _ctx(cfg=cfg)
+    plan = replan_tx(ctx).plan
+    for tid, segs in enumerate(plan.task_segments):
+        d = float(ctx.durations[tid])
+        if d <= 0.0 or not segs:
+            continue
+        b = float(ctx.betas[tid])
+        work = sum(t / duration_at(d, PROC.f_max, g.freq_ghz, b)
+                   for g, t in segs)
+        assert work == pytest.approx(1.0, rel=1e-9), tid
+
+
+# ------------------------------------------------------------------ retention
+def _mean_saved(graph, name, err, seeds=(0, 1, 2), **cfg_kw):
+    base = simulate(graph, PROC, COST,
+                    make_plan("original", graph, PROC, COST))
+    e0 = base.total_energy_j()
+    vals = []
+    for seed in seeds:
+        cfg = StrategyConfig(tx_online_rel_err=err, tx_online_seed=seed,
+                             **cfg_kw)
+        sched = simulate(graph, PROC, COST,
+                         make_plan(name, graph, PROC, COST, cfg))
+        vals.append(1.0 - sched.total_energy_j() / e0)
+    return float(np.mean(vals))
+
+
+@pytest.mark.parametrize("anchor", ["model", "observed"])
+def test_retention_never_worse_than_tx_online(anchor):
+    """Seeded sweep (the strategy_gap benchmark's graph): at every error
+    level the closed loop retains at least tx_online's savings."""
+    graph = build_dag("cholesky", 8, 512, (2, 2))
+    for err in (0.0, 0.05, 0.10, 0.20, 0.40):
+        online = _mean_saved(graph, "tx_online", err)
+        closed = _mean_saved(graph, "tx_replan", err, replan_anchor=anchor)
+        assert closed >= online - 1e-12, (anchor, err, online, closed)
+
+
+def test_equal_savings_at_zero_error():
+    """rel_err = 0 (default "model" anchor): savings equal tx's exactly."""
+    graph = build_dag("cholesky", 8, 512, (2, 2))
+    tx = simulate(graph, PROC, COST,
+                  make_plan("tx", graph, PROC, COST,
+                            StrategyConfig(tx_online_rel_err=0.0)))
+    rp = simulate(graph, PROC, COST,
+                  make_plan("tx_replan", graph, PROC, COST,
+                            StrategyConfig(tx_online_rel_err=0.0)))
+    assert rp.total_energy_j() == tx.total_energy_j()
+    assert rp.makespan == tx.makespan
+
+
+# ------------------------------------------------- residual substrate (tiny)
+def _task(tid, kind, owner, flops, deps, tile):
+    return Task(tid=tid, kind=kind, k=0, i=tile[0], j=tile[1], owner=owner,
+                flops=flops, deps=deps, out_tile=tile)
+
+
+def _graph(tasks, grid=(1, 2)):
+    return TaskGraph("synthetic", n_tiles=2, tile_size=128, grid=grid,
+                     tasks=tasks)
+
+
+def test_residual_times_no_frozen_matches_baseline():
+    """With nothing frozen the residual recursion IS the baseline,
+    bit-identically, for all three factorizations."""
+    for fact in ("cholesky", "lu", "qr"):
+        ctx = _ctx(fact, n_tiles=5, tile=256)
+        start, finish = residual_schedule_times(
+            ctx.graph, ctx.durations, COST.comm_time(ctx.graph))
+        base = ctx.baseline
+        np.testing.assert_array_equal(start, base.start, err_msg=fact)
+        np.testing.assert_array_equal(finish, base.finish, err_msg=fact)
+
+
+def test_residual_times_anchor_on_observed():
+    """A frozen producer's observed (late) finish pushes its consumer's
+    predicted start by exactly the observation + wire time."""
+    g = _graph([
+        _task(0, "POTRF", 0, 1e9, [], (0, 0)),
+        _task(1, "TRSM", 1, 1e8, [0], (1, 0)),
+    ])
+    d = COST.durations_top(g, PROC)
+    comm = COST.comm_time(g)
+    frozen = np.array([True, False])
+    late = float(d[0]) * 3.0
+    start, finish = residual_schedule_times(
+        g, d, comm, frozen=frozen, observed_finish=np.array([late, 0.0]))
+    assert start[1] == late + comm
+    assert finish[1] == start[1] + d[1]
+
+
+def test_residual_slack_and_tds_masking():
+    """Frozen entries come back neutral; pending entries match a hand
+    derivation: B waits on frozen A's observed finish (panel wait), C's
+    slack is bounded by the makespan."""
+    g = _graph([
+        _task(0, "POTRF", 0, 1e9, [], (0, 0)),     # frozen
+        _task(1, "TRSM", 1, 1e8, [0], (1, 0)),     # pending, rank 1
+        _task(2, "GEMM", 0, 5e7, [], (0, 1)),      # pending, rank 0
+    ])
+    d = COST.durations_top(g, PROC)
+    comm = COST.comm_time(g)
+    frozen = np.array([True, False, False])
+    obs = np.array([float(d[0]) * 2.0, 0.0, 0.0])
+    start, finish = residual_schedule_times(g, d, comm, frozen=frozen,
+                                            observed_finish=obs)
+    tds = analyze_residual_tds(g, start, finish, comm, pending=~frozen)
+    # frozen task: fully neutral
+    assert tds.wait_class[0] == WAIT_NONE
+    assert tds.slack_s[0] == 0.0
+    assert tds.binding_dep[0] == -1 and tds.binding_consumer[0] == -1
+    # B is rank 1's head: waits from 0 until A's observed output arrives
+    assert tds.wait_s[1] == pytest.approx(obs[0] + comm)
+    assert tds.wait_class[1] == WAIT_PANEL
+    assert tds.binding_dep[1] == 0
+    # C runs immediately after frozen A on rank 0; its slack reaches the
+    # makespan (B finishes last)
+    assert start[2] == obs[0]
+    assert tds.slack_s[2] == pytest.approx(finish[1] - finish[2])
+
+
+def test_restricted_to_all_pending_matches_parent():
+    """An all-pending view anchored on the parent baseline's finishes
+    reproduces the parent's slack/TDS bit-identically."""
+    ctx = _ctx("lu", n_tiles=5, tile=256)
+    view = ctx.restricted_to(np.ones(ctx.n_tasks, dtype=bool),
+                             ctx.baseline.finish)
+    np.testing.assert_array_equal(view.slack, ctx.slack)
+    np.testing.assert_array_equal(view.tds.slack_class, ctx.tds.slack_class)
+    np.testing.assert_array_equal(view.tds.wait_s, ctx.tds.wait_s)
+
+
+def test_restricted_to_validates_shapes():
+    ctx = _ctx(n_tiles=3)
+    with pytest.raises(ValueError):
+        ctx.restricted_to(np.ones(2, dtype=bool), np.zeros(ctx.n_tasks))
+    with pytest.raises(ValueError):
+        ctx.restricted_to(np.ones(ctx.n_tasks, dtype=bool), np.zeros(3))
+
+
+def test_frozen_closure_validation():
+    """Non-prefix / non-dependency-closed frozen sets are rejected."""
+    g = _graph([
+        _task(0, "POTRF", 0, 1e9, [], (0, 0)),
+        _task(1, "GEMM", 0, 1e8, [], (0, 1)),      # independent, same rank
+        _task(2, "GEMM", 1, 1e8, [1], (1, 1)),
+    ])
+    # freezing a consumer without its dependency
+    with pytest.raises(ValueError, match="dependency-closed"):
+        validate_frozen_closure(g, np.array([False, False, True]))
+    # freezing rank 0's 2nd task without its 1st (deps are fine: none)
+    with pytest.raises(ValueError, match="prefix"):
+        validate_frozen_closure(g, np.array([False, True, False]))
+    # a valid prefix passes
+    validate_frozen_closure(g, np.array([True, True, False]))
+    with pytest.raises(ValueError, match="observed_finish"):
+        residual_schedule_times(g, np.ones(3), 0.0,
+                                frozen=np.array([True, False, False]))
+
+
+# ------------------------------------------------------------ driver details
+def test_iteration_waves_partition():
+    g = build_dag("cholesky", 7, 256, (2, 2))
+    for every, expect in ((1, 7), (2, 4), (3, 3), (7, 1), (100, 1)):
+        w = iteration_waves(g, every)
+        assert int(w.max()) + 1 == expect, every
+        # wave ids are non-decreasing in iteration k
+        iters = np.asarray([t.k for t in g.tasks])
+        order = np.argsort(iters, kind="stable")
+        assert (np.diff(w[order]) >= 0).all()
+    with pytest.raises(ValueError):
+        iteration_waves(g, 0)
+
+
+def test_wave_records():
+    cfg = StrategyConfig(tx_online_rel_err=0.2, replan_every=2)
+    ctx = _ctx(n_tiles=7, cfg=cfg)
+    out = replan_tx(ctx)
+    assert out.n_waves == 4
+    assert sum(w.n_committed for w in out.waves) == ctx.n_tasks
+    assert out.waves[0].n_observed == 0 and out.waves[0].max_drift_s == 0.0
+    observed = [w.n_observed for w in out.waves]
+    assert observed == sorted(observed) and observed[-1] > 0
+    # under noise the loop must actually be observing drift
+    assert any(w.max_drift_s > 0.0 for w in out.waves[1:])
+
+
+def test_invalid_config_rejected():
+    ctx = _ctx(n_tiles=3)
+    with pytest.raises(ValueError, match="replan_every"):
+        replan_tx(ctx, every=0)
+    with pytest.raises(ValueError, match="replan_anchor"):
+        replan_tx(ctx, anchor="psychic")
+    with pytest.raises(ValueError, match="tx_online_rel_err"):
+        replan_tx(_ctx(n_tiles=3,
+                       cfg=StrategyConfig(tx_online_rel_err=1.5)))
+
+
+def test_make_plan_dispatches():
+    g = build_dag("qr", 4, 256, (2, 2))
+    plan = make_plan("tx_replan", g, PROC, COST)
+    assert plan.name == "tx_replan"
+    assert len(plan.task_segments) == len(g.tasks)

@@ -302,7 +302,8 @@ def test_registry_covers_legacy_and_tx():
     """The randomized cases above parametrize over the live registry; this
     pins the minimum population they must cover."""
     for name in ("original", "race_to_halt", "cp_aware", "algorithmic", "tx",
-                 "task_type_gears", "single_freq_opt", "tx_online"):
+                 "task_type_gears", "single_freq_opt", "tx_online",
+                 "tx_replan"):
         assert name in ALL_STRATEGIES
 
 
