@@ -20,6 +20,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.critical_path import validate_frozen_closure
 from repro.core.dag import TaskGraph, build_dag
 from repro.core.energy_model import make_processor
 from repro.core.scheduler import CostModel, simulate
@@ -32,10 +33,20 @@ TRACED = ("original", "cp_aware", "race_to_halt", "tx")
 
 def truncated_dag(name: str, n_tiles: int, tile: int, grid,
                   first_k: int) -> TaskGraph:
+    """The first `first_k` iterations of a factorization DAG as a valid
+    closed subgraph, validated (not `assert`ed -- asserts vanish under
+    `python -O`) via the replan layer's frozen-closure checker."""
     g = build_dag(name, n_tiles, tile, grid)
-    tasks = [t for t in g.tasks if t.k < first_k]   # prefix by construction
-    assert all(d < len(tasks) for t in tasks for d in t.deps)
-    return dataclasses.replace(g, tasks=tasks)
+    keep = np.asarray([t.k < first_k for t in g.tasks], dtype=bool)
+    n_keep = int(keep.sum())
+    if keep[:n_keep].sum() != n_keep:
+        raise ValueError(
+            f"iteration prefix k<{first_k} is not a task-id prefix; "
+            "the DAG builder must emit tasks in iteration-major order")
+    # dep-closure + per-rank prefix: exactly the executed-prefix closure
+    # properties the re-planner validates, reused verbatim
+    validate_frozen_closure(g, keep)
+    return dataclasses.replace(g, tasks=g.tasks[:n_keep])
 
 
 def run(n_tiles: int = 48, tile: int = 2560, first_k: int = 5,

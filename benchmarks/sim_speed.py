@@ -1,15 +1,24 @@
-"""Schedule-simulator speed: event-driven engine vs the pick-loop oracle.
+"""Schedule-simulator speed: event-driven engine vs the pick-loop oracle,
+plus the batched fleet engine vs running the oracle lane by lane.
 
 Every benchmark section re-runs the simulator per strategy per
 factorization, so its speed bounds how large a sweep (grid size, tile
-count, LM-DAG scenarios) the repo can afford. This section times
+count, LM-DAG scenarios) the repo can afford. The first section times
 `simulate` (ready-heap + dependency counters) against
 `simulate_reference` (the original O(tasks x ranks x deps) pick-loop)
 on the paper's Cholesky DAG at T=32 tiles on a (4, 4) grid, for every
 registered strategy (all plans built from one shared PlanContext), and
 checks they agree while they're at it.
 
-Acceptance target (ISSUE 1): >= 5x per strategy on this configuration.
+The second section times `simulate_fleet` on a 64-lane tx_online noise
+sweep (the `strategy_gap` Monte-Carlo shape: one distinct noise seed per
+lane) against simulating each lane with `simulate_reference`, and checks
+every lane against the oracle -- bit-identical timelines and switch
+counts, 1e-9 energy -- per the three-engine differential contract.
+
+Acceptance targets: >= 5x per strategy (ISSUE 1) and >= 50x aggregate on
+the 64-lane fleet sweep (ISSUE 6); both gated as hard floors by
+`scripts/bench_compare.py`.
 """
 
 from __future__ import annotations
@@ -20,14 +29,22 @@ import numpy as np
 
 from repro.core.dag import build_dag
 from repro.core.energy_model import make_processor
+from repro.core.fleet import simulate_fleet
 from repro.core.scheduler import CostModel, simulate, simulate_reference
-from repro.core.strategies import (PlanContext, get_strategy,
+from repro.core.strategies import (PlanContext, StrategyConfig, get_strategy,
                                    registered_strategies)
 
 FACT = "cholesky"
 N_TILES = 32
 TILE = 256
 GRID = (4, 4)
+
+# fleet sweep: B distinct tx_online lanes on a rank-heavy grid (the oracle
+# scans every rank per pick, the fleet pass is rank-count-insensitive)
+FLEET_LANES = 64
+FLEET_N_TILES = 24
+FLEET_GRID = (8, 8)
+FLEET_REL_ERR = 0.15
 
 
 def _best_of(fn, repeats: int) -> float:
@@ -68,6 +85,45 @@ def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID,
     return rows
 
 
+def run_fleet(n_lanes: int = FLEET_LANES, n_tiles: int = FLEET_N_TILES,
+              tile: int = TILE, grid=FLEET_GRID,
+              proc_name: str = "arc_opteron_6128", fleet_repeats: int = 3):
+    """Time one `simulate_fleet` pass over `n_lanes` tx_online plans vs
+    running `simulate_reference` once per lane, verifying every lane
+    against the oracle along the way (the timed oracle pass doubles as
+    the agreement check)."""
+    graph = build_dag(FACT, n_tiles, tile, grid)
+    proc = make_processor(proc_name)
+    cost = CostModel()
+    plans = []
+    for seed in range(n_lanes):
+        cfg = StrategyConfig(tx_online_rel_err=FLEET_REL_ERR,
+                             tx_online_seed=seed)
+        plans.append(get_strategy("tx_online").plan(
+            PlanContext(graph, proc, cost, cfg)))
+    fleet = simulate_fleet(graph, proc, cost, plans)     # warm graph caches
+    t_fleet = _best_of(lambda: simulate_fleet(graph, proc, cost, plans),
+                       fleet_repeats)
+    energies = fleet.total_energy_j()
+    agree = True
+    t0 = time.perf_counter()
+    for i, plan in enumerate(plans):
+        ref = simulate_reference(graph, proc, cost, plan)
+        agree = agree and bool(
+            np.array_equal(fleet.start[i], ref.start)
+            and np.array_equal(fleet.finish[i], ref.finish)
+            and int(fleet.switch_count[i]) == ref.switch_count
+            and abs(energies[i] - ref.total_energy_j())
+            <= 1e-9 * max(1.0, ref.total_energy_j()))
+    t_ref = time.perf_counter() - t0
+    return {
+        "n_lanes": n_lanes, "n_tasks": len(graph.tasks),
+        "n_ranks": graph.n_ranks, "fleet_ms": t_fleet * 1e3,
+        "reference_ms": t_ref * 1e3, "speedup": t_ref / t_fleet,
+        "agree": agree,
+    }
+
+
 def bench() -> tuple[list[str], dict]:
     rows = run()
     out = [f"# {FACT} T={N_TILES} tile={TILE} grid={GRID}: "
@@ -86,6 +142,17 @@ def bench() -> tuple[list[str], dict]:
                f"(target >= 5x), all agree: {agree}")
     metrics["worst_speedup"] = round(worst, 1)
     metrics["all_agree"] = agree
+    f = run_fleet()
+    out.append(f"# fleet: {f['n_lanes']} tx_online lanes, {FACT} "
+               f"T={FLEET_N_TILES} grid={FLEET_GRID}: {f['n_tasks']} tasks "
+               f"x {f['n_ranks']} ranks")
+    out.append(f"# fleet {f['fleet_ms']:.1f}ms vs oracle "
+               f"{f['reference_ms']:.0f}ms = {f['speedup']:.1f}x "
+               f"(target >= 50x), lanes agree: {f['agree']}")
+    metrics["fleet_speedup"] = round(f["speedup"], 1)
+    metrics["fleet_ms"] = round(f["fleet_ms"], 1)
+    metrics["fleet_lanes"] = f["n_lanes"]
+    metrics["fleet_agree"] = f["agree"]
     return out, metrics
 
 

@@ -17,6 +17,10 @@ old value):
                         noise (reported as drift), anything under 5x
                         fails -- however small the relative drop, so the
                         per-PR baseline refresh cannot ratchet below it.
+                        `sim_speed.fleet_speedup` (the batched engine vs
+                        per-lane oracle runs) carries its own hard floor
+                        (--fleet-floor, default 50.0, the >=50x ISSUE 6
+                        target) under the same rule.
   * energy savings   -- any section metric whose key contains `saved`
                         (strategy energy-savings percentages; higher is
                         better, fully deterministic). Near-zero baselines
@@ -24,8 +28,9 @@ old value):
                         default 0.25 points) so noise around 0% cannot
                         flap CI.
 
-Also fails if `sim_speed.all_agree` flipped from true to false (the
-engines disagreeing is a correctness red flag, not a perf regression).
+Also fails if `sim_speed.all_agree` or `sim_speed.fleet_agree` flipped
+from true to false (engines disagreeing is a correctness red flag, not a
+perf regression).
 
 Non-gated metrics (timings, wait fractions, gflops) are reported as
 informational drift only. Metrics present in only one file NEVER fail the
@@ -65,8 +70,13 @@ def _is_speedup(name: str) -> bool:
                                        or key == "worst_speedup")
 
 
+def _is_fleet_speedup(name: str) -> bool:
+    return name == "sim_speed.fleet_speedup"
+
+
 def _gated(name: str) -> bool:
-    return _is_speedup(name) or "saved" in name.partition(".")[2]
+    return (_is_speedup(name) or _is_fleet_speedup(name)
+            or "saved" in name.partition(".")[2])
 
 
 def main() -> int:
@@ -83,6 +93,10 @@ def main() -> int:
                     help="sim_speed speedup drops only fail when the new "
                          "value is also below this hard target (timing "
                          "noise across machines is otherwise expected)")
+    ap.add_argument("--fleet-floor", type=float, default=50.0,
+                    help="hard floor for sim_speed.fleet_speedup (the "
+                         "batched-engine aggregate target), same rule as "
+                         "--speedup-floor")
     args = ap.parse_args()
 
     with open(args.old) as f:
@@ -98,6 +112,14 @@ def main() -> int:
         drop = o - n
         rel = drop / abs(o) if o else 0.0
         line = f"{name}: {o:g} -> {n:g}"
+        if _is_fleet_speedup(name):
+            if n < args.fleet_floor:
+                regressions.append(
+                    f"{line}  (below the {args.fleet_floor:g}x target)")
+            elif drop > args.abs_floor and rel > args.threshold:
+                drifts.append(f"{line}  (timing noise, still >= "
+                              f"{args.fleet_floor:g}x)")
+            continue
         if _is_speedup(name):
             # hard floor, independent of the relative drop: a refreshed
             # baseline must not let the target erode PR by PR
@@ -115,11 +137,12 @@ def main() -> int:
         if o and abs(rel) > args.threshold:
             drifts.append(line)
 
-    agree_old = old.get("sections", {}).get("sim_speed", {}).get("all_agree")
-    agree_new = new.get("sections", {}).get("sim_speed", {}).get("all_agree")
-    if agree_old is True and agree_new is False:
-        regressions.append("sim_speed.all_agree: True -> False "
-                           "(engine disagreement)")
+    for flag in ("all_agree", "fleet_agree"):
+        agree_old = old.get("sections", {}).get("sim_speed", {}).get(flag)
+        agree_new = new.get("sections", {}).get("sim_speed", {}).get(flag)
+        if agree_old is True and agree_new is False:
+            regressions.append(f"sim_speed.{flag}: True -> False "
+                               "(engine disagreement)")
 
     only_old = sorted(old_m.keys() - new_m.keys())
     only_new = sorted(new_m.keys() - old_m.keys())

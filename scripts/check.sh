@@ -32,7 +32,7 @@ echo "== tier-1 test suite =="
 python -m pytest -x -q --ignore=tests/test_scheduler_differential.py \
     ${MARK[@]+"${MARK[@]}"}
 
-echo "== scheduler differential suite =="
+echo "== scheduler differential suite (simulate / reference / fleet) =="
 python -m pytest -x -q tests/test_scheduler_differential.py
 
 # benchmark trajectory: when a committed BENCH_pr<N>.json exists (and not

@@ -17,13 +17,15 @@ Public API:
                                                event-driven engine)
     simulate_reference                      -- slow pick-loop oracle for
                                                differential testing
+    simulate_fleet, FleetSchedule           -- batched engine: B plan lanes
+                                               in one vectorized pass
     replan_tx, ReplanOutcome, WaveRecord    -- closed-loop re-planning
                                                (the tx_replan strategy)
     residual_schedule_times, residual_schedule_slack,
     analyze_residual_tds                    -- residual-graph analyses
 
 See README.md for the user-facing tour and docs/ARCHITECTURE.md for the
-layer map, the two-engine differential-testing policy, and the
+layer map, the three-engine differential-testing policy, and the
 heterogeneous-machine design.
 """
 
@@ -40,8 +42,10 @@ from .energy_model import (GEAR_TABLES, Gear, MachineModel, ProcessorModel,
                            make_tpu_like, make_tpu_mixed, max_slack_ratio,
                            scale_processor, strategy_gap_terms,
                            verify_worked_example)
+from .fleet import FleetSchedule, simulate_fleet
 from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
-                        simulate, simulate_reference)
+                        machine_nodal_const_power_w, simulate,
+                        simulate_reference)
 from .strategies import (STRATEGIES, PlanContext, ResidualPlanContext,
                          Strategy, StrategyConfig, StrategyResult,
                          evaluate_strategies, get_strategy, make_plan,
@@ -70,7 +74,8 @@ __all__ = [
     "make_big_little", "make_processor", "make_tpu_like", "make_tpu_mixed",
     "max_slack_ratio", "scale_processor", "strategy_gap_terms",
     "verify_worked_example",
-    "CostModel", "RankSegment", "Schedule", "StrategyPlan", "simulate",
+    "CostModel", "FleetSchedule", "RankSegment", "Schedule", "StrategyPlan",
+    "machine_nodal_const_power_w", "simulate", "simulate_fleet",
     "simulate_reference",
     "STRATEGIES", "PlanContext", "Strategy", "StrategyConfig",
     "StrategyResult", "evaluate_strategies", "get_strategy", "make_plan",

@@ -1,0 +1,357 @@
+"""Batched structure-of-arrays schedule engine: B plan lanes in one pass.
+
+`simulate` and `simulate_reference` evaluate one `(machine, plan)` pair at a
+time, which is exactly the wrong shape for the repo's expensive analyses --
+`single_freq_opt`'s per-depth candidate sweep, the noise x seed x cadence
+grids in `benchmarks/strategy_gap.py`, and any future global plan search all
+evaluate *many variants of the same task graph*. `simulate_fleet` runs B
+such lanes in a single pass: one Python loop over tasks in tid order, with
+every per-lane quantity (rank clocks, gear indices, energy and switch
+accumulators) held in NumPy arrays whose trailing axis is the lane.
+
+Why a single tid-order loop is a valid schedule: both serial engines rely
+on the invariant that a task's timing depends only on its rank's previous
+task and its dependencies' finish times, so dispatch order between ranks
+cannot change the result. Task ids are emitted topologically sorted AND in
+per-rank program order, so visiting tasks in tid order is one of the
+admissible dispatch orders -- the engine computes the same unique fixed
+point the pick-loop oracle does, just for B lanes at once.
+
+Exactness contract (the *three-engine* differential policy):
+
+  * per-lane `start`/`finish` timelines and switch **counts** are
+    bit-identical to `simulate`/`simulate_reference` -- every timeline
+    float is produced by the same sequence of IEEE operations (the
+    per-segment fold `t += dt` is replicated via zero-padded segment
+    slots, exact because `x + 0.0 == x` for finite x);
+  * energy sums (`core_energy_j`, `switch_energy_j`, `total_energy_j`)
+    agree to 1e-9 relative -- accumulation *order* differs across lanes,
+    the same documented tolerance the two serial engines already carry.
+
+Any engine-visible semantic change must now land in all THREE engines in
+lockstep, and `tests/test_scheduler_differential.py` runs fleet lanes over
+randomized DAGs, strategies, and mixed `MachineModel`s to hold the line.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .dag import TaskGraph
+from .energy_model import MachineModel, ProcessorModel, as_machine
+from .scheduler import (CostModel, Schedule, StrategyPlan,
+                        machine_nodal_const_power_w, simulate)
+
+__all__ = ["FleetSchedule", "simulate_fleet"]
+
+
+@dataclasses.dataclass
+class FleetSchedule:
+    """B simulated lanes of one task graph, stored as stacked arrays.
+
+    The batched counterpart of `Schedule`: per-lane task times and energy
+    accumulators without per-lane `Schedule` (or per-rank segment) objects.
+    Row i of every array is lane i, i.e. the schedule of
+    `(machines[i], plans[i])` on the shared graph/cost model.
+    """
+
+    graph: TaskGraph
+    machines: list[MachineModel]
+    cost: CostModel
+    plans: list[StrategyPlan]
+    start: np.ndarray            # (B, n_tasks) task start times
+    finish: np.ndarray           # (B, n_tasks) task finish times
+    switch_count: np.ndarray     # (B,) int64 DVFS transitions per lane
+    switch_energy_j: np.ndarray  # (B,) switch energy per lane
+    core_energy_j: np.ndarray    # (B,) integrated core power per lane
+    nodal_const_w: np.ndarray    # (B,) constant nodal power per lane
+    cores_per_node: int = 16
+
+    @property
+    def n_lanes(self) -> int:
+        """Number of schedule lanes B in this fleet."""
+        return len(self.plans)
+
+    @property
+    def makespan(self) -> np.ndarray:
+        """(B,) end-to-end wall time per lane (latest task finish)."""
+        if self.finish.shape[1]:
+            return self.finish.max(axis=1)
+        return np.zeros(self.finish.shape[0])
+
+    def total_energy_j(self) -> np.ndarray:
+        """(B,) core energy + switch energy + nodal constant * makespan.
+
+        Lane-for-lane this is `Schedule.total_energy_j()` to 1e-9 relative
+        (the documented cross-engine energy tolerance).
+        """
+        return (self.core_energy_j + self.switch_energy_j
+                + self.nodal_const_w * self.makespan)
+
+    def lane(self, i: int) -> Schedule:
+        """Materialize lane `i` as a full `Schedule` (debugging escape hatch).
+
+        Re-runs the event-driven engine for that lane's `(machine, plan)`
+        pair -- exact by the differential contract -- so the result carries
+        the per-rank segment timelines the fleet pass never builds.
+        """
+        sched = simulate(self.graph, self.machines[i], self.cost,
+                         self.plans[i])
+        if sched.cores_per_node != self.cores_per_node:
+            sched = dataclasses.replace(sched,
+                                        cores_per_node=self.cores_per_node)
+        return sched
+
+
+def _proc_tables(procs: list[ProcessorModel]):
+    """Padded per-processor lookup tables (active/idle power, switch energy,
+    switch latency), indexed by a compact processor code."""
+    g_max = max(len(p.gears) for p in procs)
+    n_proc = len(procs)
+    pw_act = np.zeros((n_proc, g_max))
+    pw_idle = np.zeros((n_proc, g_max))
+    sw_e = np.zeros((n_proc, g_max, g_max))
+    t_sw = np.zeros(n_proc)
+    for c, p in enumerate(procs):
+        t_sw[c] = p.switch_latency_s
+        for a, ga in enumerate(p.gears):
+            pw_act[c, a] = p.core_power_w(ga, True)
+            pw_idle[c, a] = p.core_power_w(ga, False)
+            for b, gb in enumerate(p.gears):
+                sw_e[c, a, b] = p.switch_energy_j(ga, gb)
+    return pw_act, pw_idle, sw_e, t_sw
+
+
+def _segment_slots(plans: Sequence[StrategyPlan], n: int):
+    """Zero-padded per-slot segment arrays across all lanes.
+
+    Returns `(counts2d, gears, dts)` where `counts2d[t, l]` is lane l's
+    segment count for task t and `gears`/`dts` are `(P, n, B)` arrays
+    (P = max segment count) with gear index 0 / duration 0.0 padding.
+    The 0.0 padding is what keeps the batched time fold bit-identical to
+    the serial engines: adding 0.0 never perturbs a finite float.
+    """
+    b = len(plans)
+    counts2d = np.zeros((n, b), dtype=np.int64)
+    for l, plan in enumerate(plans):
+        counts2d[:, l] = np.fromiter(map(len, plan.task_segments),
+                                     np.int64, n)
+    p_max = int(counts2d.max()) if counts2d.size else 0
+    gears = np.zeros((p_max, n, b), dtype=np.int64)
+    dts = np.zeros((p_max, n, b))
+    task_ids = np.arange(n)
+    for l, plan in enumerate(plans):
+        cl = counts2d[:, l]
+        total = int(cl.sum())
+        if not total:
+            continue
+        flat = [pair for segs in plan.task_segments for pair in segs]
+        g_l = np.fromiter((pair[0].index for pair in flat), np.int64, total)
+        d_l = np.fromiter((pair[1] for pair in flat), np.float64, total)
+        task_rep = np.repeat(task_ids, cl)
+        pos = np.arange(total) - np.repeat(np.cumsum(cl) - cl, cl)
+        gears[pos, task_rep, l] = g_l
+        dts[pos, task_rep, l] = d_l
+    return counts2d, gears, dts
+
+
+def _empty_fleet(graph: TaskGraph, cost: CostModel,
+                 cores_per_node: int) -> FleetSchedule:
+    """The zero-lane fleet (B == 0): all arrays empty along the lane axis."""
+    n = len(graph.tasks)
+    zb = np.zeros(0)
+    return FleetSchedule(graph, [], cost, [], np.zeros((0, n)),
+                         np.zeros((0, n)), np.zeros(0, np.int64), zb,
+                         zb.copy(), zb.copy(), cores_per_node)
+
+
+def simulate_fleet(graph: TaskGraph,
+                   machines: (ProcessorModel | MachineModel
+                              | Sequence[ProcessorModel | MachineModel]),
+                   cost: CostModel, plans: Sequence[StrategyPlan],
+                   cores_per_node: int = 16) -> FleetSchedule:
+    """Simulate B `(machine, plan)` lanes of one graph in a single pass.
+
+    One vectorized NumPy sweep over tasks in tid order; every lane's
+    timeline is bit-identical to what `simulate`/`simulate_reference`
+    produce for that lane alone, and energies agree to 1e-9 relative (see
+    the module docstring for why, and for the three-engine differential
+    obligation this engine is held to).
+
+    Parameters
+    ----------
+    graph : TaskGraph
+        The shared task DAG. Task ids must be topologically sorted (every
+        dependency's tid below its consumer's), which every `build_dag`
+        graph and the differential suite's random DAGs satisfy; a
+        `ValueError` is raised otherwise.
+    machines : ProcessorModel, MachineModel, or sequence thereof
+        Power/gear model per lane. A single (machine) model is broadcast
+        to all lanes; a sequence supplies one per lane and may mix
+        heterogeneous `MachineModel`s freely.
+    cost : CostModel
+        Supplies the cross-rank communication time (shared by all lanes).
+    plans : sequence of StrategyPlan
+        One frequency plan per lane; B = len(plans). May be empty.
+    cores_per_node : int, optional
+        Ranks per node for the nodal constant-power charge (default 16).
+
+    Returns
+    -------
+    FleetSchedule
+        Per-lane start/finish arrays, switch counts/energies, core
+        energies, and nodal constant power -- everything `total_energy_j`
+        and `makespan` need, without per-lane `Schedule` objects.
+    """
+    plans = list(plans)
+    b = len(plans)
+    if isinstance(machines, (ProcessorModel, MachineModel)):
+        lane_machines = [as_machine(machines)] * b
+    else:
+        lane_machines = [as_machine(m) for m in machines]
+        if len(lane_machines) != b:
+            raise ValueError(
+                f"{len(lane_machines)} machines for {b} plans; pass one "
+                "machine per lane or a single model to broadcast")
+    if b == 0:
+        return _empty_fleet(graph, cost, cores_per_node)
+
+    n = len(graph.tasks)
+    n_ranks = graph.n_ranks
+    src, dst, _ = graph.dep_edge_arrays()
+    if src.size and not (src < dst).all():
+        raise ValueError("simulate_fleet requires topologically sorted "
+                         "task ids (dep tids below consumer tids)")
+    comm = cost.comm_time(graph)
+
+    # -- compact processor codes + padded power/switch lookup tables ------
+    proc_code: dict[int, int] = {}
+    procs: list[ProcessorModel] = []
+    code = np.empty((n_ranks, b), dtype=np.int64)
+    for l, m in enumerate(lane_machines):
+        for r, p in enumerate(m.rank_procs(n_ranks)):
+            c = proc_code.get(id(p))
+            if c is None:
+                c = proc_code[id(p)] = len(procs)
+                procs.append(p)
+            code[r, l] = c
+    pw_act, pw_idle, sw_tab, t_sw_tab = _proc_tables(procs)
+
+    # -- per-(rank, lane) DVFS mechanics ----------------------------------
+    tsw = t_sw_tab[code]                                   # (n_ranks, B)
+    mhw = np.fromiter((p.min_halt_window_s for p in plans), np.float64, b)
+    halt_win = np.maximum(mhw[None, :], 2.0 * tsw)         # (n_ranks, B)
+    hide = np.fromiter((p.hide_switch_in_wait for p in plans), bool, b)
+    idle = np.empty((n_ranks, b), dtype=np.int64)
+    for l, plan in enumerate(plans):
+        for r in range(n_ranks):
+            idle[r, l] = plan.idle_gear_for(r).index
+
+    # -- per-(slot, task, lane) plan arrays -------------------------------
+    overhead = (np.stack([np.asarray(p.per_task_overhead, np.float64)
+                          for p in plans], axis=1)
+                if n else np.zeros((0, b)))                # (n, B)
+    ovh_any = (overhead > 0.0).any(axis=1).tolist()
+    counts2d, seg_gear, seg_dt = _segment_slots(plans, n)
+    valid = counts2d[None, :, :] > np.arange(
+        seg_gear.shape[0])[:, None, None]                  # (P, n, B)
+    max_slots = counts2d.max(axis=1).tolist() if n else []
+
+    tasks = graph.tasks
+    owner = [t.owner for t in tasks]
+    dep_info = [[(d, comm if tasks[d].owner != t.owner else 0.0)
+                 for d in t.deps] for t in tasks]
+
+    # -- lane state + accumulators ----------------------------------------
+    start2d = np.zeros((n, b))
+    fin2d = np.zeros((n, b))
+    rank_free = np.zeros((n_ranks, b))
+    rank_gear = np.zeros((n_ranks, b), dtype=np.int64)     # 0 = top gear
+    core_e = np.zeros(b)
+    sw_e = np.zeros(b)
+    sw_cnt = np.zeros(b, dtype=np.int64)
+
+    maximum, where = np.maximum, np.where
+    for t in range(n):
+        r = owner[t]
+        free = rank_free[r]
+        ready = free
+        for d, cm in dep_info[t]:
+            ready = maximum(ready, fin2d[d] + cm if cm else fin2d[d])
+        code_r = code[r]
+        gear_now = rank_gear[r]
+        # serial engines resolve the task's first gear BEFORE the wait
+        # downshift: a no-segment lane targets the pre-wait gear, so a
+        # downshifted rank switches back (with a stall) to run it
+        gear_pre = gear_now
+        wait = ready - free
+
+        # ---- waiting period handling (idle gear + switches) -------------
+        waiting = wait > 1e-15
+        if waiting.any():
+            down = waiting & (idle[r] != gear_now) & (wait >= halt_win[r])
+            g_wait = where(down, idle[r], gear_now)
+            sw_e += sw_tab[code_r, gear_now, g_wait]   # diagonal is 0.0
+            sw_cnt += down
+            core_e += where(waiting, pw_idle[code_r, g_wait] * wait, 0.0)
+            gear_now = g_wait
+
+        # ---- gear switch into the task's first segment ------------------
+        first = (where(valid[0, t], seg_gear[0, t], gear_pre)
+                 if max_slots[t] else gear_pre)
+        shifted = first != gear_now
+        if shifted.any():
+            sw_e += sw_tab[code_r, gear_now, first]
+            sw_cnt += shifted
+            stall = where(shifted & ~(hide & (wait >= tsw[r])),
+                          tsw[r], 0.0)
+            core_e += pw_idle[code_r, first] * stall
+            t_exec = ready + stall
+        else:
+            t_exec = ready
+        gear_now = first
+
+        # ---- runtime overhead (detection / monitoring) ------------------
+        if ovh_any[t]:
+            ovh = overhead[t]
+            core_e += pw_act[code_r, gear_now] * ovh
+            t_exec = t_exec + ovh
+        start2d[t] = t_exec
+
+        # ---- execute the task's frequency segments ----------------------
+        # slot 0 never switches (gear_now == first already); later slots
+        # replicate the serial engines' planned mid-task switches
+        for s in range(max_slots[t]):
+            if s:
+                gs = where(valid[s, t], seg_gear[s, t], gear_now)
+                sw_e += sw_tab[code_r, gear_now, gs]
+                sw_cnt += gs != gear_now
+                gear_now = gs
+            dt = seg_dt[s, t]
+            core_e += pw_act[code_r, gear_now] * dt
+            t_exec = t_exec + dt
+        fin2d[t] = t_exec
+        rank_free[r] = t_exec
+        rank_gear[r] = gear_now
+
+    # ---- trailing idle until global makespan (ranks finishing early) ----
+    makespan = fin2d.max(axis=0) if n else np.zeros(b)
+    for r in range(n_ranks):
+        gap = rank_free[r] < makespan - 1e-15
+        if gap.any():
+            g_now = rank_gear[r]
+            g_tail = where(gap & (idle[r] != g_now), idle[r], g_now)
+            sw_e += sw_tab[code[r], g_now, g_tail]
+            sw_cnt += g_tail != g_now
+            core_e += where(gap, pw_idle[code[r], g_tail]
+                            * (makespan - rank_free[r]), 0.0)
+
+    nodal = np.array([machine_nodal_const_power_w(m, n_ranks, cores_per_node)
+                      for m in lane_machines])
+    return FleetSchedule(graph, lane_machines, cost, plans,
+                         np.ascontiguousarray(start2d.T),
+                         np.ascontiguousarray(fin2d.T),
+                         sw_cnt, sw_e, core_e, nodal, cores_per_node)

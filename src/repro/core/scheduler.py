@@ -182,8 +182,14 @@ class Schedule:
 
     @property
     def n_nodes(self) -> int:
-        """Node count at `cores_per_node` ranks per node (min 1)."""
-        return max(1, self.graph.n_ranks // self.cores_per_node)
+        """Node count at `cores_per_node` ranks per node (min 1).
+
+        Ceil division: a partially filled last node still burns its full
+        constant power (board, fans, NICs), so 24 ranks at 16 cores/node
+        occupy 2 nodes, not 1 -- floor division silently dropped ranks
+        16..23 from the nodal accounting and every power/energy query.
+        """
+        return max(1, -(-self.graph.n_ranks // self.cores_per_node))
 
     @staticmethod
     def _power_table(proc: ProcessorModel) -> np.ndarray:
@@ -214,22 +220,8 @@ class Schedule:
         verbatim; on a mixed machine each node charges the mean P_const of
         its ranks' processor models (mixed nodes share boards/fans).
         """
-        if nodes is None:
-            nodes = range(self.n_nodes)
-        nodes = list(nodes)
-        if self.machine.is_homogeneous:
-            return float(len(nodes)) * self.machine.procs[0].p_const_watts
-        procs = self.machine.rank_procs(self.graph.n_ranks)
-        total = 0.0
-        for nd in nodes:
-            ranks = self._node_ranks(nd)
-            if len(ranks):
-                total += sum(procs[r].p_const_watts for r in ranks) \
-                    / len(ranks)
-            else:
-                total += self.machine.proc_for_rank(
-                    nd * self.cores_per_node).p_const_watts
-        return total
+        return machine_nodal_const_power_w(self.machine, self.graph.n_ranks,
+                                           self.cores_per_node, nodes)
 
     def core_energy_j(self) -> float:
         """CPU-core energy: per-rank power curves integrated over segments."""
@@ -265,9 +257,61 @@ class Schedule:
             idx = np.clip(idx, 0, len(t0) - 1)
             p = pw[gi, act.astype(np.int64)]
             inside = (times >= t0[0]) & (times <= t1[-1])
-            # outside the rank's timeline it idles at its final gear
-            watts = watts + np.where(inside, p[idx], pw[gi[-1], 0])
+            # outside the rank's timeline it idles at its starting (top)
+            # gear before the first segment -- both engines boot every rank
+            # at gear index 0 -- and at its final gear after the last one
+            outside = np.where(times < t0[0], pw[0, 0], pw[gi[-1], 0])
+            watts = watts + np.where(inside, p[idx], outside)
         return watts
+
+
+def machine_nodal_const_power_w(machine: ProcessorModel | MachineModel,
+                                n_ranks: int, cores_per_node: int = 16,
+                                nodes: Sequence[int] | None = None) -> float:
+    """Total non-CPU constant power of the given nodes (default: all).
+
+    The single source of truth for nodal constant-power accounting, shared
+    by `Schedule.nodal_const_power_w` and the batched fleet engine
+    (`repro.core.fleet`). Node count is the *ceiling* of
+    `n_ranks / cores_per_node`: a partially filled last node still burns
+    its full board/fan power, and its ranks still count.
+
+    Parameters
+    ----------
+    machine : ProcessorModel or MachineModel
+        Power model; a bare processor means a homogeneous machine.
+    n_ranks : int
+        Ranks of the job whose nodes are being charged.
+    cores_per_node : int, optional
+        Ranks packed per node (default 16).
+    nodes : sequence of int, optional
+        Node indices to charge; default all occupied nodes.
+
+    Returns
+    -------
+    float
+        Watts of constant power. Homogeneous machines charge
+        `len(nodes) * P_const` verbatim; on a mixed machine each node
+        charges the mean P_const of its ranks' processor models (mixed
+        nodes share boards/fans).
+    """
+    machine = as_machine(machine)
+    n_nodes = max(1, -(-n_ranks // cores_per_node))
+    if nodes is None:
+        nodes = range(n_nodes)
+    nodes = list(nodes)
+    if machine.is_homogeneous:
+        return float(len(nodes)) * machine.procs[0].p_const_watts
+    procs = machine.rank_procs(n_ranks)
+    total = 0.0
+    for nd in nodes:
+        ranks = range(nd * cores_per_node,
+                      min((nd + 1) * cores_per_node, n_ranks))
+        if len(ranks):
+            total += sum(procs[r].p_const_watts for r in ranks) / len(ranks)
+        else:
+            total += machine.proc_for_rank(nd * cores_per_node).p_const_watts
+    return total
 
 
 @dataclasses.dataclass

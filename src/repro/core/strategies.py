@@ -85,6 +85,7 @@ from .dag import TaskGraph
 from .dvfs import (duration_at, two_gear_split_batch,
                    two_gear_split_batch_by_table)
 from .energy_model import Gear, MachineModel, ProcessorModel, as_machine
+from .fleet import simulate_fleet
 from .scheduler import CostModel, Schedule, StrategyPlan, simulate
 from .tds import (GEAR_CLASS_NAMES, WAIT_PANEL, TdsResult,
                   analyze_residual_tds, analyze_tds, task_gear_classes)
@@ -777,18 +778,23 @@ class SingleFreqOptStrategy:
             candidates = [self._depth_segments(ctx, depth)
                           for depth in self._depths(ctx)]
             idle, rank_idle = ctx._idle_gears(-1)
+        cands = [StrategyPlan(self.name, segs, idle_gear=idle,
+                              per_task_overhead=np.zeros(ctx.n_tasks),
+                              hide_switch_in_wait=True,
+                              rank_idle_gears=rank_idle)
+                 for segs in candidates]
+        # one batched pass scores every candidate; the fleet engine is
+        # timeline-exact vs the serial engines, so feasibility and the
+        # energy argmin are unchanged (first-feasible-minimum wins ties,
+        # matching the old serial sweep)
+        fleet = simulate_fleet(ctx.graph, ctx.proc, ctx.cost, cands)
+        energies = fleet.total_energy_j()
+        makespans = fleet.makespan
         best: tuple[float, StrategyPlan] | None = None
-        for segs in candidates:
-            cand = StrategyPlan(
-                self.name, segs, idle_gear=idle,
-                per_task_overhead=np.zeros(ctx.n_tasks),
-                hide_switch_in_wait=True,
-                rank_idle_gears=rank_idle)
-            sched = simulate(ctx.graph, ctx.proc, ctx.cost, cand)
-            energy = sched.total_energy_j()
-            if sched.makespan <= cap + 1e-12 and \
-                    (best is None or energy < best[0]):
-                best = (energy, cand)
+        for i, cand in enumerate(cands):
+            if makespans[i] <= cap + 1e-12 and \
+                    (best is None or energies[i] < best[0]):
+                best = (float(energies[i]), cand)
         assert best is not None    # the top gear / depth 0 meets the bound
         return best[1]
 

@@ -93,3 +93,22 @@ def test_engine_disagreement_fails(tmp_path):
     old = {"sim_speed": {"all_agree": True}}
     new = {"sim_speed": {"all_agree": False}}
     assert _run(tmp_path, old, new) == 1
+
+
+def test_fleet_speedup_gated_by_hard_floor_only(tmp_path):
+    """The batched-engine aggregate speedup has its own 50x hard floor:
+    noisy drops that stay above it pass, anything below fails."""
+    old = {"sim_speed": {"fleet_speedup": 120.0, "fleet_agree": True}}
+    ok = {"sim_speed": {"fleet_speedup": 55.0, "fleet_agree": True}}
+    bad = {"sim_speed": {"fleet_speedup": 40.0, "fleet_agree": True}}
+    assert _run(tmp_path, old, ok) == 0     # noise, still above 50x target
+    assert _run(tmp_path, old, bad) == 1    # below the hard floor
+    # the floor is tunable for ad-hoc comparisons
+    assert _run(tmp_path, old, bad, ("--fleet-floor", "30")) == 0
+
+
+def test_fleet_disagreement_fails(tmp_path):
+    """A fleet lane diverging from the oracle is a correctness failure."""
+    old = {"sim_speed": {"fleet_agree": True}}
+    new = {"sim_speed": {"fleet_agree": False}}
+    assert _run(tmp_path, old, new) == 1

@@ -9,10 +9,13 @@ from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (CostModel, GEAR_TABLES, StrategyConfig, build_dag,
                         cp_analysis, duration_at, evaluate_strategies,
-                        factorization_flops, make_plan, make_processor,
-                        make_tpu_like, max_slack_ratio, plan_energy_j,
-                        schedule_slack, simulate, strategy_gap_terms,
-                        two_gear_split, verify_worked_example)
+                        factorization_flops, machine_nodal_const_power_w,
+                        make_plan, make_processor, make_tpu_like,
+                        max_slack_ratio, plan_energy_j, schedule_slack,
+                        simulate, simulate_fleet, simulate_reference,
+                        strategy_gap_terms, two_gear_split,
+                        verify_worked_example)
+from repro.core.scheduler import RankSegment, Schedule
 
 PROC = make_processor("arc_opteron_6128")
 COST = CostModel()
@@ -156,6 +159,62 @@ def test_power_trace_levels():
     assert abs(tr_rth.max() - tr_orig.max()) / tr_orig.max() < 0.05
     # all traces above the nodal constant floor
     assert tr_rth.min() >= PROC.p_const_watts
+
+
+# ------------------------------------------------------- energy accounting
+def test_node_count_ceils_partial_nodes():
+    """24 ranks at 16 cores/node are TWO nodes: the partially filled second
+    node burns its full constant power and its ranks 16..23 stay in nodal
+    accounting (floor division used to drop both)."""
+    g = build_dag("cholesky", 8, 128, (4, 6))          # 24 ranks
+    sched = simulate(g, PROC, COST, make_plan("original", g, PROC, COST))
+    assert sched.n_nodes == 2
+    covered = sorted(r for nd in range(sched.n_nodes)
+                     for r in sched._node_ranks(nd))
+    assert covered == list(range(24)), "every rank must belong to a node"
+    assert sched.nodal_const_power_w() == pytest.approx(
+        2 * PROC.p_const_watts)
+    assert machine_nodal_const_power_w(PROC, 24) == pytest.approx(
+        2 * PROC.p_const_watts)
+
+
+def test_power_trace_before_first_segment_uses_top_gear():
+    """Samples before a rank's first segment idle at the STARTING gear
+    (index 0 -- both engines boot every rank there), not at whatever gear
+    the final segment happens to end in."""
+    g = build_dag("cholesky", 2, 128, (1, 1))
+    top, low = PROC.gears[0], PROC.gears[-1]
+    n = len(g.tasks)
+    sched = Schedule.from_rank_segments(
+        g, PROC, np.full(n, 1.0), np.full(n, 2.0),
+        [[RankSegment(1.0, 2.0, low, True)]], 0, 0.0)
+    w = sched.power_trace(np.array([0.5, 1.5, 2.5]), nodes=[0])
+    const = PROC.p_const_watts
+    assert w[0] == pytest.approx(const + PROC.core_power_w(top, False))
+    assert w[1] == pytest.approx(const + PROC.core_power_w(low, True))
+    assert w[2] == pytest.approx(const + PROC.core_power_w(low, False))
+
+
+@given(name=st.sampled_from(["cholesky", "lu", "qr"]),
+       n_tiles=st.integers(4, 7),
+       grid=st.sampled_from([(1, 2), (2, 2), (2, 4)]))
+@settings(max_examples=10, deadline=None)
+def test_fleet_matches_oracle_exactly(name, n_tiles, grid):
+    """Property form of the three-engine contract: every fleet lane is
+    bit-identical in time and 1e-9-close in energy to the pick-loop
+    oracle, across factorizations, sizes, and grids."""
+    g = build_dag(name, n_tiles, 192, grid)
+    plans = [make_plan(s, g, PROC, COST)
+             for s in ("original", "race_to_halt", "cp_aware",
+                       "algorithmic", "tx")]
+    fleet = simulate_fleet(g, PROC, COST, plans)
+    energies = fleet.total_energy_j()
+    for i, plan in enumerate(plans):
+        ref = simulate_reference(g, PROC, COST, plan)
+        assert np.array_equal(fleet.start[i], ref.start)
+        assert np.array_equal(fleet.finish[i], ref.finish)
+        assert int(fleet.switch_count[i]) == ref.switch_count
+        assert energies[i] == pytest.approx(ref.total_energy_j(), rel=1e-9)
 
 
 def test_tpu_like_device_collapses_to_race_to_halt():

@@ -90,6 +90,7 @@ def test_architecture_names_real_modules():
     """The layer map's module names must exist in the tree."""
     arch = ARCH.read_text()
     for mod in ("dag.py", "critical_path.py", "tds.py", "strategies.py",
-                "dvfs.py", "scheduler.py", "energy_model.py", "replan.py"):
+                "dvfs.py", "scheduler.py", "fleet.py", "energy_model.py",
+                "replan.py"):
         assert mod in arch, f"ARCHITECTURE layer map lost {mod}"
         assert (ROOT / "src" / "repro" / "core" / mod).is_file(), mod

@@ -23,10 +23,11 @@ import pytest
 
 import repro.core as core
 from repro.core import (critical_path, dag, dvfs, energy_aware_step,
-                        energy_model, replan, scheduler, strategies, tds)
+                        energy_model, fleet, replan, scheduler, strategies,
+                        tds)
 
 MODULES = (core, critical_path, dag, dvfs, energy_aware_step, energy_model,
-           replan, scheduler, strategies, tds)
+           fleet, replan, scheduler, strategies, tds)
 
 # Entry points that must carry full NumPy-style docstrings
 # (module attribute path -> callable). Keep in sync with README.md's API
@@ -34,6 +35,9 @@ MODULES = (core, critical_path, dag, dvfs, energy_aware_step, energy_model,
 NUMPY_STYLE_APIS = {
     "scheduler.simulate": scheduler.simulate,
     "scheduler.simulate_reference": scheduler.simulate_reference,
+    "scheduler.machine_nodal_const_power_w":
+        scheduler.machine_nodal_const_power_w,
+    "fleet.simulate_fleet": fleet.simulate_fleet,
     "dvfs.two_gear_split": dvfs.two_gear_split,
     "dvfs.two_gear_split_batch": dvfs.two_gear_split_batch,
     "dvfs.two_gear_split_batch_by_table": dvfs.two_gear_split_batch_by_table,

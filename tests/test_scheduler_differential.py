@@ -1,9 +1,11 @@
-"""Differential testing: fast event-driven `simulate` vs the pick-loop
-oracle `simulate_reference`.
+"""Differential testing: fast event-driven `simulate` and the batched
+fleet engine `simulate_fleet` vs the pick-loop oracle `simulate_reference`.
 
-The fast engine replaced an O(tasks x ranks x deps) scan with a ready-heap;
-the two implementations share no dispatch code, so agreement across
-randomized inputs is strong evidence of correctness. Three generators:
+The fast engine replaced an O(tasks x ranks x deps) scan with a ready-heap,
+and the fleet engine replaced per-lane dispatch with one vectorized
+tid-order pass over B lanes; the three implementations share no dispatch
+code, so agreement across randomized inputs is strong evidence of
+correctness. Three generators:
 
   * strategy cases    -- real factorization DAGs (cholesky/lu/qr), random
                          tile counts, grids, and gear tables, through
@@ -24,6 +26,12 @@ randomized inputs is strong evidence of correctness. Three generators:
                          ranks) -- any per-rank change to one engine must be
                          mirrored in the other to stay green.
 
+The fleet section feeds the same generators -- registry strategies,
+adversarial random plans, synthetic DAGs, and mixed MachineModels -- into
+single `simulate_fleet` calls with per-lane machines and checks EVERY lane
+against its own oracle run: the three-engine contract (any engine-visible
+semantic change must land in all three engines in lockstep).
+
 Agreement asserted to 1e-9 (relative) on makespan, total energy, and
 exactly on switch count and per-task start/finish times. A golden corpus
 (tests/data/strategy_golden.json, recorded from the pre-registry seed
@@ -41,7 +49,7 @@ import pytest
 from repro.core import (CostModel, GEAR_TABLES, MachineModel, StrategyPlan,
                         build_dag, make_processor, make_plan,
                         registered_strategies, scale_processor, simulate,
-                        simulate_reference)
+                        simulate_fleet, simulate_reference)
 from repro.core.dag import Task, TaskGraph
 
 FACTS = ("cholesky", "lu", "qr")
@@ -295,6 +303,122 @@ def test_segment_columns_bit_identical():
         for ca, cb in zip(fast.seg_columns, ref.seg_columns):
             for x, y in zip(ca, cb):
                 np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------------ fleet lanes
+def assert_fleet_lane_matches(fleet, i, ref, label=""):
+    """Lane i of a FleetSchedule vs one oracle Schedule: bit-identical
+    timelines and switch counts, 1e-9 on the energy sums."""
+    np.testing.assert_array_equal(fleet.start[i], ref.start,
+                                  err_msg=f"start {label}")
+    np.testing.assert_array_equal(fleet.finish[i], ref.finish,
+                                  err_msg=f"finish {label}")
+    assert int(fleet.switch_count[i]) == ref.switch_count, label
+    se, se_ref = float(fleet.switch_energy_j[i]), ref.switch_energy_j
+    assert abs(se - se_ref) <= 1e-9 * max(1.0, abs(se_ref)), \
+        (label, se, se_ref)
+    mk, mk_ref = float(fleet.makespan[i]), ref.makespan
+    assert mk == mk_ref, (label, mk, mk_ref)     # max of identical floats
+    e, e_ref = float(fleet.total_energy_j()[i]), ref.total_energy_j()
+    assert abs(e - e_ref) <= 1e-9 * max(1.0, abs(e_ref)), (label, e, e_ref)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fleet_lanes_differential(seed):
+    """One batched call mixing registry strategies, adversarial random
+    plans, and per-lane machines (homogeneous AND mixed); every lane must
+    match its own oracle run."""
+    rng = np.random.default_rng(6000 + seed)
+    name, n_tiles, tile, grid, proc_name = _random_graph_params(rng)
+    graph = build_dag(name, n_tiles, tile, grid)
+    proc = make_processor(proc_name)
+    machine = _random_machine(rng, graph.n_ranks)
+    cost = CostModel(comm_bandwidth_gbs=float(rng.uniform(1.0, 40.0)))
+    lanes = [(proc, make_plan(s, graph, proc, cost))
+             for s in ALL_STRATEGIES]
+    lanes += [(machine, make_plan(s, graph, machine, cost))
+              for s in ("original", "race_to_halt", "algorithmic", "tx")]
+    for _ in range(3):
+        lanes.append((proc, _random_plan(rng, graph, proc, cost)))
+        lanes.append((machine,
+                      _random_hetero_plan(rng, graph, machine, cost)))
+    fleet = simulate_fleet(graph, [m for m, _ in lanes], cost,
+                           [p for _, p in lanes])
+    assert fleet.n_lanes == len(lanes)
+    for i, (m, p) in enumerate(lanes):
+        ref = simulate_reference(graph, m, cost, p)
+        assert_fleet_lane_matches(fleet, i, ref,
+                                  f"seed={seed} lane={i} {p.name}")
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fleet_synthetic_dags_differential(seed):
+    """Fleet lanes over random synthetic DAGs (random deps/owners)."""
+    rng = np.random.default_rng(7000 + seed)
+    n_ranks = int(rng.choice([1, 2, 4, 8]))
+    graph = _random_dag(rng, n_tasks=int(rng.integers(20, 150)),
+                        n_ranks=n_ranks)
+    proc = make_processor(PROCS[rng.integers(len(PROCS))])
+    cost = CostModel()
+    plans = [_random_plan(rng, graph, proc, cost) for _ in range(8)]
+    fleet = simulate_fleet(graph, proc, cost, plans)    # broadcast machine
+    for i, plan in enumerate(plans):
+        ref = simulate_reference(graph, proc, cost, plan)
+        assert_fleet_lane_matches(fleet, i, ref,
+                                  f"synthetic seed={seed} lane={i}")
+
+
+def test_fleet_lane_escape_hatch_bit_identical():
+    """`FleetSchedule.lane(i)` materializes a full Schedule whose per-rank
+    segment columns match the oracle's bit for bit."""
+    graph = build_dag("lu", 5, 128, (2, 2))
+    proc = make_processor("arc_opteron_6128")
+    cost = CostModel()
+    plans = [make_plan(s, graph, proc, cost)
+             for s in ("original", "race_to_halt", "tx")]
+    fleet = simulate_fleet(graph, proc, cost, plans)
+    for i, plan in enumerate(plans):
+        sched = fleet.lane(i)
+        ref = simulate_reference(graph, proc, cost, plan)
+        assert_schedules_match(sched, ref, f"lane({i})")
+        for ca, cb in zip(sched.seg_columns, ref.seg_columns):
+            for x, y in zip(ca, cb):
+                np.testing.assert_array_equal(x, y)
+        assert_fleet_lane_matches(fleet, i, ref, f"lane({i})")
+
+
+def test_fleet_empty_lanes_and_empty_graph():
+    graph = build_dag("cholesky", 3, 128, (1, 2))
+    proc = make_processor("arc_opteron_6128")
+    cost = CostModel()
+    fleet = simulate_fleet(graph, proc, cost, [])
+    assert fleet.n_lanes == 0
+    assert fleet.start.shape == (0, len(graph.tasks))
+    assert fleet.total_energy_j().shape == (0,)
+    empty = TaskGraph("empty", 1, 128, (1, 1), [])
+    plan = StrategyPlan("empty", [], proc.gears[0], np.zeros(0), True)
+    fleet = simulate_fleet(empty, proc, cost, [plan, plan])
+    assert np.array_equal(fleet.makespan, np.zeros(2))
+    ref = simulate_reference(empty, proc, cost, plan)
+    assert float(fleet.total_energy_j()[0]) == ref.total_energy_j()
+
+
+def test_fleet_input_validation():
+    """Machine-count mismatch and non-topological tids are rejected."""
+    graph = build_dag("cholesky", 3, 128, (1, 2))
+    proc = make_processor("arc_opteron_6128")
+    cost = CostModel()
+    plans = [make_plan("original", graph, proc, cost)]
+    with pytest.raises(ValueError, match="machines"):
+        simulate_fleet(graph, [proc, proc], cost, plans)
+    bad = TaskGraph("bad", 1, 128, (1, 1), [
+        Task(tid=0, kind="GEMM", k=0, i=0, j=0, owner=0, flops=1e6,
+             deps=[1], out_tile=(0, 0)),
+        Task(tid=1, kind="GEMM", k=0, i=0, j=0, owner=0, flops=1e6,
+             deps=[], out_tile=(0, 1))])
+    bad_plan = StrategyPlan("bad", [[], []], proc.gears[0], np.zeros(2), True)
+    with pytest.raises(ValueError, match="topologically"):
+        simulate_fleet(bad, proc, cost, [bad_plan])
 
 
 # ------------------------------------------------------ registry coverage
