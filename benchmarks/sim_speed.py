@@ -16,8 +16,19 @@ lane) against simulating each lane with `simulate_reference`, and checks
 every lane against the oracle -- bit-identical timelines and switch
 counts, 1e-9 energy -- per the three-engine differential contract.
 
-Acceptance targets: >= 5x per strategy (ISSUE 1) and >= 50x aggregate on
-the 64-lane fleet sweep (ISSUE 6); both gated as hard floors by
+The third section is the plan-optimizer throughput gate (ISSUE 7): a
+1024-candidate batch of extra-time vectors -- on the big.LITTLE cell of
+the `strategy_gap` oracle-gap study, the shape `plan_search` actually
+runs there -- is scored by `optimize.CandidateEvaluator` in one
+structure-of-arrays pass and timed against the naive per-candidate loop
+(`PlanContext.reclaimed_segments` -> `StrategyPlan` -> fast `simulate`,
+once per candidate -- exactly what a search without the batched
+evaluator would run). The naive pass doubles as the agreement check:
+bit-identical makespans, 1e-9 energies.
+
+Acceptance targets: >= 5x per strategy (ISSUE 1), >= 50x aggregate on
+the 64-lane fleet sweep (ISSUE 6), and >= 30x candidate throughput for
+the search batch (ISSUE 7); all gated as hard floors by
 `scripts/bench_compare.py`.
 """
 
@@ -28,9 +39,11 @@ import time
 import numpy as np
 
 from repro.core.dag import build_dag
-from repro.core.energy_model import make_processor
+from repro.core.energy_model import make_big_little, make_processor
 from repro.core.fleet import simulate_fleet
-from repro.core.scheduler import CostModel, simulate, simulate_reference
+from repro.core.optimize import CandidateEvaluator
+from repro.core.scheduler import (CostModel, StrategyPlan, simulate,
+                                  simulate_reference)
 from repro.core.strategies import (PlanContext, StrategyConfig, get_strategy,
                                    registered_strategies)
 
@@ -45,6 +58,14 @@ FLEET_LANES = 64
 FLEET_N_TILES = 24
 FLEET_GRID = (8, 8)
 FLEET_REL_ERR = 0.15
+
+# search-throughput gate: one CandidateEvaluator batch (the plan_search
+# inner loop) vs the naive per-candidate fast-engine loop, on the
+# oracle-gap study's big.LITTLE Cholesky cell (strategy_gap.run_oracle_gap)
+SEARCH_LANES = 1024
+SEARCH_N_TILES = 8
+SEARCH_TILE = 512
+SEARCH_GRID = (2, 2)
 
 
 def _best_of(fn, repeats: int) -> float:
@@ -124,6 +145,63 @@ def run_fleet(n_lanes: int = FLEET_LANES, n_tiles: int = FLEET_N_TILES,
     }
 
 
+def run_search(n_cands: int = SEARCH_LANES, n_tiles: int = SEARCH_N_TILES,
+               tile: int = SEARCH_TILE, grid=SEARCH_GRID,
+               proc_name: str = "arc_opteron_6128",
+               batch_repeats: int = 3):
+    """Candidate throughput of the batched plan evaluator vs a naive loop.
+
+    Scores `n_cands` extra-time vectors (scaled realized slack x seeded
+    jitter -- the shape of one `search_plan` round) with one
+    `CandidateEvaluator.evaluate` call, then re-scores each candidate the
+    way a search WITHOUT the evaluator would: render the plan through
+    `PlanContext.reclaimed_segments`, run the fast `simulate` engine, and
+    read the (energy, makespan) objective -- once per candidate. The
+    workload is the oracle-gap study's big.LITTLE Cholesky cell (same
+    tiles/grid/machine as `strategy_gap.run_oracle_gap`). The naive pass
+    is timed once; its recorded objectives then double as the exactness
+    check (bit-identical makespans, 1e-9-relative energies).
+    """
+    graph = build_dag(FACT, n_tiles, tile, grid)
+    proc = make_big_little(proc_name)
+    cost = CostModel()
+    ctx = PlanContext(graph, proc, cost)
+    n = ctx.n_tasks
+    slack = np.maximum(ctx.slack, 0.0)
+    d = ctx.durations
+    rng = np.random.default_rng(0)
+    E = (slack[None, :] * rng.uniform(0.0, 1.4, (n_cands, n))
+         + rng.uniform(0.0, 0.15, (n_cands, n)) * d[None, :])
+    ev = CandidateEvaluator(ctx, n_cands)        # one chunk, as in a search
+    energy, make = ev.evaluate(E)                # warm the buffers
+    t_batch = _best_of(lambda: ev.evaluate(E), batch_repeats)
+    idle, rank_idle = ctx._idle_gears(-1)
+    zeros = np.zeros(n)
+
+    def naive(e):
+        plan = StrategyPlan("cand", ctx.reclaimed_segments(e, 0.0),
+                            idle_gear=idle, per_task_overhead=zeros,
+                            hide_switch_in_wait=True,
+                            rank_idle_gears=rank_idle)
+        s = simulate(graph, proc, cost, plan)
+        return s.total_energy_j(), s.makespan
+
+    naive(E[0])                                  # warm graph caches
+    got = []
+    t0 = time.perf_counter()
+    for i in range(n_cands):
+        got.append(naive(E[i]))
+    t_naive = time.perf_counter() - t0
+    agree = all(
+        mk == make[i] and abs(ej - energy[i]) <= 1e-9 * max(1.0, ej)
+        for i, (ej, mk) in enumerate(got))
+    return {
+        "n_cands": n_cands, "n_tasks": n,
+        "batch_ms": t_batch * 1e3, "naive_ms": t_naive * 1e3,
+        "throughput_ratio": t_naive / t_batch, "agree": agree,
+    }
+
+
 def bench() -> tuple[list[str], dict]:
     rows = run()
     out = [f"# {FACT} T={N_TILES} tile={TILE} grid={GRID}: "
@@ -153,6 +231,17 @@ def bench() -> tuple[list[str], dict]:
     metrics["fleet_ms"] = round(f["fleet_ms"], 1)
     metrics["fleet_lanes"] = f["n_lanes"]
     metrics["fleet_agree"] = f["agree"]
+    s = run_search()
+    out.append(f"# search: {s['n_cands']} candidate plans, {FACT} "
+               f"T={SEARCH_N_TILES} grid={SEARCH_GRID} big.LITTLE: "
+               f"{s['n_tasks']} tasks")
+    out.append(f"# batched {s['batch_ms']:.1f}ms vs naive loop "
+               f"{s['naive_ms']:.0f}ms = {s['throughput_ratio']:.1f}x "
+               f"(target >= 30x), candidates agree: {s['agree']}")
+    metrics["search_throughput_ratio"] = round(s["throughput_ratio"], 1)
+    metrics["search_ms"] = round(s["batch_ms"], 1)
+    metrics["search_lanes"] = s["n_cands"]
+    metrics["search_agree"] = s["agree"]
     return out, metrics
 
 

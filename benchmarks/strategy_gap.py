@@ -27,20 +27,29 @@ finish times every `replan_every` iterations (`core/replan.py`). The sweep
 crosses the same noise levels/seeds with `REPLAN_CADENCES` and reports
 per-cell retention next to the one-shot `tx_online` row -- the closed loop
 must retain at least as much at every error level (equal at rel_err = 0;
-pinned by tests/test_replan.py)."""
+pinned by tests/test_replan.py).
+
+A fifth sweep is the oracle-gap study (ISSUE 7): per factorization
+(cholesky / lu / qr) x machine (homogeneous + big.LITTLE), `plan_search`
+(`core/optimize.py`) establishes a searched upper bound on savings at the
+configured slowdown cap, and every registered heuristic's savings are
+reported as a *fraction* of that bound -- `oracle_gap.<fact>.<machine>.*`
+answers "how much does each heuristic leave on the table" per cell."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.dag import build_dag
-from repro.core.energy_model import (GEAR_TABLES, make_processor,
-                                     max_slack_ratio, strategy_gap_terms,
+from repro.core.energy_model import (GEAR_TABLES, make_big_little,
+                                     make_processor, max_slack_ratio,
+                                     strategy_gap_terms,
                                      verify_worked_example)
 from repro.core.fleet import simulate_fleet
 from repro.core.scheduler import CostModel
 from repro.core.strategies import (PlanContext, StrategyConfig,
-                                   evaluate_strategies, get_strategy)
+                                   evaluate_strategies, get_strategy,
+                                   registered_strategies)
 
 SIM_STRATEGIES = ("race_to_halt", "algorithmic", "tx")
 
@@ -214,6 +223,45 @@ def run_replan_sweep(fact: str = "cholesky", n_tiles: int = 8,
     return rows
 
 
+ORACLE_FACTS = ("cholesky", "lu", "qr")
+
+
+def run_oracle_gap(n_tiles: int = 8, tile: int = 512, grid=(2, 2),
+                   proc_name: str = "arc_opteron_6128",
+                   facts=ORACLE_FACTS):
+    """Searched savings bound + per-heuristic retention per (fact, machine).
+
+    For each factorization DAG and each machine (homogeneous `proc_name`
+    and the canned big.LITTLE), every registered strategy -- including
+    `plan_search` -- is planned once and all plans are charged in a single
+    `simulate_fleet` pass (via `evaluate_strategies`). `plan_search` is
+    seeded with every heuristic's plan, so its savings are a per-cell
+    upper bound over the registry; each heuristic's row reports the
+    fraction of that bound it realizes.
+    """
+    cost = CostModel()
+    machines = (("homog", make_processor(proc_name)),
+                ("big_little", make_big_little(proc_name)))
+    names = tuple(registered_strategies())
+    heuristics = tuple(n for n in names
+                       if n not in ("original", "plan_search"))
+    rows = []
+    for fact in facts:
+        graph = build_dag(fact, n_tiles, tile, grid)
+        for mname, machine in machines:
+            res = evaluate_strategies(graph, machine, cost, names=names)
+            bound = res["plan_search"].energy_saved_pct
+            rows.append({
+                "fact": fact, "machine": mname,
+                "search_saved_pct": bound,
+                "search_slowdown_pct": res["plan_search"].slowdown_pct,
+                "retention": {h: (res[h].energy_saved_pct / bound
+                                  if bound else 0.0)
+                              for h in heuristics},
+            })
+    return rows
+
+
 def bench() -> tuple[list[str], dict]:
     ex, rows = run()
     out = [f"# worked example ok: dEd={ex['dEd']:.4f} dEl={ex['dEl']:.4f}",
@@ -267,6 +315,20 @@ def bench() -> tuple[list[str], dict]:
         key = f"tx_replan.err{r['rel_err']:.2f}.every{r['replan_every']}"
         metrics[f"{key}.saved_pct"] = round(r["saved_pct"], 3)
         metrics[f"{key}.retention"] = round(r["retention"], 3)
+    # oracle-gap study: searched savings bound per (fact, machine) and the
+    # fraction of it each registered heuristic realizes
+    oracle = run_oracle_gap()
+    out.append("oracle_fact,machine,search_saved_pct,search_slowdown_pct,"
+               "strategy,retention")
+    for r in oracle:
+        cell = f"oracle_gap.{r['fact']}.{r['machine']}"
+        metrics[f"{cell}.search_saved_pct"] = round(r["search_saved_pct"], 3)
+        for strat, frac in sorted(r["retention"].items()):
+            out.append(f"{r['fact']},{r['machine']},"
+                       f"{r['search_saved_pct']:.3f},"
+                       f"{r['search_slowdown_pct']:.3f},"
+                       f"{strat},{frac:.3f}")
+            metrics[f"{cell}.{strat}"] = round(frac, 3)
     return out, metrics
 
 

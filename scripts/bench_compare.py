@@ -20,7 +20,11 @@ old value):
                         `sim_speed.fleet_speedup` (the batched engine vs
                         per-lane oracle runs) carries its own hard floor
                         (--fleet-floor, default 50.0, the >=50x ISSUE 6
-                        target) under the same rule.
+                        target) under the same rule, and so does
+                        `sim_speed.search_throughput_ratio` (the batched
+                        plan-candidate evaluator vs the naive
+                        per-candidate loop: --search-floor, default 30.0,
+                        the >=30x ISSUE 7 target).
   * energy savings   -- any section metric whose key contains `saved`
                         (strategy energy-savings percentages; higher is
                         better, fully deterministic). Near-zero baselines
@@ -28,9 +32,9 @@ old value):
                         default 0.25 points) so noise around 0% cannot
                         flap CI.
 
-Also fails if `sim_speed.all_agree` or `sim_speed.fleet_agree` flipped
-from true to false (engines disagreeing is a correctness red flag, not a
-perf regression).
+Also fails if `sim_speed.all_agree`, `sim_speed.fleet_agree`, or
+`sim_speed.search_agree` flipped from true to false (engines disagreeing
+is a correctness red flag, not a perf regression).
 
 Non-gated metrics (timings, wait fractions, gflops) are reported as
 informational drift only. Metrics present in only one file NEVER fail the
@@ -74,8 +78,13 @@ def _is_fleet_speedup(name: str) -> bool:
     return name == "sim_speed.fleet_speedup"
 
 
+def _is_search_ratio(name: str) -> bool:
+    return name == "sim_speed.search_throughput_ratio"
+
+
 def _gated(name: str) -> bool:
     return (_is_speedup(name) or _is_fleet_speedup(name)
+            or _is_search_ratio(name)
             or "saved" in name.partition(".")[2])
 
 
@@ -96,6 +105,11 @@ def main() -> int:
     ap.add_argument("--fleet-floor", type=float, default=50.0,
                     help="hard floor for sim_speed.fleet_speedup (the "
                          "batched-engine aggregate target), same rule as "
+                         "--speedup-floor")
+    ap.add_argument("--search-floor", type=float, default=30.0,
+                    help="hard floor for "
+                         "sim_speed.search_throughput_ratio (the batched "
+                         "candidate-evaluator target), same rule as "
                          "--speedup-floor")
     args = ap.parse_args()
 
@@ -120,6 +134,14 @@ def main() -> int:
                 drifts.append(f"{line}  (timing noise, still >= "
                               f"{args.fleet_floor:g}x)")
             continue
+        if _is_search_ratio(name):
+            if n < args.search_floor:
+                regressions.append(
+                    f"{line}  (below the {args.search_floor:g}x target)")
+            elif drop > args.abs_floor and rel > args.threshold:
+                drifts.append(f"{line}  (timing noise, still >= "
+                              f"{args.search_floor:g}x)")
+            continue
         if _is_speedup(name):
             # hard floor, independent of the relative drop: a refreshed
             # baseline must not let the target erode PR by PR
@@ -137,7 +159,7 @@ def main() -> int:
         if o and abs(rel) > args.threshold:
             drifts.append(line)
 
-    for flag in ("all_agree", "fleet_agree"):
+    for flag in ("all_agree", "fleet_agree", "search_agree"):
         agree_old = old.get("sections", {}).get("sim_speed", {}).get(flag)
         agree_new = new.get("sections", {}).get("sim_speed", {}).get(flag)
         if agree_old is True and agree_new is False:

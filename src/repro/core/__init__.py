@@ -23,6 +23,8 @@ Public API:
                                                (the tx_replan strategy)
     residual_schedule_times, residual_schedule_slack,
     analyze_residual_tds                    -- residual-graph analyses
+    search_plan, CandidateEvaluator         -- batched plan search (the
+                                               plan_search strategy)
 
 See README.md for the user-facing tour and docs/ARCHITECTURE.md for the
 layer map, the three-engine differential-testing policy, and the
@@ -55,9 +57,12 @@ from .tds import (GEAR_CLASS_NAMES, GEAR_CLASS_PANEL, GEAR_CLASS_SOLVE,
                   WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE, WAIT_PANEL,
                   TdsResult, analyze_residual_tds, analyze_tds, compute_tds,
                   task_gear_classes)
-# imported last: registers tx_replan (depends on .strategies' registry)
+# imported last: these register tx_replan and plan_search (both depend on
+# .strategies' registry; optimize additionally seeds its search from every
+# previously registered strategy)
 from .replan import (ReplanOutcome, TxReplanStrategy, WaveRecord,
                      iteration_waves, replan_tx)
+from .optimize import CandidateEvaluator, PlanSearchStrategy, search_plan
 
 __all__ = [
     "CpResult", "cp_analysis", "schedule_slack",
@@ -65,6 +70,7 @@ __all__ = [
     "validate_frozen_closure",
     "ReplanOutcome", "TxReplanStrategy", "WaveRecord", "iteration_waves",
     "replan_tx", "ResidualPlanContext", "analyze_residual_tds",
+    "CandidateEvaluator", "PlanSearchStrategy", "search_plan",
     "DAG_BUILDERS", "PANEL_KINDS", "TaskGraph", "Task", "block_cyclic_owner",
     "build_cholesky_dag", "build_dag", "build_lu_dag", "build_qr_dag",
     "factorization_flops",

@@ -115,6 +115,124 @@ def two_gear_split(proc: ProcessorModel, d_top: float, slack: float,
     return segs
 
 
+def two_gear_split_arrays(gears: tuple[Gear, ...], f_ref: float,
+                          d_top: np.ndarray, slack: np.ndarray,
+                          beta: np.ndarray | float = 1.0,
+                          t_full: np.ndarray | None = None) -> dict:
+    """Elementwise `two_gear_split` decisions as broadcast NumPy arrays.
+
+    The array core shared by `two_gear_split_batch` (which assembles the
+    per-task segment lists) and the batched plan optimizer in
+    `core/optimize.py` (which scatters the same decisions straight into
+    preallocated fleet slot buffers without materializing any Python
+    lists). Every arithmetic expression mirrors the scalar function
+    elementwise, so downstream consumers agree with it bit for bit.
+    Inputs broadcast against each other, so a 2-D (candidates x tasks)
+    slack matrix against a 1-D duration vector sweeps many candidate
+    plans in one call.
+
+    Parameters
+    ----------
+    gears : tuple of Gear
+        Descending gear ladder (or subtable) the split may use.
+    f_ref : float
+        Reference frequency the durations are measured at (`proc.f_max`).
+    d_top, slack : np.ndarray
+        Top-gear durations and reclaimable windows; broadcast together.
+    beta : np.ndarray or float
+        Frequency sensitivity, broadcast with the durations.
+    t_full : np.ndarray, optional
+        Precomputed full-task durations per gear, shape `d_top.shape +
+        (len(gears),)` with `t_full[..., i] = d * (beta * f_ref /
+        gears[i].freq_ghz + (1 - beta))` -- i.e. exactly the elementwise
+        expression this function would evaluate, hoisted out by a caller
+        that sweeps many slack columns against fixed durations (the plan
+        optimizer builds it once per processor group). When given, the
+        hi/lo full-task durations become table gathers instead of
+        recomputations; the gathered floats are bit-identical because
+        the table rows are produced by the identical IEEE expression.
+
+    Returns
+    -------
+    dict
+        Broadcast-compatible arrays keyed by name: the disjoint case
+        masks ``empty``/``flat``/``overrun``/``floor``/``single``/
+        ``split`` (``split`` means two bracketing gears; emission of each
+        half is still guarded by ``w``/``w_rem`` > 1e-12 as in the scalar
+        rule), positions ``hi_idx``/``lo_idx`` into `gears`, and
+        durations ``d_at_top``/``t_floor``/``t_hi_full``/``t_hi``/
+        ``t_lo`` plus the work fractions ``w``/``w_rem``. Slack-
+        independent quantities (``empty``/``d_at_top``/``t_floor``) keep
+        their natural input shape rather than being materialized to the
+        full broadcast shape -- with a (tasks, 1) duration column against
+        a (tasks, candidates) slack matrix they stay one column wide, so
+        the per-candidate cost of a sweep excludes them entirely.
+    """
+    d = np.asarray(d_top, dtype=float)
+    s = np.asarray(slack, dtype=float)
+    b = np.asarray(beta, dtype=float)
+    top = gears[0]
+    freqs = np.asarray([g.freq_ghz for g in gears])
+    target = d + s
+    if top.freq_ghz == f_ref:
+        d_at_top = d
+    else:
+        d_at_top = d * (b * f_ref / top.freq_ghz + (1.0 - b))
+
+    empty = d <= 0.0
+    flat = ~empty & (s <= 1e-15)
+    live = ~empty & ~flat
+    overrun = live & (target <= d_at_top + 1e-15)
+    live = live & ~overrun
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_floor = (t_full[..., -1] if t_full is not None
+                   else d * (b * f_ref / freqs[-1] + (1.0 - b)))
+        denom = target / d - (1.0 - b)
+        # the bracketing search consumes -f_m, and (-x)/y == -(x/y)
+        # exactly under IEEE division, so only the negation is built
+        neg_f_m = -(b * f_ref) / denom
+    floor = live & (t_floor <= target + 1e-15)
+    split = live & ~floor
+
+    # bracketing gears: first adjacent pair (hi, lo) with lo.f <= f <= hi.f,
+    # i.e. lo = first gear with freq <= f_m (freqs are descending)
+    neg_freqs = -freqs
+    lo_idx = np.searchsorted(neg_freqs, neg_f_m, side="left")
+    lo_idx = np.clip(lo_idx, 1, len(gears) - 1)
+    hi_idx = lo_idx - 1
+    # the clamp masks are deliberately NOT &-ed with `split`: non-split
+    # elements never have hi/lo consumed, so clamping them too is free
+    at_top = neg_f_m <= neg_freqs[0]       # f_m >= freqs[0]
+    at_floor = neg_f_m >= neg_freqs[-1]    # f_m <= freqs[-1]
+    hi_idx = np.where(at_top, 0, hi_idx)
+    lo_idx = np.where(at_top, 0, lo_idx)
+    hi_idx = np.where(at_floor, len(gears) - 1, hi_idx)
+    lo_idx = np.where(at_floor, len(gears) - 1, lo_idx)
+
+    single = split & (hi_idx == lo_idx)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        if t_full is not None:
+            t_hi_full = np.take_along_axis(t_full, hi_idx[..., None],
+                                           axis=-1)[..., 0]
+            t_lo_full = np.take_along_axis(t_full, lo_idx[..., None],
+                                           axis=-1)[..., 0]
+        else:
+            t_hi_full = d * (b * f_ref / freqs[hi_idx] + (1.0 - b))
+            t_lo_full = d * (b * f_ref / freqs[lo_idx] + (1.0 - b))
+        w = (target - t_lo_full) / (t_hi_full - t_lo_full)
+    w = np.clip(w, 0.0, 1.0)
+    w_rem = 1.0 - w
+    t_hi = w * t_hi_full
+    t_lo = w_rem * t_lo_full
+    split = split & ~single
+    return {
+        "empty": empty, "flat": flat, "overrun": overrun, "floor": floor,
+        "single": single, "split": split, "hi_idx": hi_idx, "lo_idx": lo_idx,
+        "d_at_top": d_at_top, "t_floor": t_floor, "t_hi_full": t_hi_full,
+        "t_hi": t_hi, "t_lo": t_lo, "w": w, "w_rem": w_rem,
+    }
+
+
 def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
                          slack: np.ndarray,
                          beta: np.ndarray | float = 1.0,
@@ -123,13 +241,13 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
     """Vectorized `two_gear_split` over arrays of tasks.
 
     Produces, per task, exactly the segments the scalar function would
-    (identical floats, not merely close: every arithmetic expression below
-    mirrors the scalar one elementwise, and the bracketing-gear search is
-    the same first-match rule). The per-strategy plan builders call this
-    once per graph instead of looping `two_gear_split` per task; the only
-    remaining Python loop assembles the output lists from precomputed
-    arrays. `gears` restricts the whole batch to a subtable, as in the
-    scalar function.
+    (identical floats, not merely close: `two_gear_split_arrays` mirrors
+    every scalar arithmetic expression elementwise, and the
+    bracketing-gear search is the same first-match rule). The
+    per-strategy plan builders call this once per graph instead of
+    looping `two_gear_split` per task; the only remaining Python loop
+    assembles the output lists from the precomputed arrays. `gears`
+    restricts the whole batch to a subtable, as in the scalar function.
 
     Parameters
     ----------
@@ -150,51 +268,16 @@ def two_gear_split_batch(proc: ProcessorModel, d_top: np.ndarray,
     if gears is None:
         gears = proc.gears
     d = np.asarray(d_top, dtype=float)
-    s = np.asarray(slack, dtype=float)
-    b = np.broadcast_to(np.asarray(beta, dtype=float), d.shape)
     n = len(d)
+    a = two_gear_split_arrays(gears, proc.f_max, d,
+                              np.asarray(slack, dtype=float), beta)
+    empty, flat, overrun = a["empty"], a["flat"], a["overrun"]
+    floor, single = a["floor"], a["single"]
+    hi_idx, lo_idx = a["hi_idx"], a["lo_idx"]
+    d_at_top, t_floor, t_hi_full = a["d_at_top"], a["t_floor"], a["t_hi_full"]
+    t_hi, t_lo, w, w_rem = a["t_hi"], a["t_lo"], a["w"], a["w_rem"]
+
     top = gears[0]
-    f_ref = proc.f_max
-    freqs = np.asarray([g.freq_ghz for g in gears])
-    target = d + s
-    if top.freq_ghz == f_ref:
-        d_at_top = d
-    else:
-        d_at_top = d * (b * f_ref / top.freq_ghz + (1.0 - b))
-
-    empty = d <= 0.0
-    flat = ~empty & (s <= 1e-15)
-    live = ~empty & ~flat
-    overrun = live & (target <= d_at_top + 1e-15)
-    live = live & ~overrun
-    with np.errstate(divide="ignore", invalid="ignore"):
-        t_floor = d * (b * f_ref / freqs[-1] + (1.0 - b))
-        denom = target / d - (1.0 - b)
-        f_m = b * f_ref / denom
-    floor = live & (t_floor <= target + 1e-15)
-    split = live & ~floor
-
-    # bracketing gears: first adjacent pair (hi, lo) with lo.f <= f <= hi.f,
-    # i.e. lo = first gear with freq <= f_m (freqs are descending)
-    lo_idx = np.searchsorted(-freqs, -f_m, side="left")
-    lo_idx = np.clip(lo_idx, 1, len(gears) - 1)
-    hi_idx = lo_idx - 1
-    at_top = split & (f_m >= freqs[0])
-    at_floor = split & (f_m <= freqs[-1])
-    hi_idx[at_top], lo_idx[at_top] = 0, 0
-    hi_idx[at_floor] = len(gears) - 1
-    lo_idx[at_floor] = len(gears) - 1
-
-    single = split & (hi_idx == lo_idx)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        t_hi_full = d * (b * f_ref / freqs[hi_idx] + (1.0 - b))
-        t_lo_full = d * (b * f_ref / freqs[lo_idx] + (1.0 - b))
-        w = (target - t_lo_full) / (t_hi_full - t_lo_full)
-    w = np.clip(w, 0.0, 1.0)
-    w_rem = 1.0 - w
-    t_hi = w * t_hi_full
-    t_lo = w_rem * t_lo_full
-
     low_gear = gears[-1]
     out: list[list[Segment]] = []
     for i in range(n):

@@ -3,19 +3,25 @@
 `simulate` and `simulate_reference` evaluate one `(machine, plan)` pair at a
 time, which is exactly the wrong shape for the repo's expensive analyses --
 `single_freq_opt`'s per-depth candidate sweep, the noise x seed x cadence
-grids in `benchmarks/strategy_gap.py`, and any future global plan search all
-evaluate *many variants of the same task graph*. `simulate_fleet` runs B
-such lanes in a single pass: one Python loop over tasks in tid order, with
-every per-lane quantity (rank clocks, gear indices, energy and switch
-accumulators) held in NumPy arrays whose trailing axis is the lane.
+grids in `benchmarks/strategy_gap.py`, and `core/optimize.py`'s plan search
+all evaluate *many variants of the same task graph*. `simulate_fleet` runs
+B such lanes in a single pass: a Python loop over dependency *waves* (not
+individual tasks), with every per-lane quantity (rank clocks, gear
+indices, energy and switch accumulators) held in NumPy arrays whose
+trailing axis is the lane.
 
-Why a single tid-order loop is a valid schedule: both serial engines rely
-on the invariant that a task's timing depends only on its rank's previous
-task and its dependencies' finish times, so dispatch order between ranks
-cannot change the result. Task ids are emitted topologically sorted AND in
-per-rank program order, so visiting tasks in tid order is one of the
-admissible dispatch orders -- the engine computes the same unique fixed
-point the pick-loop oracle does, just for B lanes at once.
+Why the wave sweep is a valid schedule: both serial engines rely on the
+invariant that a task's timing depends only on its rank's previous task
+and its dependencies' finish times, so dispatch order between ranks
+cannot change the result. Task ids are emitted topologically sorted AND
+in per-rank program order, so any order that respects dependencies and
+per-rank tid order is admissible. `_wave_structure` groups tasks by
+longest-path depth over the dependency DAG *augmented with each rank's
+tid chain*: within a wave no two tasks share a rank and every
+dependency/rank-predecessor sits in an earlier wave, so a whole wave is
+one block of vectorized array operations (tasks x lanes at once) and the
+engine still computes the same unique fixed point the pick-loop oracle
+does, just for B lanes -- and k tasks -- at a time.
 
 Exactness contract (the *three-engine* differential policy):
 
@@ -158,6 +164,174 @@ def _segment_slots(plans: Sequence[StrategyPlan], n: int):
     return counts2d, gears, dts
 
 
+def _wave_structure(n: int, n_ranks: int, owner, dep_info):
+    """Group tasks into dependency-and-rank-order waves for the lane pass.
+
+    A task's wave index is its longest-path depth over the dependency DAG
+    *augmented with each rank's tid-order chain*: `wave(t) = 1 + max(wave
+    of every dependency, wave of the rank's previous task)`. Within one
+    wave no two tasks share a rank and every dependency (and every rank
+    predecessor) sits in a strictly earlier wave, so the whole wave is
+    computable from earlier-wave state in one block of vectorized array
+    operations -- and processing waves in order replays every per-rank
+    state write in tid order, i.e. the pass reaches the same unique fixed
+    point as a task-by-task tid-order sweep, bit for bit.
+
+    Returns a list of `(tids, tid_list, ranks, dep_idx, comm)` tuples:
+    `tids`/`ranks` are (k,) index arrays (`tid_list` the plain-list twin
+    for cheap Python-side lookups), `dep_idx` is a (k, D) dependency-tid
+    array right-padded with `n` -- the finish buffer's extra pad row,
+    pinned at 0.0 and therefore never above a rank clock, so padding can
+    never win the readiness max -- or None when the wave has no
+    dependencies at all, and `comm` is the matching (k, D, 1) per-edge
+    communication adder (0.0 on the padding and on same-rank edges, an
+    exact no-op under IEEE addition for the nonnegative finish times).
+    """
+    wave = [0] * n
+    last = [-1] * n_ranks
+    for t in range(n):
+        w = 0
+        for d, _ in dep_info[t]:
+            wd = wave[d] + 1
+            if wd > w:
+                w = wd
+        r = owner[t]
+        p = last[r]
+        if p >= 0 and wave[p] + 1 > w:
+            w = wave[p] + 1
+        wave[t] = w
+        last[r] = t
+    groups: list[list[int]] = [[] for _ in range(max(wave) + 1)] if n else []
+    for t in range(n):
+        groups[wave[t]].append(t)
+    waves = []
+    for g in groups:
+        k = len(g)
+        dmax = max(len(dep_info[t]) for t in g)
+        if dmax:
+            dep_idx = np.full((k, dmax), n, dtype=np.int64)
+            comm = np.zeros((k, dmax, 1))
+            for i, t in enumerate(g):
+                for j, (d, cm) in enumerate(dep_info[t]):
+                    dep_idx[i, j] = d
+                    comm[i, j, 0] = cm
+        else:
+            dep_idx = comm = None
+        waves.append((np.asarray(g, dtype=np.int64), g,
+                      np.asarray([owner[t] for t in g], dtype=np.int64),
+                      dep_idx, comm))
+    return waves
+
+
+def _fleet_lane_pass(n: int, n_ranks: int, owner, dep_info, code,
+                     pw_act, pw_idle, sw_tab, tsw, halt_win, hide, idle,
+                     overhead, ovh_any, seg_gear, seg_dt, valid, max_slots,
+                     start2d, fin2d, rank_free, rank_gear, core_e, sw_e,
+                     sw_cnt, waves=None) -> np.ndarray:
+    """One vectorized wave-order sweep over all lanes, mutating the state
+    buffers in place and returning the (B,) makespan.
+
+    The single hot loop shared by `simulate_fleet` (which allocates fresh
+    buffers per call) and `core/optimize.py`'s candidate evaluator (which
+    zeroes and reuses preallocated buffers across search rounds, passes
+    `(n_ranks, 1)`-shaped machine columns that broadcast over the lane
+    axis, and supplies its precomputed `waves`). `fin2d` must carry one
+    extra all-zero pad row (shape `(n + 1, B)`) that dependency gathers
+    aim padding at. Every expression here is the engine's
+    exactness-critical core -- see the module docstring for the
+    bit-identical timeline contract it upholds and `_wave_structure` for
+    why the wave order computes the tid-order fixed point exactly.
+
+    Active-segment energy (power at the planned gear x planned duration)
+    depends only on the plan, never on the realized timeline, and padded
+    slots carry dt == 0.0 -- so it is summed in ONE vectorized block
+    before the wave loop. Like the per-wave `.sum(axis=0)` reductions,
+    that is a pure summation reorder relative to accumulating it in tid
+    order: timelines are untouched and the energy totals stay well
+    inside the engine's documented 1e-9 relative contract.
+    """
+    if n:
+        own = np.asarray(owner)
+        core_e += np.einsum("snl,snl->l", pw_act[code[own][None], seg_gear],
+                            seg_dt)
+    if waves is None:
+        waves = _wave_structure(n, n_ranks, owner, dep_info)
+    maximum, where = np.maximum, np.where
+    for tids, tlist, ranks, dep_idx, comm in waves:
+        free = rank_free[ranks]                                # (k, L)
+        ready = (free if dep_idx is None
+                 else maximum(free, (fin2d[dep_idx] + comm).max(axis=1)))
+        code_w = code[ranks]                                   # (k, W)
+        gear_now = rank_gear[ranks]                            # (k, L)
+        # serial engines resolve each task's first gear BEFORE the wait
+        # downshift: a no-segment lane targets the pre-wait gear, so a
+        # downshifted rank switches back (with a stall) to run it
+        gear_pre = gear_now
+        wait = ready - free
+
+        # ---- waiting period handling (idle gear + switches) -------------
+        waiting = wait > 1e-15
+        if waiting.any():
+            idle_w = idle[ranks]
+            down = waiting & (idle_w != gear_now) & (wait >= halt_win[ranks])
+            g_wait = where(down, idle_w, gear_now)
+            sw_e += sw_tab[code_w, gear_now, g_wait].sum(axis=0)  # diag 0.0
+            sw_cnt += down.sum(axis=0)
+            core_e += where(waiting, pw_idle[code_w, g_wait] * wait,
+                            0.0).sum(axis=0)
+            gear_now = g_wait
+
+        # ---- gear switch into each task's first segment -----------------
+        ms_w = max(max_slots[t] for t in tlist)
+        first = (where(valid[0, tids], seg_gear[0, tids], gear_pre)
+                 if ms_w else gear_pre)
+        shifted = first != gear_now
+        if shifted.any():
+            sw_e += sw_tab[code_w, gear_now, first].sum(axis=0)
+            sw_cnt += shifted.sum(axis=0)
+            stall = where(shifted & ~(hide & (wait >= tsw[ranks])),
+                          tsw[ranks], 0.0)
+            core_e += (pw_idle[code_w, first] * stall).sum(axis=0)
+            t_exec = ready + stall
+        else:
+            t_exec = ready
+        gear_now = first
+
+        # ---- runtime overhead (detection / monitoring) ------------------
+        if any(ovh_any[t] for t in tlist):
+            ovh = overhead[tids]
+            core_e += (pw_act[code_w, gear_now] * ovh).sum(axis=0)
+            t_exec = t_exec + ovh
+        start2d[tids] = t_exec
+
+        # ---- execute the frequency segments -----------------------------
+        # slot 0 never switches (gear_now == first already); later slots
+        # replicate the serial engines' planned mid-task switches. Tasks
+        # shorter than the wave's deepest slot ride along on dt == 0.0
+        # padding. The active energy itself was summed before the loop.
+        for s in range(ms_w):
+            if s:
+                gs = where(valid[s, tids], seg_gear[s, tids], gear_now)
+                sw_e += sw_tab[code_w, gear_now, gs].sum(axis=0)
+                sw_cnt += (gs != gear_now).sum(axis=0)
+                gear_now = gs
+            t_exec = t_exec + seg_dt[s, tids]
+        fin2d[tids] = t_exec
+        rank_free[ranks] = t_exec
+        rank_gear[ranks] = gear_now
+
+    # ---- trailing idle until global makespan (ranks finishing early) ----
+    makespan = fin2d[:n].max(axis=0) if n else np.zeros(fin2d.shape[1])
+    gap = rank_free < makespan - 1e-15
+    if gap.any():
+        g_tail = where(gap & (idle != rank_gear), idle, rank_gear)
+        sw_e += sw_tab[code, rank_gear, g_tail].sum(axis=0)
+        sw_cnt += (g_tail != rank_gear).sum(axis=0)
+        core_e += where(gap, pw_idle[code, g_tail]
+                        * (makespan - rank_free), 0.0).sum(axis=0)
+    return makespan
+
+
 def _empty_fleet(graph: TaskGraph, cost: CostModel,
                  cores_per_node: int) -> FleetSchedule:
     """The zero-lane fleet (B == 0): all arrays empty along the lane axis."""
@@ -266,92 +440,23 @@ def simulate_fleet(graph: TaskGraph,
                  for d in t.deps] for t in tasks]
 
     # -- lane state + accumulators ----------------------------------------
+    # fin2d's extra row is the all-zero pad target for dependency gathers
     start2d = np.zeros((n, b))
-    fin2d = np.zeros((n, b))
+    fin2d = np.zeros((n + 1, b))
     rank_free = np.zeros((n_ranks, b))
     rank_gear = np.zeros((n_ranks, b), dtype=np.int64)     # 0 = top gear
     core_e = np.zeros(b)
     sw_e = np.zeros(b)
     sw_cnt = np.zeros(b, dtype=np.int64)
 
-    maximum, where = np.maximum, np.where
-    for t in range(n):
-        r = owner[t]
-        free = rank_free[r]
-        ready = free
-        for d, cm in dep_info[t]:
-            ready = maximum(ready, fin2d[d] + cm if cm else fin2d[d])
-        code_r = code[r]
-        gear_now = rank_gear[r]
-        # serial engines resolve the task's first gear BEFORE the wait
-        # downshift: a no-segment lane targets the pre-wait gear, so a
-        # downshifted rank switches back (with a stall) to run it
-        gear_pre = gear_now
-        wait = ready - free
-
-        # ---- waiting period handling (idle gear + switches) -------------
-        waiting = wait > 1e-15
-        if waiting.any():
-            down = waiting & (idle[r] != gear_now) & (wait >= halt_win[r])
-            g_wait = where(down, idle[r], gear_now)
-            sw_e += sw_tab[code_r, gear_now, g_wait]   # diagonal is 0.0
-            sw_cnt += down
-            core_e += where(waiting, pw_idle[code_r, g_wait] * wait, 0.0)
-            gear_now = g_wait
-
-        # ---- gear switch into the task's first segment ------------------
-        first = (where(valid[0, t], seg_gear[0, t], gear_pre)
-                 if max_slots[t] else gear_pre)
-        shifted = first != gear_now
-        if shifted.any():
-            sw_e += sw_tab[code_r, gear_now, first]
-            sw_cnt += shifted
-            stall = where(shifted & ~(hide & (wait >= tsw[r])),
-                          tsw[r], 0.0)
-            core_e += pw_idle[code_r, first] * stall
-            t_exec = ready + stall
-        else:
-            t_exec = ready
-        gear_now = first
-
-        # ---- runtime overhead (detection / monitoring) ------------------
-        if ovh_any[t]:
-            ovh = overhead[t]
-            core_e += pw_act[code_r, gear_now] * ovh
-            t_exec = t_exec + ovh
-        start2d[t] = t_exec
-
-        # ---- execute the task's frequency segments ----------------------
-        # slot 0 never switches (gear_now == first already); later slots
-        # replicate the serial engines' planned mid-task switches
-        for s in range(max_slots[t]):
-            if s:
-                gs = where(valid[s, t], seg_gear[s, t], gear_now)
-                sw_e += sw_tab[code_r, gear_now, gs]
-                sw_cnt += gs != gear_now
-                gear_now = gs
-            dt = seg_dt[s, t]
-            core_e += pw_act[code_r, gear_now] * dt
-            t_exec = t_exec + dt
-        fin2d[t] = t_exec
-        rank_free[r] = t_exec
-        rank_gear[r] = gear_now
-
-    # ---- trailing idle until global makespan (ranks finishing early) ----
-    makespan = fin2d.max(axis=0) if n else np.zeros(b)
-    for r in range(n_ranks):
-        gap = rank_free[r] < makespan - 1e-15
-        if gap.any():
-            g_now = rank_gear[r]
-            g_tail = where(gap & (idle[r] != g_now), idle[r], g_now)
-            sw_e += sw_tab[code[r], g_now, g_tail]
-            sw_cnt += g_tail != g_now
-            core_e += where(gap, pw_idle[code[r], g_tail]
-                            * (makespan - rank_free[r]), 0.0)
+    _fleet_lane_pass(n, n_ranks, owner, dep_info, code, pw_act, pw_idle,
+                     sw_tab, tsw, halt_win, hide, idle, overhead, ovh_any,
+                     seg_gear, seg_dt, valid, max_slots, start2d, fin2d,
+                     rank_free, rank_gear, core_e, sw_e, sw_cnt)
 
     nodal = np.array([machine_nodal_const_power_w(m, n_ranks, cores_per_node)
                       for m in lane_machines])
     return FleetSchedule(graph, lane_machines, cost, plans,
                          np.ascontiguousarray(start2d.T),
-                         np.ascontiguousarray(fin2d.T),
+                         np.ascontiguousarray(fin2d[:n].T),
                          sw_cnt, sw_e, core_e, nodal, cores_per_node)

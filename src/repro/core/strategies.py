@@ -148,6 +148,25 @@ class StrategyConfig:
     # re-plans around engine effects the TX slack model does not price
     # (visible switch stalls), at the cost of the exact-identity property.
     replan_anchor: str = "model"
+    # plan_search (core/optimize.py): makespan bound as a fraction over
+    # the baseline, search rounds (coordinate-descent sweeps; each round
+    # scores every level-band mutation in one batched fleet pass), the
+    # evaluator's lane-buffer width, and the jitter seed.
+    plan_search_slowdown_cap: float = 0.05
+    plan_search_rounds: int = 4
+    plan_search_lanes: int = 192
+    plan_search_seed: int = 0
+
+    def __setattr__(self, name, value):
+        # knob-name validation: a misspelled knob set after construction
+        # (cfg.tx_panel_slack_us = ...) used to pass silently and leave
+        # the real knob at its default; the constructor already rejects
+        # unknown keyword arguments via the dataclass __init__.
+        if name not in self.__dataclass_fields__:
+            raise ValueError(
+                f"unknown StrategyConfig knob {name!r}; valid knobs: "
+                f"{sorted(self.__dataclass_fields__)}")
+        super().__setattr__(name, value)
 
 
 class PlanContext:
@@ -887,7 +906,14 @@ def make_plan(name: str, graph: TaskGraph,
 
 @dataclasses.dataclass
 class StrategyResult:
-    """One strategy's simulated outcome plus percentages vs `original`."""
+    """One strategy's simulated outcome plus percentages vs `original`.
+
+    The scalar fields come straight from the batched fleet pass
+    `evaluate_strategies` runs; the full per-rank `Schedule` is
+    materialized lazily through the `schedule` property (one fast-engine
+    call, exact by the differential contract), so sweeps that only read
+    energies never pay for per-strategy segment timelines.
+    """
 
     name: str
     makespan_s: float
@@ -896,7 +922,17 @@ class StrategyResult:
     slowdown_pct: float        # vs original
     energy_saved_pct: float    # vs original
     switch_count: int
-    schedule: Schedule
+    _schedule: "Schedule | None" = dataclasses.field(
+        default=None, repr=False)
+    _schedule_factory: "object | None" = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def schedule(self) -> Schedule:
+        """The strategy's full `Schedule`, simulated on first access."""
+        if self._schedule is None:
+            self._schedule = self._schedule_factory()
+        return self._schedule
 
 
 def evaluate_strategies(graph: TaskGraph,
@@ -928,22 +964,38 @@ def evaluate_strategies(graph: TaskGraph,
     -------
     dict of str to StrategyResult
         Per-strategy makespan/energy/switches plus slowdown and savings
-        percentages vs `original`, keyed by strategy name.
+        percentages vs `original`, keyed by strategy name. Each result's
+        `.schedule` is materialized lazily (one fast-engine call on first
+        access); the scalar fields come from one batched `simulate_fleet`
+        pass over all named strategies -- makespans and switch counts
+        bit-identical to the old serial sweep, energies within the
+        documented 1e-9 relative cross-engine tolerance.
     """
     ctx = PlanContext(graph, proc, cost, cfg)
     ref = ctx.baseline
     ref_time, ref_energy = ref.makespan, ref.total_energy_j()
+    planned = [nm for nm in names if nm != "original"]
+    plans = [get_strategy(nm).plan(ctx) for nm in planned]
+    fleet = simulate_fleet(graph, proc, cost, plans)
+    energies, makespans = fleet.total_energy_j(), fleet.makespan
+    lane = {nm: i for i, nm in enumerate(planned)}
     results: dict[str, StrategyResult] = {}
     for name in names:
-        sched = ref if name == "original" else \
-            simulate(graph, proc, cost, get_strategy(name).plan(ctx))
-        t, e = sched.makespan, sched.total_energy_j()
+        if name == "original":
+            t, e, sw = ref_time, ref_energy, ref.switch_count
+            sched, factory = ref, None
+        else:
+            i = lane[name]
+            t, e = float(makespans[i]), float(energies[i])
+            sw = int(fleet.switch_count[i])
+            sched, factory = None, functools.partial(simulate, graph, proc,
+                                                     cost, plans[i])
         results[name] = StrategyResult(
             name=name, makespan_s=t, energy_j=e,
             avg_power_w=e / t if t else 0.0,
             slowdown_pct=100.0 * (t / ref_time - 1.0) if ref_time else 0.0,
             energy_saved_pct=100.0 * (1.0 - e / ref_energy)
             if ref_energy else 0.0,
-            switch_count=sched.switch_count,
-            schedule=sched)
+            switch_count=sw,
+            _schedule=sched, _schedule_factory=factory)
     return results

@@ -112,3 +112,26 @@ def test_fleet_disagreement_fails(tmp_path):
     old = {"sim_speed": {"fleet_agree": True}}
     new = {"sim_speed": {"fleet_agree": False}}
     assert _run(tmp_path, old, new) == 1
+
+
+def test_search_ratio_gated_by_hard_floor_only(tmp_path):
+    """The plan-search candidate-throughput ratio has its own 30x hard
+    floor: noisy drops that stay above it pass, anything below fails."""
+    old = {"sim_speed": {"search_throughput_ratio": 50.0,
+                         "search_agree": True}}
+    ok = {"sim_speed": {"search_throughput_ratio": 33.0,
+                        "search_agree": True}}
+    bad = {"sim_speed": {"search_throughput_ratio": 25.0,
+                         "search_agree": True}}
+    assert _run(tmp_path, old, ok) == 0     # noise, still above 30x target
+    assert _run(tmp_path, old, bad) == 1    # below the hard floor
+    # the floor is tunable for ad-hoc comparisons
+    assert _run(tmp_path, old, bad, ("--search-floor", "20")) == 0
+
+
+def test_search_disagreement_fails(tmp_path):
+    """A batched candidate diverging from the fast engine is a
+    correctness failure, not a perf regression."""
+    old = {"sim_speed": {"search_agree": True}}
+    new = {"sim_speed": {"search_agree": False}}
+    assert _run(tmp_path, old, new) == 1

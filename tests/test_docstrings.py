@@ -23,11 +23,11 @@ import pytest
 
 import repro.core as core
 from repro.core import (critical_path, dag, dvfs, energy_aware_step,
-                        energy_model, fleet, replan, scheduler, strategies,
-                        tds)
+                        energy_model, fleet, optimize, replan, scheduler,
+                        strategies, tds)
 
 MODULES = (core, critical_path, dag, dvfs, energy_aware_step, energy_model,
-           fleet, replan, scheduler, strategies, tds)
+           fleet, optimize, replan, scheduler, strategies, tds)
 
 # Entry points that must carry full NumPy-style docstrings
 # (module attribute path -> callable). Keep in sync with README.md's API
@@ -58,6 +58,10 @@ NUMPY_STYLE_APIS = {
     "strategies.tx_policy_segments": strategies.tx_policy_segments,
     "replan.replan_tx": replan.replan_tx,
     "replan.iteration_waves": replan.iteration_waves,
+    "dvfs.two_gear_split_arrays": dvfs.two_gear_split_arrays,
+    "optimize.search_plan": optimize.search_plan,
+    "optimize.CandidateEvaluator.evaluate":
+        optimize.CandidateEvaluator.evaluate,
 }
 
 

@@ -1,0 +1,126 @@
+"""Tests for the batched plan search (PR 7): `CandidateEvaluator` must
+score candidate extra-time vectors exactly as the fast engine scores the
+equivalent `StrategyPlan`s (bit-identical makespans, 1e-9-relative
+energies -- the contract `benchmarks/sim_speed.py` times), and
+`search_plan` must respect its slowdown cap, dominate every registered
+heuristic on the same context, and be deterministic for a fixed seed.
+The engine-agreement side of plan_search itself (fast vs reference vs
+fleet on its emitted plan) is covered by the differential suite.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CandidateEvaluator, CostModel, PlanContext,
+                        StrategyConfig, StrategyPlan, build_dag,
+                        get_strategy, make_big_little, make_processor,
+                        registered_strategies, simulate)
+
+COST = CostModel()
+MACHINES = {
+    "homog": make_processor("arc_opteron_6128"),
+    "big_little": make_big_little("arc_opteron_6128"),
+}
+
+
+def _ctx(machine, fact="cholesky", n_tiles=6, tile=256, grid=(2, 2),
+         cfg=None):
+    return PlanContext(build_dag(fact, n_tiles, tile, grid),
+                       MACHINES[machine], COST, cfg)
+
+
+def _serial_score(ctx, e):
+    """What a search WITHOUT the batched evaluator would compute: render
+    the candidate through `reclaimed_segments` and run `simulate`."""
+    idle, rank_idle = ctx._idle_gears(-1)
+    plan = StrategyPlan("cand", ctx.reclaimed_segments(e, 0.0),
+                        idle_gear=idle,
+                        per_task_overhead=np.zeros(ctx.n_tasks),
+                        hide_switch_in_wait=True,
+                        rank_idle_gears=rank_idle)
+    s = simulate(ctx.graph, ctx.proc, ctx.cost, plan)
+    return s.total_energy_j(), s.makespan
+
+
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+@pytest.mark.parametrize("fact", ["cholesky", "lu", "qr"])
+def test_evaluator_matches_fast_engine(machine, fact):
+    """37 random candidates through a 16-lane evaluator (odd chunking:
+    16 + 16 + 5) must reproduce the fast engine's (energy, makespan)
+    pair for every row, including an all-zero row (the baseline plan)."""
+    ctx = _ctx(machine, fact)
+    n = ctx.n_tasks
+    rng = np.random.default_rng(3)
+    slack = np.maximum(ctx.slack, 0.0)
+    E = (slack[None, :] * rng.uniform(0.0, 1.4, (37, n))
+         + rng.uniform(0.0, 0.15, (37, n)) * ctx.durations[None, :])
+    E[5] = 0.0
+    ev = CandidateEvaluator(ctx, 16)
+    energy, make = ev.evaluate(E)
+    for i in range(len(E)):
+        e_ref, m_ref = _serial_score(ctx, E[i])
+        assert make[i] == m_ref, (machine, fact, i)
+        assert energy[i] == pytest.approx(e_ref, rel=1e-9), (machine, fact, i)
+
+
+def test_evaluator_rejects_wrong_width():
+    ctx = _ctx("homog")
+    with pytest.raises(ValueError):
+        CandidateEvaluator(ctx).evaluate(np.zeros((3, ctx.n_tasks + 1)))
+
+
+def test_evaluator_buffers_reused_across_calls():
+    """Back-to-back evaluations of different batches must not leak state
+    between calls (the buffers are preallocated and reused)."""
+    ctx = _ctx("big_little")
+    ev = CandidateEvaluator(ctx, 8)
+    slack = np.maximum(ctx.slack, 0.0)
+    a1, _ = ev.evaluate(slack[None, :])
+    ev.evaluate(np.zeros((11, ctx.n_tasks)))          # dirty the buffers
+    a2, _ = ev.evaluate(slack[None, :])
+    assert a1[0] == a2[0]
+
+
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+def test_search_respects_slowdown_cap(machine):
+    for cap in (0.0, 0.05):
+        cfg = StrategyConfig(plan_search_slowdown_cap=cap,
+                             plan_search_rounds=2, plan_search_lanes=96)
+        ctx = _ctx(machine, cfg=cfg)
+        plan = get_strategy("plan_search").plan(ctx)
+        sched = simulate(ctx.graph, ctx.proc, COST, plan)
+        assert sched.makespan <= ctx.baseline.makespan * (1.0 + cap) + 1e-9
+
+
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+def test_search_dominates_every_heuristic(machine):
+    """The peer-seeded search must never lose to a registered heuristic
+    that itself stays under the cap (the oracle_gap denominator
+    guarantee)."""
+    ctx = _ctx(machine)
+    cap = ctx.baseline.makespan * (1.0 + ctx.cfg.plan_search_slowdown_cap)
+    best = simulate(ctx.graph, ctx.proc, COST,
+                    get_strategy("plan_search").plan(ctx)).total_energy_j()
+    for name in registered_strategies():
+        if name in ("plan_search", "original"):
+            continue
+        sched = simulate(ctx.graph, ctx.proc, COST,
+                         get_strategy(name).plan(ctx))
+        if sched.makespan <= cap + 1e-12:
+            assert best <= sched.total_energy_j() * (1.0 + 1e-7), \
+                (machine, name)
+
+
+def test_search_deterministic():
+    cfg = StrategyConfig(plan_search_seed=11, plan_search_rounds=2)
+    p1 = get_strategy("plan_search").plan(_ctx("homog", cfg=cfg))
+    p2 = get_strategy("plan_search").plan(_ctx("homog", cfg=cfg))
+    assert len(p1.task_segments) == len(p2.task_segments)
+    for sa, sb in zip(p1.task_segments, p2.task_segments):
+        assert [(g.index, t) for g, t in sa] == [(g.index, t) for g, t in sb]
+
+
+def test_search_plan_name_and_registration():
+    assert "plan_search" in registered_strategies()
+    plan = get_strategy("plan_search").plan(_ctx("homog", n_tiles=4))
+    assert plan.name == "plan_search"

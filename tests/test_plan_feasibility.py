@@ -1,0 +1,72 @@
+"""Plan-feasibility property test (PR 7): over randomized factorization
+DAGs on homogeneous and big.LITTLE machines, EVERY registered strategy
+must emit plans whose gears -- task segments and per-rank idle gears
+alike -- come from the owning rank's own gear ladder (an asymmetric
+machine makes a foreign gear a real hazard: the engines would silently
+index another processor's power table), and the capped strategies
+(`plan_search`, `single_freq_opt`) must honor their slowdown caps on
+every draw, not just on the tuned benchmark cells.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, PlanContext, StrategyConfig, build_dag,
+                        make_big_little, make_processor,
+                        registered_strategies, get_strategy, simulate)
+
+COST = CostModel()
+MACHINES = {
+    "homog": make_processor("arc_opteron_6128"),
+    "big_little": make_big_little("arc_opteron_6128"),
+}
+# overhead-free, noise-free config: feasibility must hold structurally,
+# not thanks to a particular overhead/noise draw
+CFG = dict(cp_detect_overhead=0.0, monitor_overhead=0.0,
+           tx_online_rel_err=0.0, plan_search_rounds=2,
+           plan_search_lanes=64)
+CAPPED = {"plan_search": "plan_search_slowdown_cap",
+          "single_freq_opt": "single_freq_slowdown_cap"}
+
+
+def _random_ctx(seed, machine):
+    rng = np.random.default_rng(seed)
+    fact = rng.choice(["cholesky", "lu", "qr"])
+    n_tiles = int(rng.integers(3, 9))
+    tile = int(rng.choice([128, 256, 512]))
+    grid = (int(rng.integers(1, 3)), int(rng.integers(1, 3)))
+    return PlanContext(build_dag(fact, n_tiles, tile, grid),
+                       MACHINES[machine], COST, StrategyConfig(**CFG))
+
+
+def _rank_ladders(ctx):
+    """Per-rank set of (index, freq) pairs identifying that rank's gears."""
+    return [{(g.index, g.freq_ghz) for g in p.gears}
+            for p in ctx.rank_procs]
+
+
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+@pytest.mark.parametrize("seed", range(8))
+def test_all_strategies_feasible_on_random_dags(seed, machine):
+    ctx = _random_ctx(seed, machine)
+    ladders = _rank_ladders(ctx)
+    n_ranks = ctx.graph.n_ranks
+    for name in registered_strategies():
+        plan = get_strategy(name).plan(ctx)
+        # every emitted segment gear belongs to the owner rank's ladder
+        for tid, segs in enumerate(plan.task_segments):
+            ok = ladders[ctx.graph.tasks[tid].owner]
+            for g, dt in segs:
+                assert (g.index, g.freq_ghz) in ok, (name, tid)
+                assert dt >= 0.0
+        # so does every rank's idle gear
+        for r in range(n_ranks):
+            g = plan.idle_gear_for(r)
+            assert (g.index, g.freq_ghz) in ladders[r], (name, r)
+        # capped strategies honor their caps on every draw
+        knob = CAPPED.get(name)
+        if knob is not None:
+            cap = getattr(ctx.cfg, knob)
+            sched = simulate(ctx.graph, ctx.proc, COST, plan)
+            assert (sched.makespan
+                    <= ctx.baseline.makespan * (1.0 + cap) + 1e-9), name

@@ -427,7 +427,7 @@ def test_registry_covers_legacy_and_tx():
     pins the minimum population they must cover."""
     for name in ("original", "race_to_halt", "cp_aware", "algorithmic", "tx",
                  "task_type_gears", "single_freq_opt", "tx_online",
-                 "tx_replan"):
+                 "tx_replan", "plan_search"):
         assert name in ALL_STRATEGIES
 
 

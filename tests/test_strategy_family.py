@@ -213,6 +213,21 @@ def test_tx_online_savings_degrade_with_noise():
     assert mean_saved(0.0) > mean_saved(0.4)
 
 
+def test_strategy_config_rejects_unknown_knob():
+    """A misspelled knob set after construction used to pass silently and
+    leave the real knob at its default; it must raise, naming the bad
+    knob and the valid set (constructor typos already die in __init__)."""
+    cfg = StrategyConfig()
+    with pytest.raises(ValueError, match="tx_panel_slack_us"):
+        cfg.tx_panel_slack_us = 1.0
+    with pytest.raises(ValueError, match="plan_search_rounds"):
+        cfg.plan_search_round = 9           # singular typo of a real knob
+    cfg.plan_search_rounds = 9              # the real knob still settable
+    assert cfg.plan_search_rounds == 9
+    with pytest.raises(TypeError):
+        StrategyConfig(not_a_knob=1)
+
+
 def test_make_plan_dispatches_new_strategies():
     g = build_dag("lu", 5, 256, (2, 2))
     for name in NEW_STRATEGIES:
