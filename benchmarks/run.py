@@ -9,6 +9,7 @@ Sections:
     factorization_perf tiled factorization GFLOP/s + TDS mix     (perf table)
     heterogeneous      strategies on big.LITTLE machines          (Costero)
     lm_energy          technique on LM step DAGs (all archs)     (adaptation)
+    serving            J/token + p99 under diurnal traffic        (serving)
     sim_speed          event-driven simulator vs pick-loop oracle (infra)
 
 Each section module exposes `bench() -> (lines, metrics)`: the printable
@@ -25,7 +26,7 @@ import platform
 import time
 
 from . import (energy_savings, factorization_perf, heterogeneous, lm_energy,
-               power_trace, sim_speed, strategy_gap)
+               power_trace, serving_energy, sim_speed, strategy_gap)
 
 SECTIONS = {
     "strategy_gap": strategy_gap.bench,
@@ -34,6 +35,7 @@ SECTIONS = {
     "factorization_perf": factorization_perf.bench,
     "heterogeneous": heterogeneous.bench,
     "lm_energy": lm_energy.bench,
+    "serving": serving_energy.bench,
     "sim_speed": sim_speed.bench,
 }
 

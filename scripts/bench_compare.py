@@ -25,6 +25,15 @@ old value):
                         plan-candidate evaluator vs the naive
                         per-candidate loop: --search-floor, default 30.0,
                         the >=30x ISSUE 7 target).
+  * serving energy   -- `serving` keys ending in `.j_per_token` (energy
+                        per generated token; LOWER is better, fully
+                        deterministic). A relative RISE above
+                        --serving-floor (default 0.20) fails; smaller
+                        moves are reported as drift. Additionally, any
+                        `serving` key ending in `.slo_ok` that flips
+                        True -> False fails the gate: a strategy whose
+                        p99 latency newly violates the SLO is a serving
+                        regression even if it saves energy.
   * energy savings   -- any section metric whose key contains `saved`
                         (strategy energy-savings percentages; higher is
                         better, fully deterministic). Near-zero baselines
@@ -82,9 +91,14 @@ def _is_search_ratio(name: str) -> bool:
     return name == "sim_speed.search_throughput_ratio"
 
 
+def _is_serving_j_per_token(name: str) -> bool:
+    section, _, key = name.partition(".")
+    return section == "serving" and key.endswith(".j_per_token")
+
+
 def _gated(name: str) -> bool:
     return (_is_speedup(name) or _is_fleet_speedup(name)
-            or _is_search_ratio(name)
+            or _is_search_ratio(name) or _is_serving_j_per_token(name)
             or "saved" in name.partition(".")[2])
 
 
@@ -111,6 +125,10 @@ def main() -> int:
                          "sim_speed.search_throughput_ratio (the batched "
                          "candidate-evaluator target), same rule as "
                          "--speedup-floor")
+    ap.add_argument("--serving-floor", type=float, default=0.20,
+                    help="max allowed relative RISE on serving "
+                         "*.j_per_token metrics (lower is better; "
+                         "deterministic, so no absolute floor applies)")
     args = ap.parse_args()
 
     with open(args.old) as f:
@@ -142,6 +160,16 @@ def main() -> int:
                 drifts.append(f"{line}  (timing noise, still >= "
                               f"{args.search_floor:g}x)")
             continue
+        if _is_serving_j_per_token(name):
+            # lower is better: gate the relative RISE
+            rise = n - o
+            rel_rise = rise / abs(o) if o else 0.0
+            if rel_rise > args.serving_floor:
+                regressions.append(f"{line}  (+{100 * rel_rise:.1f}% "
+                                   "J/token)")
+            elif abs(rel) > args.threshold:
+                drifts.append(line)
+            continue
         if _is_speedup(name):
             # hard floor, independent of the relative drop: a refreshed
             # baseline must not let the target erode PR by PR
@@ -165,6 +193,18 @@ def main() -> int:
         if agree_old is True and agree_new is False:
             regressions.append(f"sim_speed.{flag}: True -> False "
                                "(engine disagreement)")
+
+    # serving SLO flips: a strategy whose p99 newly violates the SLO
+    # (slo_ok True -> False vs the committed trajectory) is a regression;
+    # metrics present in only one file stay non-gating as usual.
+    old_srv = old.get("sections", {}).get("serving", {})
+    new_srv = new.get("sections", {}).get("serving", {})
+    if isinstance(old_srv, dict) and isinstance(new_srv, dict):
+        for key in sorted(old_srv.keys() & new_srv.keys()):
+            if (key.endswith(".slo_ok") and old_srv[key] is True
+                    and new_srv[key] is False):
+                regressions.append(f"serving.{key}: True -> False "
+                                   "(p99 newly violates the SLO)")
 
     only_old = sorted(old_m.keys() - new_m.keys())
     only_new = sorted(new_m.keys() - old_m.keys())

@@ -25,6 +25,10 @@ Public API:
     analyze_residual_tds                    -- residual-graph analyses
     search_plan, CandidateEvaluator         -- batched plan search (the
                                                plan_search strategy)
+    make_trace, build_serving_graph         -- LM serving traffic compiler
+    serving_machine, serving_cost_model     -- serving cluster + cost model
+    request_latencies, p99_latency_s,
+    slo_violation_rate                      -- per-request SLO accounting
 
 See README.md for the user-facing tour and docs/ARCHITECTURE.md for the
 layer map, the three-engine differential-testing policy, and the
@@ -52,6 +56,12 @@ from .strategies import (STRATEGIES, PlanContext, ResidualPlanContext,
                          Strategy, StrategyConfig, StrategyResult,
                          evaluate_strategies, get_strategy, make_plan,
                          register_strategy, registered_strategies)
+from .serving import (MODEL_PROFILES, TRAFFIC_SHAPES, ServingGraph,
+                      ServingModelProfile, ServingTrace, build_serving_graph,
+                      make_clock_proc, make_server_proc, make_trace,
+                      p99_latency_s, request_latencies, serving_cost_model,
+                      serving_machine, slo_violation_rate,
+                      traffic_rate_curve)
 from .tds import (GEAR_CLASS_NAMES, GEAR_CLASS_PANEL, GEAR_CLASS_SOLVE,
                   GEAR_CLASS_UPDATE, SOLVE_KINDS, WAIT_CLASS_NAMES,
                   WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE, WAIT_PANEL,
@@ -86,6 +96,12 @@ __all__ = [
     "STRATEGIES", "PlanContext", "Strategy", "StrategyConfig",
     "StrategyResult", "evaluate_strategies", "get_strategy", "make_plan",
     "register_strategy", "registered_strategies",
+    "MODEL_PROFILES", "TRAFFIC_SHAPES", "ServingGraph",
+    "ServingModelProfile", "ServingTrace", "build_serving_graph",
+    "make_clock_proc", "make_server_proc", "make_trace", "p99_latency_s",
+    "request_latencies",
+    "serving_cost_model", "serving_machine", "slo_violation_rate",
+    "traffic_rate_curve",
     "GEAR_CLASS_NAMES", "GEAR_CLASS_PANEL", "GEAR_CLASS_SOLVE",
     "GEAR_CLASS_UPDATE", "SOLVE_KINDS",
     "WAIT_CLASS_NAMES", "WAIT_COMM", "WAIT_IMBALANCE", "WAIT_NONE",

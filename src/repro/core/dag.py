@@ -32,10 +32,17 @@ KIND_EFFICIENCY: dict[str, float] = {
     "POTRF": 0.30, "GETRF": 0.25, "GEQRT": 0.25,
     "TRSM": 0.75, "TRSM_ROW": 0.75, "TRSM_COL": 0.75,
     "SYRK": 0.85, "GEMM": 0.90, "UNMQR": 0.80, "TSQRT": 0.35, "SSRFB": 0.85,
+    # serving kinds (core/serving.py): prefill is a GEMM-shaped
+    # compute-bound pass, decode is memory-bandwidth-bound token
+    # generation, CLOCK is the zero-power wall-clock chain that gates
+    # continuous-batching waves (calibrated so 1.0 is exact).
+    "PREFILL": 0.85, "DECODE": 0.30, "CLOCK": 1.0,
 }
 
 # Panel kinds sit on (or next to) the critical path of iteration k.
-PANEL_KINDS = frozenset({"POTRF", "GETRF", "GEQRT", "TSQRT"})
+# Serving graphs map prefill onto the same class: a compute-bound step
+# that gates everything behind it (core/serving.py).
+PANEL_KINDS = frozenset({"POTRF", "GETRF", "GEQRT", "TSQRT", "PREFILL"})
 
 
 @dataclasses.dataclass

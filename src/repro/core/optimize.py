@@ -341,7 +341,7 @@ def search_plan(ctx: PlanContext) -> StrategyPlan:
     if n == 0:
         return plan_of(np.zeros(0))
 
-    cap = ctx.baseline.makespan * (1.0 + cfg.plan_search_slowdown_cap)
+    cap = ctx.makespan_cap(cfg.plan_search_slowdown_cap)
     ev = CandidateEvaluator(ctx, cfg.plan_search_lanes)
     d = ctx.durations
 

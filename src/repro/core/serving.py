@@ -1,0 +1,504 @@
+"""Request-level LM serving simulator on the energy-planning stack.
+
+Maps a continuous-batching serving cluster onto the factorization
+machinery so every registered strategy -- and the batched fleet engine --
+can plan and score it unchanged (ROADMAP open item 1):
+
+  * **Traffic** -- `make_trace` draws deterministic seeded Poisson
+    arrivals modulated by a traffic shape (`TRAFFIC_SHAPES`): a
+    sinusoidal diurnal day-curve, a square-wave bursty profile, or a
+    flat baseline. All shapes are mean-normalized to the same offered
+    request rate, so comparisons across shapes hold load constant.
+  * **Waves** -- `build_serving_graph` compiles the trace into a
+    `TaskGraph` under a fixed continuous-batching cadence
+    (`step_period_s`): each wave admits newly arrived requests
+    round-robin to server ranks, runs one `PREFILL` task per admission
+    (compute-bound: `PANEL_KINDS` / panel gear class), and one fused
+    `DECODE` task per busy server (memory-bound: update gear class,
+    low `freq_sensitivity` beta after Calore et al.).
+  * **Wall clock** -- `TaskGraph` has no release times, so a dedicated
+    *clock rank* carries a chain of `CLOCK` tasks, one per wave, each
+    lasting exactly one period; wave-w server tasks depend on the w-th
+    clock task. The serving cost model pins `CLOCK`'s beta at 0.0
+    (frequency-invariant duration -- `dvfs.two_gear_split` then always
+    returns the unstretched duration), and `make_clock_proc` draws no
+    power, so no strategy can perturb or be charged for the wall clock.
+  * **Scoring** -- one `simulate_fleet` pass per traffic cell evaluates
+    every strategy's plan as a lane; `request_latencies` reads
+    per-request completion times straight out of the lane finish
+    arrays, and `p99_latency_s` / `slo_violation_rate` summarize them
+    against the SLO. The same SLO enters planning as
+    `StrategyConfig.slo_latency_s` through `PlanContext.makespan_cap`.
+
+`benchmarks/serving_energy.py` builds the J/token + p99 bench section on
+top of this module; `examples/serving_energy_demo.py` is the runnable
+tour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .dag import Task, TaskGraph
+from .energy_model import (Gear, MachineModel, ProcessorModel, as_machine,
+                           make_processor, scale_processor)
+from .scheduler import CostModel
+
+# Supported traffic shapes (all mean-normalized to the same offered rate).
+TRAFFIC_SHAPES = ("diurnal", "bursty", "flat")
+
+# Frequency of the single-gear wall-clock rank (GHz). Any value works --
+# CLOCK durations are calibrated against it -- it only needs to be shared
+# between `make_clock_proc` and `build_serving_graph`.
+CLOCK_FREQ_GHZ = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingModelProfile:
+    """Per-token cost profile of one served model family.
+
+    `flops` here are *effective* per-token costs pre-scaled to the
+    simulated cluster's throughput class -- the absolute numbers are
+    synthetic, the dense/MoE/SSM *ratios* (MoE activates a parameter
+    subset per token; SSM decode is constant-state and cheap) and the
+    decode frequency-sensitivity betas (memory-bound decode barely
+    stretches under DVFS, per Calore et al.) carry the physics.
+    """
+
+    name: str                       # family key ("dense" / "moe" / "ssm")
+    arch: str                       # representative repro.configs arch
+    prefill_flops_per_token: float  # compute-bound prompt pass
+    decode_flops_per_token: float   # memory-bound token generation
+    decode_beta: float              # freq_sensitivity of DECODE tasks
+
+
+# Family profiles keyed by `ServingModelProfile.name`; `arch` names the
+# representative config in `repro.configs.ARCHS`.
+MODEL_PROFILES: dict[str, ServingModelProfile] = {
+    "dense": ServingModelProfile("dense", "qwen2.5-3b", 1.0e7, 1.0e7, 0.25),
+    "moe": ServingModelProfile("moe", "mixtral-8x7b", 6.0e6, 6.0e6, 0.30),
+    "ssm": ServingModelProfile("ssm", "mamba2-370m", 8.0e6, 3.5e6, 0.55),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingTrace:
+    """One deterministic seeded request trace (see `make_trace`)."""
+
+    shape: str                  # member of TRAFFIC_SHAPES
+    seed: int                   # trace seed ((shape, seed) is reproducible)
+    rate_rps: float             # mean offered request rate (requests/s)
+    duration_s: float           # trace horizon (arrivals fall inside it)
+    arrival_s: np.ndarray       # sorted arrival times, shape (R,)
+    prompt_tokens: np.ndarray   # prompt length per request, shape (R,)
+    decode_tokens: np.ndarray   # tokens to generate per request, >= 1
+
+    @property
+    def n_requests(self) -> int:
+        """Number of requests in the trace."""
+        return int(self.arrival_s.size)
+
+    @property
+    def total_decode_tokens(self) -> int:
+        """Total generated tokens -- the J/token denominator."""
+        return int(self.decode_tokens.sum())
+
+
+def traffic_rate_curve(shape: str, t: np.ndarray,
+                       duration_s: float) -> np.ndarray:
+    """Mean-normalized rate modulation of a traffic shape.
+
+    Parameters
+    ----------
+    shape : str
+        One of `TRAFFIC_SHAPES`. "diurnal" is one full sinusoidal day
+        compressed onto the trace (trough at t=0, peak mid-trace);
+        "bursty" is a 0.6x baseline with 3.0x square-wave bursts active
+        one-sixth of the time; "flat" is constant.
+    t : np.ndarray
+        Times (seconds) to evaluate, within `[0, duration_s)`.
+    duration_s : float
+        Trace horizon; shapes are periodic over it.
+
+    Returns
+    -------
+    np.ndarray
+        Nonnegative multipliers with mean 1.0 over the horizon, so every
+        shape offers the same total load (arrival-rate conservation,
+        pinned by tests/test_serving.py).
+    """
+    if shape not in TRAFFIC_SHAPES:
+        raise ValueError(f"unknown traffic shape {shape!r}; "
+                         f"expected one of {TRAFFIC_SHAPES}")
+    t = np.asarray(t, dtype=float)
+    x = t / float(duration_s)
+    if shape == "flat":
+        return np.ones_like(x)
+    if shape == "diurnal":
+        return 1.0 - 0.8 * np.cos(2.0 * np.pi * x)
+    # bursty: mean = 0.6 + 2.4 * (1/6) = 1.0
+    return 0.6 + 2.4 * ((6.0 * x) % 1.0 < 1.0 / 6.0)
+
+
+def make_trace(shape: str, *, rate_rps: float = 8.0, duration_s: float = 16.0,
+               seed: int = 0, prompt_tokens: tuple[int, int] = (16, 96),
+               decode_tokens: tuple[int, int] = (8, 48),
+               bins: int = 256) -> ServingTrace:
+    """Draw a deterministic seeded request trace for one traffic shape.
+
+    Arrivals are an inhomogeneous Poisson process: the horizon is split
+    into `bins` equal bins, each bin draws `Poisson(rate * shape(t) * dt)`
+    requests placed uniformly inside it. Prompt and decode lengths are
+    uniform integers. Everything comes from one `np.random.default_rng`
+    seeded by `(seed, shape)`, so the same arguments always reproduce the
+    same trace (different shapes diverge even at equal seeds).
+
+    Parameters
+    ----------
+    shape : str
+        Traffic shape, one of `TRAFFIC_SHAPES`.
+    rate_rps : float
+        Mean offered request rate in requests/second (shapes are
+        mean-normalized, so this is the average across the horizon).
+    duration_s : float
+        Trace horizon in seconds; all arrivals land inside it.
+    seed : int
+        Trace seed.
+    prompt_tokens, decode_tokens : tuple[int, int]
+        Inclusive (low, high) ranges for per-request prompt length and
+        generated-token count; decode low must be >= 1 so every request
+        finishes during a decode wave.
+    bins : int
+        Bin count for the inhomogeneous-Poisson discretization.
+
+    Returns
+    -------
+    ServingTrace
+        Sorted arrivals with per-request token counts.
+    """
+    if shape not in TRAFFIC_SHAPES:
+        raise ValueError(f"unknown traffic shape {shape!r}; "
+                         f"expected one of {TRAFFIC_SHAPES}")
+    if decode_tokens[0] < 1:
+        raise ValueError("decode_tokens low bound must be >= 1")
+    rng = np.random.default_rng([seed, TRAFFIC_SHAPES.index(shape)])
+    dt = float(duration_s) / bins
+    centers = (np.arange(bins) + 0.5) * dt
+    lam = rate_rps * traffic_rate_curve(shape, centers, duration_s) * dt
+    counts = rng.poisson(lam)
+    n = int(counts.sum())
+    offsets = rng.random(n) * dt
+    arrival = np.repeat(centers - 0.5 * dt, counts) + offsets
+    order = np.argsort(arrival, kind="stable")
+    return ServingTrace(
+        shape=shape, seed=seed, rate_rps=float(rate_rps),
+        duration_s=float(duration_s), arrival_s=arrival[order],
+        prompt_tokens=rng.integers(prompt_tokens[0], prompt_tokens[1] + 1,
+                                   size=n)[order],
+        decode_tokens=rng.integers(decode_tokens[0], decode_tokens[1] + 1,
+                                   size=n)[order])
+
+
+def make_server_proc(base: str = "arc_opteron_6128",
+                     const_scale: float = 0.1) -> ProcessorModel:
+    """Server-class processor for serving clusters.
+
+    A `GEAR_TABLES[base]` ladder with the non-CPU nodal constant scaled
+    down (default 0.1x): an HPC node's 150 W constant would drown the
+    gear-sensitive energy on an idle-heavy serving trace, whereas a
+    serving node's idle-to-peak ratio is what DVFS strategies actually
+    get to exploit. Derive LITTLE siblings with `scale_processor`.
+    """
+    return scale_processor(make_processor(base), f"serve_{base}",
+                           const_scale=const_scale)
+
+
+def make_clock_proc(freq_ghz: float = CLOCK_FREQ_GHZ) -> ProcessorModel:
+    """Zero-power single-gear processor for the wall-clock rank.
+
+    One gear (no switches possible), zero dynamic capacitance, zero
+    leakage, zero constant power: whatever idle gear or plan a strategy
+    assigns to the clock rank costs nothing and -- because the serving
+    cost model pins `CLOCK` beta at 0.0 -- changes no duration.
+    """
+    return ProcessorModel(name="wall_clock",
+                          gears=(Gear(0, freq_ghz, 0.5),),
+                          n_cores=1, eff_cap_nf=0.0, idle_activity=0.0,
+                          i_sub_amps=0.0, p_const_watts=0.0,
+                          switch_latency_s=1e-9)
+
+
+def serving_machine(servers: "ProcessorModel | MachineModel",
+                    n_servers: int) -> MachineModel:
+    """Serving cluster: `n_servers` server ranks plus the clock rank.
+
+    Parameters
+    ----------
+    servers : ProcessorModel | MachineModel
+        The server side -- a bare processor for a homogeneous cluster or
+        a `MachineModel` pattern (e.g. `make_big_little`) unrolled over
+        the first `n_servers` ranks.
+    n_servers : int
+        Number of server ranks; rank `n_servers` becomes the zero-power
+        clock rank (`make_clock_proc`).
+
+    Returns
+    -------
+    MachineModel
+        Pattern of length `n_servers + 1`, exactly matching the rank
+        count of graphs from `build_serving_graph(..., n_servers=...)`.
+    """
+    m = as_machine(servers)
+    procs = tuple(m.rank_procs(n_servers)) + (make_clock_proc(),)
+    return MachineModel(name=f"serving_{m.name}", procs=procs)
+
+
+def serving_cost_model(profile: ServingModelProfile, *,
+                       flops_per_cycle: float = 4.0,
+                       comm_bandwidth_gbs: float = 5.0,
+                       comm_latency_s: float = 5e-6) -> CostModel:
+    """Cost model for serving graphs of one model family.
+
+    Parameters
+    ----------
+    profile : ServingModelProfile
+        Supplies the decode beta; prefill stretches ~linearly under
+        frequency scaling (beta 1.0), `CLOCK` is pinned at beta 0.0 so
+        the wave cadence is gear-invariant (required by
+        `build_serving_graph`).
+    flops_per_cycle, comm_bandwidth_gbs, comm_latency_s : float
+        Forwarded to `CostModel`; comm prices the clock-tick fan-out and
+        is negligible against realistic wave periods.
+
+    Returns
+    -------
+    CostModel
+        Ready for `build_serving_graph` / `PlanContext`.
+    """
+    return CostModel(flops_per_cycle=flops_per_cycle,
+                     freq_sensitivity={"PREFILL": 1.0,
+                                       "DECODE": profile.decode_beta,
+                                       "CLOCK": 0.0},
+                     comm_bandwidth_gbs=comm_bandwidth_gbs,
+                     comm_latency_s=comm_latency_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingGraph:
+    """A compiled serving trace: the `TaskGraph` plus request bookkeeping.
+
+    `done_tid[r]` is the tid of the `DECODE` task whose completion emits
+    request r's final token -- `request_latencies` subtracts arrivals
+    from those finish times, for serial `Schedule`s and batched
+    `FleetSchedule` lanes alike.
+    """
+
+    graph: TaskGraph            # CLOCK/PREFILL/DECODE wave DAG
+    trace: ServingTrace         # the compiled trace
+    n_servers: int              # server ranks (clock rank is n_servers)
+    step_period_s: float        # continuous-batching wave period
+    tokens_per_wave: int        # decode tokens per request per wave
+    n_waves: int                # emitted waves (admission + drain)
+    done_tid: np.ndarray        # per-request completion tid, shape (R,)
+    admit_wave: np.ndarray      # per-request admission wave, shape (R,)
+
+    @property
+    def horizon_s(self) -> float:
+        """Wall-clock span of the wave chain (`n_waves * period`).
+
+        Every schedule's makespan is at least this (the clock chain is
+        gear-invariant), so an SLO deadline for `slo_latency_s` is
+        naturally expressed as `horizon_s + <per-request headroom>`.
+        """
+        return self.n_waves * self.step_period_s
+
+
+def build_serving_graph(trace: ServingTrace, *, n_servers: int,
+                        step_period_s: float, cost: CostModel,
+                        profile: ServingModelProfile,
+                        tokens_per_wave: int = 8,
+                        clock_freq_ghz: float = CLOCK_FREQ_GHZ,
+                        tile_size: int = 64) -> ServingGraph:
+    """Compile a trace into a continuous-batching wave `TaskGraph`.
+
+    Wave w ticks at `w * step_period_s`: a `CLOCK` task on the dedicated
+    clock rank (chained to wave w-1, duration exactly one period --
+    calibrated through `cost` so `durations_top` reproduces it). Requests
+    arrived by the tick are admitted round-robin across server ranks;
+    each admission emits a `PREFILL` task, and every server with active
+    requests emits one fused `DECODE` task covering up to
+    `tokens_per_wave` tokens per active request. Server tasks depend on
+    their wave's clock task, so no work starts before its wave tick (plus
+    the cross-rank comm delay); an overloaded server simply falls behind
+    its ticks through program order, which is exactly how queueing delay
+    reaches the p99. Emission is wave-by-wave, clock first, so tids are
+    topologically sorted and in per-rank program order -- the layout
+    `simulate_fleet` requires.
+
+    Parameters
+    ----------
+    trace : ServingTrace
+        Seeded traffic trace from `make_trace`.
+    n_servers : int
+        Server ranks; the graph gets `n_servers + 1` ranks (clock last).
+        Pair with `serving_machine(..., n_servers)`.
+    step_period_s : float
+        Continuous-batching wave period in seconds.
+    cost : CostModel
+        Must pin `CLOCK` at beta 0.0 (`serving_cost_model` does), or no
+        strategy could be trusted not to stretch the wall clock.
+    profile : ServingModelProfile
+        Per-token flop costs for `PREFILL` / `DECODE` tasks.
+    tokens_per_wave : int
+        Decode tokens generated per request per wave.
+    clock_freq_ghz : float
+        Frequency the clock rank runs at; must match the
+        `make_clock_proc` used in the machine.
+    tile_size : int
+        `TaskGraph.tile_size` -- only sets the (small) per-edge transfer
+        size of the clock fan-out.
+
+    Returns
+    -------
+    ServingGraph
+        The graph plus per-request completion/admission bookkeeping.
+    """
+    if cost.beta("CLOCK") != 0.0:
+        raise ValueError("serving graphs need freq_sensitivity['CLOCK']=0.0 "
+                         "(gear-invariant wave cadence); use "
+                         "serving_cost_model()")
+    if np.any(trace.decode_tokens < 1):
+        raise ValueError("every request must decode at least one token")
+    period = float(step_period_s)
+    clock_rank = n_servers
+    # flops such that durations_top gives exactly one period on the clock
+    # rank: d = flops / (f * 1e9 * flops_per_cycle * eff)
+    clock_rate = (clock_freq_ghz * 1e9 * cost.flops_per_cycle
+                  * cost.kind_efficiency.get("CLOCK", 1.0))
+    n_req = trace.n_requests
+    done_tid = np.full(n_req, -1, dtype=np.int64)
+    admit_wave = np.zeros(n_req, dtype=np.int64)
+    tasks: list[Task] = []
+    active: list[list[list[int]]] = [[] for _ in range(n_servers)]
+    idx = admitted = 0
+    w = 0
+    prev_ctid = -1
+    last_arrival = float(trace.arrival_s[-1]) if n_req else 0.0
+    max_decode = int(trace.decode_tokens.max()) if n_req else 0
+    limit = (math.ceil(last_arrival / period)
+             + math.ceil(max_decode / tokens_per_wave) + 2)
+    while idx < n_req or any(active):
+        w += 1
+        if w > limit:                            # pragma: no cover
+            raise RuntimeError("serving wave compiler failed to drain")
+        tick = w * period
+        ctid = len(tasks)
+        tasks.append(Task(ctid, "CLOCK", w, 0, 0, clock_rank,
+                          period * clock_rate,
+                          [prev_ctid] if w > 1 else [], (w, clock_rank)))
+        prev_ctid = ctid
+        new_by_server: list[list[int]] = [[] for _ in range(n_servers)]
+        while idx < n_req and trace.arrival_s[idx] <= tick + 1e-12:
+            new_by_server[admitted % n_servers].append(idx)
+            admit_wave[idx] = w
+            admitted += 1
+            idx += 1
+        for s in range(n_servers):
+            pre_tids = []
+            for r in new_by_server[s]:
+                ptid = len(tasks)
+                tasks.append(Task(
+                    ptid, "PREFILL", w, s, r, s,
+                    float(trace.prompt_tokens[r])
+                    * profile.prefill_flops_per_token,
+                    [ctid], (w, s)))
+                pre_tids.append(ptid)
+                active[s].append([r, int(trace.decode_tokens[r])])
+            if not active[s]:
+                continue
+            tok = sum(min(tokens_per_wave, rem) for _, rem in active[s])
+            dtid = len(tasks)
+            tasks.append(Task(dtid, "DECODE", w, s, 0, s,
+                              float(tok) * profile.decode_flops_per_token,
+                              [ctid] + pre_tids, (w, s)))
+            still = []
+            for rec in active[s]:
+                rec[1] -= min(tokens_per_wave, rec[1])
+                if rec[1] == 0:
+                    done_tid[rec[0]] = dtid
+                else:
+                    still.append(rec)
+            active[s] = still
+    graph = TaskGraph(name=f"serving_{trace.shape}",
+                      n_tiles=n_servers + 1, tile_size=tile_size,
+                      grid=(1, n_servers + 1), tasks=tasks)
+    return ServingGraph(graph=graph, trace=trace, n_servers=n_servers,
+                        step_period_s=period, tokens_per_wave=tokens_per_wave,
+                        n_waves=w, done_tid=done_tid, admit_wave=admit_wave)
+
+
+def request_latencies(sg: ServingGraph, finish: np.ndarray) -> np.ndarray:
+    """Per-request latency (completion minus arrival) from finish times.
+
+    Parameters
+    ----------
+    sg : ServingGraph
+        Compiled trace (supplies `done_tid` and arrivals).
+    finish : np.ndarray
+        Per-task finish times: a serial `Schedule.finish` of shape
+        `(n_tasks,)` or a `FleetSchedule.finish` of shape
+        `(B, n_tasks)` -- any leading batch dimensions broadcast.
+
+    Returns
+    -------
+    np.ndarray
+        Latencies in seconds, shape `finish.shape[:-1] + (R,)`.
+    """
+    finish = np.asarray(finish, dtype=float)
+    return finish[..., sg.done_tid] - sg.trace.arrival_s
+
+
+def p99_latency_s(latencies: np.ndarray, q: float = 99.0) -> np.ndarray:
+    """Tail latency percentile along the last (request) axis.
+
+    Parameters
+    ----------
+    latencies : np.ndarray
+        Output of `request_latencies` (any leading batch dims).
+    q : float
+        Percentile in [0, 100] (default 99).
+
+    Returns
+    -------
+    np.ndarray
+        The q-th percentile per leading index (0.0 for empty traces).
+    """
+    latencies = np.asarray(latencies, dtype=float)
+    if latencies.shape[-1] == 0:
+        return np.zeros(latencies.shape[:-1])
+    return np.percentile(latencies, q, axis=-1)
+
+
+def slo_violation_rate(latencies: np.ndarray, slo_s: float) -> np.ndarray:
+    """Fraction of requests whose latency exceeds the SLO.
+
+    Parameters
+    ----------
+    latencies : np.ndarray
+        Output of `request_latencies` (any leading batch dims).
+    slo_s : float
+        Per-request latency SLO in seconds.
+
+    Returns
+    -------
+    np.ndarray
+        Violation fraction in [0, 1] per leading index (0.0 for empty
+        traces).
+    """
+    latencies = np.asarray(latencies, dtype=float)
+    if latencies.shape[-1] == 0:
+        return np.zeros(latencies.shape[:-1])
+    return np.mean(latencies > slo_s, axis=-1)

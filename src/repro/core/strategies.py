@@ -156,6 +156,15 @@ class StrategyConfig:
     plan_search_rounds: int = 4
     plan_search_lanes: int = 192
     plan_search_seed: int = 0
+    # serving SLO (core/serving.py): absolute makespan deadline in
+    # seconds. For a serving trace this is the latency cap -- the trace
+    # horizon plus the per-request SLO -- and it tightens the relative
+    # slowdown caps above through `PlanContext.makespan_cap`: strategies
+    # that honor a makespan bound (`single_freq_opt`, `plan_search`) cap
+    # at min(relative cap, SLO), never below the baseline makespan (the
+    # top-gear schedule stays feasible). None (default) leaves every
+    # existing cap bit-identical.
+    slo_latency_s: float | None = None
 
     def __setattr__(self, name, value):
         # knob-name validation: a misspelled knob set after construction
@@ -358,6 +367,33 @@ class PlanContext:
         return analyze_tds(self.graph, base.start, base.finish,
                            self.cost.comm_time(self.graph),
                            slack=self.slack)
+
+    def makespan_cap(self, slowdown_frac: float) -> float:
+        """Makespan bound for cap-honoring planners, SLO-aware.
+
+        Parameters
+        ----------
+        slowdown_frac : float
+            Allowed relative slowdown over the baseline makespan (e.g.
+            `cfg.single_freq_slowdown_cap`).
+
+        Returns
+        -------
+        float
+            `baseline.makespan * (1 + slowdown_frac)`, tightened to
+            `cfg.slo_latency_s` (the serving latency deadline) when that
+            knob is set -- but never below the baseline makespan itself,
+            so the top-gear plan is always feasible and an over-tight SLO
+            degrades gracefully to "no slowdown allowed" instead of an
+            infeasible sweep. With `slo_latency_s=None` the returned cap
+            is bit-identical to the pre-SLO expression.
+        """
+        base = self.baseline.makespan
+        cap = base * (1.0 + slowdown_frac)
+        slo = self.cfg.slo_latency_s
+        if slo is not None:
+            cap = min(cap, max(float(slo), base))
+        return cap
 
     # -- plan-construction helpers (vectorized) ---------------------------
     def top_gear_segments(self) -> list[list]:
@@ -782,7 +818,7 @@ class SingleFreqOptStrategy:
 
     def plan(self, ctx: PlanContext) -> StrategyPlan:
         """Sweep uniform gears, keep the cheapest feasible."""
-        cap = ctx.baseline.makespan * (1.0 + ctx.cfg.single_freq_slowdown_cap)
+        cap = ctx.makespan_cap(ctx.cfg.single_freq_slowdown_cap)
         if ctx.is_homogeneous:
             proc = ctx._uproc
             freqs = np.asarray([g.freq_ghz for g in proc.gears])

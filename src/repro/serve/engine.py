@@ -34,7 +34,14 @@ def generate(api: ModelApi, params, batch: dict, n_new: int,
     """batch: {"tokens": [B, S], (+ audio/vision embeds)}."""
     tokens = batch["tokens"]
     b, s = tokens.shape
-    max_len = max_len or (s + n_new)
+    if max_len is None:
+        max_len = s + n_new
+    elif s + n_new > max_len:
+        # an undersized cache would silently wrap/overwrite positions
+        # >= max_len (ring KV) or drop them (linear KV) mid-generation
+        raise ValueError(
+            f"prompt ({s}) + n_new ({n_new}) tokens exceed max_len="
+            f"{max_len}; pass max_len >= {s + n_new} or omit it")
     cache = api.init_cache(b, max_len, "init")
     logits, cache = api.prefill(params, batch, cache)
     key = jax.random.key(seed)

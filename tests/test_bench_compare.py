@@ -129,6 +129,53 @@ def test_search_ratio_gated_by_hard_floor_only(tmp_path):
     assert _run(tmp_path, old, bad, ("--search-floor", "20")) == 0
 
 
+def test_serving_j_per_token_rise_fails(tmp_path, capsys):
+    """serving *.j_per_token is lower-is-better: a >20% RISE fails, a
+    drop (or a small rise) passes."""
+    old = {"serving": {"diurnal.tx.j_per_token": 0.30}}
+    better = {"serving": {"diurnal.tx.j_per_token": 0.25}}
+    small = {"serving": {"diurnal.tx.j_per_token": 0.33}}
+    bad = {"serving": {"diurnal.tx.j_per_token": 0.40}}
+    assert _run(tmp_path, old, better) == 0
+    assert _run(tmp_path, old, small) == 0
+    assert _run(tmp_path, old, bad) == 1
+    assert "J/token" in capsys.readouterr().out
+    # the floor is tunable for ad-hoc comparisons
+    assert _run(tmp_path, old, bad, ("--serving-floor", "0.5")) == 0
+
+
+def test_serving_j_per_token_drop_never_fails(tmp_path):
+    """A big J/token DROP is an improvement, not a >20%-drop regression
+    (the generic saved-style rule must not apply to lower-is-better)."""
+    old = {"serving": {"flat.tx.j_per_token": 0.40}}
+    new = {"serving": {"flat.tx.j_per_token": 0.10}}
+    assert _run(tmp_path, old, new) == 0
+
+
+def test_serving_slo_flip_fails(tmp_path, capsys):
+    """slo_ok flipping True -> False (p99 newly violating the SLO) fails;
+    False -> True and new-only keys never gate."""
+    old = {"serving": {"diurnal.tx.slo_ok": True,
+                       "flat.tx.slo_ok": False}}
+    flip = {"serving": {"diurnal.tx.slo_ok": False,
+                        "flat.tx.slo_ok": False}}
+    heal = {"serving": {"diurnal.tx.slo_ok": True,
+                        "flat.tx.slo_ok": True,
+                        "bursty.tx.slo_ok": False}}
+    assert _run(tmp_path, old, flip) == 1
+    assert "violates the SLO" in capsys.readouterr().out
+    assert _run(tmp_path, old, heal) == 0
+
+
+def test_serving_new_only_metrics_are_additions(tmp_path, capsys):
+    """The whole serving section landing for the first time must be
+    non-gating (the PR 8 first-landing path)."""
+    new = {**BASE, "serving": {"diurnal.tx.j_per_token": 0.31,
+                               "diurnal.tx.slo_ok": True}}
+    assert _run(tmp_path, BASE, new) == 0
+    assert "serving.diurnal.tx.j_per_token" in capsys.readouterr().out
+
+
 def test_search_disagreement_fails(tmp_path):
     """A batched candidate diverging from the fast engine is a
     correctness failure, not a perf regression."""

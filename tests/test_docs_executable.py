@@ -91,6 +91,6 @@ def test_architecture_names_real_modules():
     arch = ARCH.read_text()
     for mod in ("dag.py", "critical_path.py", "tds.py", "strategies.py",
                 "dvfs.py", "scheduler.py", "fleet.py", "energy_model.py",
-                "replan.py", "optimize.py"):
+                "replan.py", "optimize.py", "serving.py"):
         assert mod in arch, f"ARCHITECTURE layer map lost {mod}"
         assert (ROOT / "src" / "repro" / "core" / mod).is_file(), mod

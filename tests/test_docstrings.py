@@ -24,10 +24,10 @@ import pytest
 import repro.core as core
 from repro.core import (critical_path, dag, dvfs, energy_aware_step,
                         energy_model, fleet, optimize, replan, scheduler,
-                        strategies, tds)
+                        serving, strategies, tds)
 
 MODULES = (core, critical_path, dag, dvfs, energy_aware_step, energy_model,
-           fleet, optimize, replan, scheduler, strategies, tds)
+           fleet, optimize, replan, scheduler, serving, strategies, tds)
 
 # Entry points that must carry full NumPy-style docstrings
 # (module attribute path -> callable). Keep in sync with README.md's API
@@ -62,6 +62,14 @@ NUMPY_STYLE_APIS = {
     "optimize.search_plan": optimize.search_plan,
     "optimize.CandidateEvaluator.evaluate":
         optimize.CandidateEvaluator.evaluate,
+    "serving.traffic_rate_curve": serving.traffic_rate_curve,
+    "serving.make_trace": serving.make_trace,
+    "serving.serving_machine": serving.serving_machine,
+    "serving.serving_cost_model": serving.serving_cost_model,
+    "serving.build_serving_graph": serving.build_serving_graph,
+    "serving.request_latencies": serving.request_latencies,
+    "serving.p99_latency_s": serving.p99_latency_s,
+    "serving.slo_violation_rate": serving.slo_violation_rate,
 }
 
 

@@ -66,3 +66,19 @@ def test_whisper_decode_matches_teacher_forcing():
         np.testing.assert_allclose(
             np.asarray(logits_d), np.asarray(full[:, pos]),
             rtol=2e-2, atol=2e-3)
+
+
+def test_generate_rejects_undersized_cache():
+    """`generate` with max_len < prompt + n_new must raise up front instead
+    of silently wrapping (ring KV) or dropping (linear KV) late positions."""
+    from repro.serve.engine import generate
+    cfg = make_smoke(get_config("qwen2.5-3b"))
+    api = get_model(cfg)
+    params = api.param_tree("init", jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (1, 8), 0,
+                                cfg.vocab_size)
+    with pytest.raises(ValueError, match="exceed max_len"):
+        generate(api, params, {"tokens": tokens}, n_new=8, max_len=10)
+    # boundary: an exactly-sized cache is fine
+    out = generate(api, params, {"tokens": tokens}, n_new=2, max_len=10)
+    assert out.tokens.shape == (1, 2)

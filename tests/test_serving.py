@@ -1,0 +1,311 @@
+"""Serving-layer correctness: trace generation, the wave compiler, the
+hand-computed SLO arithmetic, and the three-engine differential on
+serving-class TaskGraphs.
+
+The load-bearing pins:
+
+  * seeded determinism   -- (shape, seed) fully determines a trace;
+  * rate conservation    -- every traffic shape is mean-normalized, so
+                            equal `rate_rps` means equal offered load;
+  * SLO exactness        -- a 3-request trace on one unit-rate server is
+                            worked out by hand (every prefill/decode
+                            start and finish) and the simulator must
+                            reproduce the latencies to float precision;
+  * engine differential  -- every registered strategy's plan on a
+                            serving graph must agree bit-identically
+                            across simulate / simulate_reference /
+                            simulate_fleet (the clock-rank construction
+                            must not break the three-engine contract);
+  * SLO cap plumbing     -- `slo_latency_s` tightens (never loosens) the
+                            makespan cap used by single_freq_opt and
+                            plan_search, and is a no-op when unset.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, Gear, MachineModel, PlanContext,
+                        ProcessorModel, StrategyConfig, build_serving_graph,
+                        get_strategy, make_server_proc, make_trace,
+                        p99_latency_s, registered_strategies,
+                        request_latencies, scale_processor, serving_cost_model,
+                        serving_machine, simulate, simulate_fleet,
+                        simulate_reference, slo_violation_rate,
+                        traffic_rate_curve)
+from repro.core.serving import MODEL_PROFILES, TRAFFIC_SHAPES, ServingTrace
+
+ALL_STRATEGIES = registered_strategies()
+
+
+# ------------------------------------------------------- traffic generation
+def test_trace_seeded_determinism():
+    for shape in TRAFFIC_SHAPES:
+        a = make_trace(shape, rate_rps=12.0, duration_s=10.0, seed=7)
+        b = make_trace(shape, rate_rps=12.0, duration_s=10.0, seed=7)
+        np.testing.assert_array_equal(a.arrival_s, b.arrival_s)
+        np.testing.assert_array_equal(a.prompt_tokens, b.prompt_tokens)
+        np.testing.assert_array_equal(a.decode_tokens, b.decode_tokens)
+    # different seeds diverge, and shapes diverge even at equal seeds
+    a = make_trace("diurnal", rate_rps=12.0, duration_s=10.0, seed=7)
+    c = make_trace("diurnal", rate_rps=12.0, duration_s=10.0, seed=8)
+    d = make_trace("flat", rate_rps=12.0, duration_s=10.0, seed=7)
+    assert not (a.n_requests == c.n_requests
+                and np.array_equal(a.arrival_s, c.arrival_s))
+    assert not (a.n_requests == d.n_requests
+                and np.array_equal(a.arrival_s, d.arrival_s))
+
+
+def test_trace_basic_invariants():
+    for shape in TRAFFIC_SHAPES:
+        tr = make_trace(shape, rate_rps=9.0, duration_s=12.0, seed=3)
+        assert np.all(np.diff(tr.arrival_s) >= 0)           # sorted
+        assert np.all(tr.arrival_s >= 0)
+        assert np.all(tr.arrival_s < tr.duration_s)
+        assert np.all(tr.decode_tokens >= 1)
+        assert tr.total_decode_tokens == int(tr.decode_tokens.sum())
+    with pytest.raises(ValueError, match="decode_tokens"):
+        make_trace("flat", decode_tokens=(0, 4))
+    with pytest.raises(ValueError, match="unknown traffic shape"):
+        make_trace("square")
+
+
+def test_rate_curves_are_mean_normalized():
+    """Every shape's modulation averages to 1.0 over the horizon, so equal
+    rate_rps means equal offered load regardless of shape."""
+    duration = 30.0
+    # midpoint grid; 3600 divides the bursty square wave's burst windows
+    # exactly, so every shape's midpoint mean is analytically 1.0
+    t = (np.arange(3600) + 0.5) / 3600 * duration
+    for shape in TRAFFIC_SHAPES:
+        curve = traffic_rate_curve(shape, t, duration)
+        assert np.all(curve >= 0)
+        assert abs(float(curve.mean()) - 1.0) < 1e-9, shape
+    with pytest.raises(ValueError, match="unknown traffic shape"):
+        traffic_rate_curve("square", t, duration)
+
+
+def test_arrival_rate_conservation_across_shapes():
+    """rate_rps * duration_s requests on average, for every shape (the
+    law-of-large-numbers check behind cross-shape J/token comparisons)."""
+    rate, duration = 20.0, 50.0
+    for shape in TRAFFIC_SHAPES:
+        counts = [make_trace(shape, rate_rps=rate, duration_s=duration,
+                             seed=s).n_requests for s in range(4)]
+        mean = float(np.mean(counts))
+        assert abs(mean - rate * duration) < 0.10 * rate * duration, \
+            (shape, mean)
+
+
+# --------------------------------------------------- hand-computed SLO case
+def _unit_cell():
+    """One unit-rate server (1 Gflop/s at every kind), period 0.5 s,
+    4 decode tokens per wave; comm is exactly free."""
+    cost = CostModel(
+        flops_per_cycle=1.0,
+        kind_efficiency={"PREFILL": 1.0, "DECODE": 1.0, "CLOCK": 1.0},
+        freq_sensitivity={"PREFILL": 1.0, "DECODE": 0.25, "CLOCK": 0.0},
+        comm_bandwidth_gbs=math.inf, comm_latency_s=0.0)
+    server = ProcessorModel(name="unit", gears=(Gear(0, 1.0, 1.0),),
+                            n_cores=1, p_const_watts=0.0)
+    profile = MODEL_PROFILES["dense"].__class__(
+        name="unit", arch="dense",
+        prefill_flops_per_token=1e8, decode_flops_per_token=5e7,
+        decode_beta=0.25)
+    trace = ServingTrace(
+        shape="flat", seed=0, rate_rps=1.0, duration_s=2.0,
+        arrival_s=np.array([0.2, 0.3, 1.4]),
+        prompt_tokens=np.array([1, 2, 1]),
+        decode_tokens=np.array([4, 8, 4]))
+    sg = build_serving_graph(trace, n_servers=1, step_period_s=0.5,
+                             cost=cost, profile=profile, tokens_per_wave=4)
+    machine = serving_machine(server, 1)
+    return sg, machine, cost
+
+
+def test_slo_exactness_hand_computed():
+    """3 requests, 1 server at 1 Gflop/s, period 0.5, 4 tok/wave.
+
+    Wave 1 (tick 0.5) admits r0 (1 prompt tok -> 0.1 s) and r1 (2 -> 0.2 s):
+    prefills run 0.5-0.6 and 0.6-0.8; the fused decode covers
+    min(4,4) + min(4,8) = 8 tokens -> 0.4 s, runs 0.8-1.2 and finishes r0.
+    Wave 2 (tick 1.0, server busy until 1.2) decodes r1's last 4 tokens
+    1.2-1.4. Wave 3 (tick 1.5) admits r2: prefill 1.5-1.6, decode 1.6-1.8.
+    Latencies: [1.2-0.2, 1.4-0.3, 1.8-1.4] = [1.0, 1.1, 0.4].
+    """
+    sg, machine, cost = _unit_cell()
+    assert sg.n_waves == 3
+    assert abs(sg.horizon_s - 1.5) < 1e-12
+    ctx = PlanContext(sg.graph, machine, cost, StrategyConfig())
+    sched = simulate(sg.graph, machine, cost,
+                     get_strategy("original").plan(ctx))
+    assert abs(sched.makespan - 1.8) < 1e-12
+    lat = request_latencies(sg, sched.finish)
+    np.testing.assert_allclose(lat, [1.0, 1.1, 0.4], rtol=1e-12)
+    # metric helpers, against numpy ground truth / hand counts
+    assert float(p99_latency_s(lat)) == np.percentile(lat, 99.0)
+    np.testing.assert_allclose(float(p99_latency_s(lat)),
+                               np.percentile([1.0, 1.1, 0.4], 99.0),
+                               rtol=1e-12)
+    assert float(slo_violation_rate(lat, 1.05)) == pytest.approx(1.0 / 3.0)
+    assert float(slo_violation_rate(lat, 2.0)) == 0.0
+    assert float(slo_violation_rate(lat, 0.3)) == 1.0
+    # batched finish times broadcast: a (B, T) fleet gives (B, R) latencies
+    fleet = simulate_fleet(sg.graph, machine, cost,
+                           [get_strategy("original").plan(ctx)] * 2,
+                           cores_per_node=1)
+    lat2 = request_latencies(sg, fleet.finish)
+    assert lat2.shape == (2, 3)
+    np.testing.assert_array_equal(lat2[0], lat)
+
+
+def test_empty_metrics_do_not_crash():
+    empty = np.zeros((0,))
+    assert float(p99_latency_s(empty)) == 0.0
+    assert float(slo_violation_rate(empty, 1.0)) == 0.0
+
+
+# ----------------------------------------------------------- wave compiler
+def _small_cell(n_servers=2, shape="bursty", family="dense", servers=None):
+    profile = MODEL_PROFILES[family]
+    cost = serving_cost_model(profile)
+    trace = make_trace(shape, rate_rps=6.0, duration_s=6.0, seed=3)
+    sg = build_serving_graph(trace, n_servers=n_servers, step_period_s=0.25,
+                             cost=cost, profile=profile)
+    machine = serving_machine(servers or make_server_proc(), n_servers)
+    return sg, machine, cost
+
+
+def test_serving_graph_invariants():
+    sg, machine, cost = _small_cell()
+    tasks = sg.graph.tasks
+    # topological tid order and per-rank program order (the simulate_fleet
+    # layout contract), wave recorded in t.k
+    per_rank_last = {}
+    for t in tasks:
+        assert all(d < t.tid for d in t.deps), t
+        assert per_rank_last.get(t.owner, -1) < t.tid
+        per_rank_last[t.owner] = t.tid
+    clock = [t for t in tasks if t.kind == "CLOCK"]
+    assert [t.k for t in clock] == list(range(1, sg.n_waves + 1))
+    assert all(t.owner == sg.n_servers for t in clock)
+    assert all(tasks[i].kind == "DECODE" for i in sg.done_tid)
+    assert np.all(sg.done_tid >= 0)
+    # every admitted request's arrival precedes its admission tick
+    np.testing.assert_array_less(sg.trace.arrival_s,
+                                 sg.admit_wave * sg.step_period_s + 1e-9)
+
+    ctx = PlanContext(sg.graph, machine, cost, StrategyConfig())
+    for name in ("original", "race_to_halt", "tx"):
+        sched = simulate(sg.graph, machine, cost,
+                         get_strategy(name).plan(ctx))
+        # CLOCK durations are gear-invariant (beta 0): exactly one period
+        # under every plan, however the gears are set
+        for t in clock:
+            assert sched.finish[t.tid] - sched.start[t.tid] \
+                == pytest.approx(sg.step_period_s, rel=1e-12), (name, t.k)
+            # ...and the chain never runs ahead of the wall clock (plans
+            # with per-task overheads, e.g. race_to_halt's monitoring tax,
+            # may tick late -- never early)
+            assert sched.finish[t.tid] >= t.k * sg.step_period_s - 1e-12
+        # no server task starts before its wave tick
+        for t in tasks:
+            if t.kind != "CLOCK":
+                tick = sched.finish[clock[t.k - 1].tid]
+                assert sched.start[t.tid] >= tick - 1e-9, (name, t.tid)
+    # overhead-free plans tick at exactly w * period
+    sched = simulate(sg.graph, machine, cost,
+                     get_strategy("original").plan(ctx))
+    for t in clock:
+        assert sched.finish[t.tid] == pytest.approx(
+            t.k * sg.step_period_s, rel=1e-12), t.k
+
+
+def test_build_rejects_nonzero_clock_beta():
+    profile = MODEL_PROFILES["dense"]
+    bad = serving_cost_model(profile)
+    bad.freq_sensitivity["CLOCK"] = 1.0
+    with pytest.raises(ValueError, match="CLOCK"):
+        build_serving_graph(make_trace("flat", duration_s=2.0), n_servers=2,
+                            step_period_s=0.25, cost=bad, profile=profile)
+
+
+# ------------------------------------------------- three-engine differential
+def _bl_servers():
+    big = make_server_proc()
+    little = scale_processor(big, big.name + "_little", freq_scale=0.6,
+                             volt_scale=0.85, cap_scale=0.45, leak_scale=0.6)
+    return MachineModel(name="serve_bl_pattern", procs=(big, little))
+
+
+@pytest.mark.parametrize("machine_kind", ["homog", "big_little"])
+def test_three_engine_differential_on_serving_graphs(machine_kind):
+    """Every registered strategy, both engines vs the oracle, plus one
+    batched fleet pass -- on a serving graph with its clock rank. Any
+    engine-visible semantic the serving layer relies on (beta-0 kinds,
+    zero-power single-gear ranks, per-rank program order from the wave
+    compiler) must hold identically in all three engines."""
+    servers = None if machine_kind == "homog" else _bl_servers()
+    sg, machine, cost = _small_cell(servers=servers)
+    cfg = StrategyConfig(plan_search_rounds=1, plan_search_lanes=16,
+                         replan_every=8,
+                         slo_latency_s=sg.horizon_s + 2.0)
+    ctx = PlanContext(sg.graph, machine, cost, cfg)
+    plans = [get_strategy(n).plan(ctx) for n in ALL_STRATEGIES]
+    refs = []
+    for name, plan in zip(ALL_STRATEGIES, plans):
+        ref = simulate_reference(sg.graph, machine, cost, plan)
+        fast = simulate(sg.graph, machine, cost, plan)
+        np.testing.assert_array_equal(fast.start, ref.start, err_msg=name)
+        np.testing.assert_array_equal(fast.finish, ref.finish, err_msg=name)
+        assert fast.switch_count == ref.switch_count, name
+        assert fast.total_energy_j() == pytest.approx(
+            ref.total_energy_j(), rel=1e-9), name
+        refs.append(ref)
+    fleet = simulate_fleet(sg.graph, machine, cost, plans, cores_per_node=1)
+    for i, (name, ref) in enumerate(zip(ALL_STRATEGIES, refs)):
+        np.testing.assert_array_equal(fleet.start[i], ref.start,
+                                      err_msg=name)
+        np.testing.assert_array_equal(fleet.finish[i], ref.finish,
+                                      err_msg=name)
+        assert int(fleet.switch_count[i]) == ref.switch_count, name
+        # energy at the serving node granularity (one rank per node)
+        ref1 = dataclasses.replace(ref, cores_per_node=1)
+        assert float(fleet.total_energy_j()[i]) == pytest.approx(
+            ref1.total_energy_j(), rel=1e-9), name
+
+
+# ------------------------------------------------------- SLO cap plumbing
+def test_makespan_cap_slo_semantics():
+    sg, machine, cost = _small_cell()
+    base_ctx = PlanContext(sg.graph, machine, cost, StrategyConfig())
+    base = base_ctx.baseline.makespan
+    # unset SLO: bit-identical to the pre-SLO expression
+    assert base_ctx.makespan_cap(0.25) == base * 1.25
+    # a loose SLO changes nothing; a tight one tightens
+    loose = PlanContext(sg.graph, machine, cost,
+                        StrategyConfig(slo_latency_s=base * 10))
+    assert loose.makespan_cap(0.25) == base * 1.25
+    tight = PlanContext(sg.graph, machine, cost,
+                        StrategyConfig(slo_latency_s=base * 1.1))
+    assert tight.makespan_cap(0.25) == pytest.approx(base * 1.1, rel=1e-12)
+    # an over-tight SLO clamps at the baseline (top gear stays feasible)
+    impossible = PlanContext(sg.graph, machine, cost,
+                             StrategyConfig(slo_latency_s=base * 0.5))
+    assert impossible.makespan_cap(0.25) == base
+
+
+@pytest.mark.parametrize("name", ["single_freq_opt", "plan_search"])
+def test_cap_honoring_planners_respect_slo(name):
+    """With slo_latency_s == baseline makespan, the cap-honoring planners
+    may not stretch the schedule at all."""
+    sg, machine, cost = _small_cell()
+    base = PlanContext(sg.graph, machine, cost,
+                       StrategyConfig()).baseline.makespan
+    cfg = StrategyConfig(plan_search_rounds=1, plan_search_lanes=16,
+                         slo_latency_s=base)
+    ctx = PlanContext(sg.graph, machine, cost, cfg)
+    sched = simulate(sg.graph, machine, cost, get_strategy(name).plan(ctx))
+    assert sched.makespan <= base * (1 + 1e-9), name
