@@ -8,9 +8,14 @@ zero-power clock rank rides free). Cells:
 
   * three traffic shapes (diurnal / bursty / flat, mean-normalized to the
     same offered load) x {homogeneous, big.LITTLE} server clusters on the
-    dense profile, and
+    dense profile,
   * the MoE + SSM model families on the diurnal/homogeneous cell
-    (`core.serving.MODEL_PROFILES`: family flop ratios + decode betas).
+    (`core.serving.MODEL_PROFILES`: roofline-derived flop ratios + phase
+    betas, anchored per family -- see docs/ROOFLINE.md), and
+  * one `zoo_<arch>` cell per committed roofline architecture
+    (diurnal/homogeneous, `core.serving.profile_for_arch`): every model
+    in `results/roofline.json` becomes a CI-exercised serving scenario
+    with its own measured prefill/decode betas.
 
 Metrics per cell x strategy: `<cell>.<strategy>.j_per_token` (energy per
 generated token -- LOWER is better; gated by
@@ -33,7 +38,8 @@ import numpy as np
 
 from repro.core import (MODEL_PROFILES, MachineModel, PlanContext,
                         StrategyConfig, build_serving_graph, get_strategy,
-                        make_server_proc, make_trace, p99_latency_s,
+                        load_roofline, make_server_proc, make_trace,
+                        p99_latency_s, profile_for_arch,
                         registered_strategies, request_latencies,
                         scale_processor, serving_cost_model, serving_machine,
                         simulate_fleet, slo_violation_rate)
@@ -59,8 +65,15 @@ def machines() -> dict[str, MachineModel]:
 
 def _cell(shape: str, family: str, machine: MachineModel,
           names: tuple[str, ...]) -> list[dict]:
-    """Score every registered strategy on one traffic cell."""
-    profile = MODEL_PROFILES[family]
+    """Score every registered strategy on one traffic cell.
+
+    `family` is either a `MODEL_PROFILES` key or a `repro.configs` arch
+    name (zoo cells), resolved through `profile_for_arch`.
+    """
+    if family in MODEL_PROFILES:
+        profile = MODEL_PROFILES[family]
+    else:
+        profile = profile_for_arch(family)
     cost = serving_cost_model(profile)
     trace = make_trace(shape, rate_rps=RATE_RPS, duration_s=DURATION_S,
                        seed=SEED)
@@ -104,7 +117,18 @@ def run() -> dict[str, list[dict]]:
         cells[f"bl_{shape}"] = _cell(shape, "dense", clusters["bl"], names)
     for family in EXTRA_FAMILIES:
         cells[family] = _cell("diurnal", family, clusters["homog"], names)
+    for arch in zoo_archs():
+        cells[f"zoo_{arch}"] = _cell("diurnal", arch, clusters["homog"],
+                                     names)
     return cells
+
+
+def zoo_archs() -> tuple[str, ...]:
+    """Architectures in the committed roofline artifact (empty if absent)."""
+    try:
+        return load_roofline().archs()
+    except (OSError, ValueError):
+        return ()
 
 
 def bench() -> tuple[list[str], dict]:

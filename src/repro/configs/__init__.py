@@ -1,5 +1,5 @@
-"""Architecture registry: the 10 assigned configs + the paper's own
-factorization workload configs, plus reduced smoke variants and the
+"""Architecture registry: the 11 model-zoo configs + the paper's own
+factorization workload configs, plus reduced smoke/zoo variants and the
 (arch x input-shape) cell table used by the dry-run."""
 
 from __future__ import annotations
@@ -20,6 +20,7 @@ ARCHS: dict[str, str] = {
     "recurrentgemma-2b": "recurrentgemma_2b",
     "mamba2-370m": "mamba2_370m",
     "internvl2-76b": "internvl2_76b",
+    "zamba2-2b": "zamba2_2b",
 }
 
 
@@ -78,6 +79,43 @@ def all_cells() -> list[tuple[str, str]]:
             if ok:
                 cells.append((arch, shape))
     return cells
+
+
+# --------------------------------------------------------------- zoo cfgs
+def make_zoo(cfg: ModelConfig) -> ModelConfig:
+    """Roofline-representative reduced config: real widths, reduced depth.
+
+    Keeps `d_model`, `d_ff`, head/expert/state dimensions (and therefore
+    per-layer arithmetic intensity) at production values, but cuts depth
+    to one layer-pattern period and shrinks the vocabulary and
+    encoder/frontend stubs so the cell lowers + compiles in ~a second on
+    CPU. Because the layer pattern repeats, per-layer roofline terms --
+    and the compute/memory/collective *ratios* that derive the per-kind
+    frequency-sensitivity betas (docs/ROOFLINE.md) -- are representative
+    of the full-depth model, unlike `make_smoke` whose tiny widths make
+    every phase look memory-bound.
+
+    Parameters
+    ----------
+    cfg : ModelConfig
+        A production config from `ARCHS`.
+
+    Returns
+    -------
+    ModelConfig
+        The reduced same-family config (name suffixed ``-zoo``).
+    """
+    period = cfg.pattern_period
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-zoo",
+        n_layers=period + (1 if cfg.n_tail_layers else 0),
+        vocab_size=min(cfg.vocab_size, 4096),
+        window=min(cfg.window, 512) if cfg.window else None,
+        encoder_layers=min(cfg.encoder_layers, 1) if cfg.encoder_layers
+        else 0,
+        frontend_len=min(cfg.frontend_len, 256) if cfg.frontend_len else 0,
+    )
 
 
 # --------------------------------------------------------------- smoke cfgs

@@ -1,0 +1,13 @@
+"""zamba2-2b [hybrid]: 54L d_model=2048 attention-sparse, vocab=32000;
+Mamba2 (SSD) backbone with one shared global-attention layer per 6-layer
+block, GQA kv=4.  [arXiv:2411.15242; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2b", family="hybrid",
+    n_layers=54, d_model=2048, n_heads=16, n_kv_heads=4,
+    d_ff=8192, vocab_size=32000,
+    layer_pattern=("ssd", "ssd", "ssd", "ssd", "ssd", "global"),
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+    tie_embeddings=True,
+)

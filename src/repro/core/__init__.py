@@ -29,6 +29,12 @@ Public API:
     serving_machine, serving_cost_model     -- serving cluster + cost model
     request_latencies, p99_latency_s,
     slo_violation_rate                      -- per-request SLO accounting
+    load_roofline, RooflineTable            -- committed measured-roofline
+                                               artifact (results/roofline.json)
+    beta_from_terms, roofline_cost_model    -- measured per-kind frequency
+                                               sensitivity (docs/ROOFLINE.md)
+    profiles_from_roofline, profile_for_arch -- roofline-derived serving
+                                               profiles
 
 See README.md for the user-facing tour and docs/ARCHITECTURE.md for the
 layer map, the three-engine differential-testing policy, and the
@@ -56,12 +62,15 @@ from .strategies import (STRATEGIES, PlanContext, ResidualPlanContext,
                          Strategy, StrategyConfig, StrategyResult,
                          evaluate_strategies, get_strategy, make_plan,
                          register_strategy, registered_strategies)
-from .serving import (MODEL_PROFILES, TRAFFIC_SHAPES, ServingGraph,
-                      ServingModelProfile, ServingTrace, build_serving_graph,
-                      make_clock_proc, make_server_proc, make_trace,
-                      p99_latency_s, request_latencies, serving_cost_model,
-                      serving_machine, slo_violation_rate,
-                      traffic_rate_curve)
+from .roofline_model import (BETA_FLOOR, RooflineTable, beta_from_terms,
+                             load_roofline, roofline_cost_model)
+from .serving import (DECODE_FLOPS_ANCHORS, FAMILY_ARCHS, MODEL_PROFILES,
+                      TRAFFIC_SHAPES, ServingGraph, ServingModelProfile,
+                      ServingTrace, build_serving_graph, make_clock_proc,
+                      make_server_proc, make_trace, p99_latency_s,
+                      profile_for_arch, profiles_from_roofline,
+                      request_latencies, serving_cost_model, serving_machine,
+                      slo_violation_rate, traffic_rate_curve)
 from .tds import (GEAR_CLASS_NAMES, GEAR_CLASS_PANEL, GEAR_CLASS_SOLVE,
                   GEAR_CLASS_UPDATE, SOLVE_KINDS, WAIT_CLASS_NAMES,
                   WAIT_COMM, WAIT_IMBALANCE, WAIT_NONE, WAIT_PANEL,
@@ -96,10 +105,13 @@ __all__ = [
     "STRATEGIES", "PlanContext", "Strategy", "StrategyConfig",
     "StrategyResult", "evaluate_strategies", "get_strategy", "make_plan",
     "register_strategy", "registered_strategies",
-    "MODEL_PROFILES", "TRAFFIC_SHAPES", "ServingGraph",
+    "BETA_FLOOR", "RooflineTable", "beta_from_terms", "load_roofline",
+    "roofline_cost_model",
+    "DECODE_FLOPS_ANCHORS", "FAMILY_ARCHS", "MODEL_PROFILES",
+    "TRAFFIC_SHAPES", "ServingGraph",
     "ServingModelProfile", "ServingTrace", "build_serving_graph",
     "make_clock_proc", "make_server_proc", "make_trace", "p99_latency_s",
-    "request_latencies",
+    "profile_for_arch", "profiles_from_roofline", "request_latencies",
     "serving_cost_model", "serving_machine", "slo_violation_rate",
     "traffic_rate_curve",
     "GEAR_CLASS_NAMES", "GEAR_CLASS_PANEL", "GEAR_CLASS_SOLVE",

@@ -1,0 +1,251 @@
+"""Roofline-informed per-kind frequency sensitivity (beta).
+
+The engines model every task's duration at gear frequency `f` as
+
+    d(f) = d_top * (beta * f_top / f + (1 - beta))
+
+(`CostModel.beta`, consumed by `dvfs.two_gear_split*` and all three
+engines through the plans). The paper hand-sets beta per task kind; this
+module derives it from *measured* roofline terms instead — the committed
+`results/roofline.json` artifact produced by `repro.launch.zoo`, which
+compiles every model-zoo config per phase (train / prefill / decode) and
+extracts per-device compute, memory, and collective seconds from the HLO
+(docs/ROOFLINE.md documents the pipeline and the JSON schema).
+
+The derivation (`beta_from_terms`): only the compute term scales with
+clock frequency, so the true step time at a frequency ratio
+`s = f_top / f` is
+
+    d(s) = max(compute_s * s, memory_s, collective_s)
+
+Linearizing between the exact value at `s = 1` and the exact asymptotic
+slope as `s -> inf` gives beta = compute_s / max(all three) — the
+`roofline_frac` of `launch/roofline.py`. A compute-bound step (frac 1.0)
+stretches linearly with the clock; a memory- or collective-bound step is
+nearly gear-invariant (Calore et al. measure exactly this on HPC
+processors and accelerators). A floor keeps beta away from 0.0: control
+flow and issue logic always retain some clock sensitivity, and a
+measured-zero beta would make downclocking literally free.
+
+Because betas enter planning purely through `CostModel.freq_sensitivity`
+— plans carry `(gear, seconds)` segments, not betas — no engine changes
+are needed and `simulate` / `simulate_reference` / `simulate_fleet`
+inherit the values in lockstep (the PR 5 corollary of the differential
+policy; pinned by `tests/test_roofline.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from .scheduler import CostModel
+
+# The committed artifact (repo root); regenerated + drift-checked in CI by
+# `python -m repro.launch.zoo --check`.
+ROOFLINE_JSON = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                             "results", "roofline.json")
+
+#: Phases measured per architecture, in row order.
+PHASES = ("train", "prefill", "decode")
+
+#: Default beta floor (see `beta_from_terms`).
+BETA_FLOOR = 0.05
+
+
+def beta_from_terms(compute_s: float, memory_s: float, collective_s: float,
+                    *, floor: float = BETA_FLOOR) -> float:
+    """Frequency-sensitivity beta of a step from its roofline terms.
+
+    Only the compute term scales with the clock, so slowing the clock by
+    `s = f_top / f` gives `d(s) = max(compute_s * s, memory_s,
+    collective_s)`; the linear surrogate `d_top * (beta * s + 1 - beta)`
+    that is exact at `s = 1` and has the exact `s -> inf` slope uses
+
+        beta = compute_s / max(compute_s, memory_s, collective_s)
+
+    i.e. 1.0 when the step sits on the compute roofline (linear stretch)
+    and -> 0 when memory or collectives bound it (gear-invariant).
+
+    Parameters
+    ----------
+    compute_s, memory_s, collective_s : float
+        The step's three roofline terms in seconds (any common scale —
+        only the ratio matters).
+    floor : float
+        Lower clamp for the result; clock/control overhead never fully
+        vanishes, and a beta of exactly 0.0 would make downclocking
+        free. The upper clamp is 1.0.
+
+    Returns
+    -------
+    float
+        Beta in `[floor, 1.0]`.
+    """
+    bound = max(compute_s, memory_s, collective_s)
+    frac = compute_s / bound if bound > 0.0 else 1.0
+    return min(max(frac, floor), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTable:
+    """Parsed `results/roofline.json` (schema ``roofline/v2``).
+
+    `rows` holds one dict per (arch, phase) with the measured per-device
+    roofline terms and the derived beta; `meta` keeps the generator
+    header (mesh, device count, hardware constants, beta floor) so
+    downstream consumers can attribute the numbers.
+    """
+
+    rows: tuple[dict, ...]
+    meta: dict
+
+    @classmethod
+    def load(cls, path: str | None = None) -> "RooflineTable":
+        """Load the committed roofline artifact.
+
+        Parameters
+        ----------
+        path : str, optional
+            JSON path; defaults to the repo's `results/roofline.json`.
+
+        Returns
+        -------
+        RooflineTable
+            The parsed table.
+
+        Raises
+        ------
+        FileNotFoundError
+            If the artifact is missing (run
+            ``python -m repro.launch.zoo --out results/roofline.json``).
+        ValueError
+            If the file is not a ``roofline/v2`` document (e.g. the
+            legacy `dryrun.json` list schema).
+        """
+        path = path or ROOFLINE_JSON
+        with open(path) as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict) or \
+                not str(doc.get("schema", "")).startswith("roofline/"):
+            raise ValueError(f"{path} is not a roofline/v2 document; "
+                             "regenerate with `python -m repro.launch.zoo`")
+        rows = tuple(doc["rows"])
+        meta = {k: v for k, v in doc.items() if k != "rows"}
+        return cls(rows=rows, meta=meta)
+
+    def archs(self) -> tuple[str, ...]:
+        """Architectures present, in first-appearance order."""
+        seen: dict[str, None] = {}
+        for r in self.rows:
+            seen.setdefault(r["arch"], None)
+        return tuple(seen)
+
+    def get(self, arch: str, phase: str) -> dict:
+        """The measured row of one (arch, phase) cell.
+
+        Parameters
+        ----------
+        arch : str
+            Architecture key (a `repro.configs.ARCHS` name).
+        phase : str
+            One of `PHASES`.
+
+        Returns
+        -------
+        dict
+            The row (terms, bottleneck, beta, flops_per_token, ...).
+
+        Raises
+        ------
+        KeyError
+            If the cell is not in the table.
+        """
+        for r in self.rows:
+            if r["arch"] == arch and r["phase"] == phase:
+                return r
+        raise KeyError(f"no roofline row for ({arch!r}, {phase!r}); "
+                       f"known archs: {self.archs()}")
+
+    def beta(self, arch: str, phase: str) -> float:
+        """Derived frequency-sensitivity beta of one (arch, phase) cell."""
+        return float(self.get(arch, phase)["beta"])
+
+    def flops_per_token(self, arch: str, phase: str) -> float:
+        """Measured dot flops per token of one (arch, phase) cell."""
+        return float(self.get(arch, phase)["flops_per_token"])
+
+    def kind_betas(self, arch: str) -> dict[str, float]:
+        """Per-task-kind betas of one architecture.
+
+        Maps the serving/LM task kinds onto the measured phases:
+        `TRAIN` / `PREFILL` / `DECODE` from the same-named rows, plus
+        `CLOCK: 0.0` (the serving wall-clock rank must stay
+        gear-invariant — `build_serving_graph` validates it).
+
+        Parameters
+        ----------
+        arch : str
+            Architecture key (a `repro.configs.ARCHS` name).
+
+        Returns
+        -------
+        dict[str, float]
+            `{"TRAIN": ..., "PREFILL": ..., "DECODE": ..., "CLOCK": 0.0}`.
+        """
+        return {
+            "TRAIN": self.beta(arch, "train"),
+            "PREFILL": self.beta(arch, "prefill"),
+            "DECODE": self.beta(arch, "decode"),
+            "CLOCK": 0.0,
+        }
+
+
+def load_roofline(path: str | None = None) -> RooflineTable:
+    """Load the committed roofline table (see `RooflineTable.load`).
+
+    Parameters
+    ----------
+    path : str, optional
+        JSON path; defaults to the repo's `results/roofline.json`.
+
+    Returns
+    -------
+    RooflineTable
+        The parsed table.
+    """
+    return RooflineTable.load(path)
+
+
+def roofline_cost_model(arch: str, *, table: RooflineTable | None = None,
+                        flops_per_cycle: float = 4.0,
+                        comm_bandwidth_gbs: float = 5.0,
+                        comm_latency_s: float = 5e-6) -> CostModel:
+    """A `CostModel` whose per-kind betas come from measured rooflines.
+
+    The returned model prices `TRAIN` / `PREFILL` / `DECODE` tasks with
+    the architecture's measured phase betas (`RooflineTable.kind_betas`)
+    and pins `CLOCK` at 0.0, so serving graphs built against it keep
+    their gear-invariant wave cadence. All three engines consume the
+    betas through the plans — no engine-side configuration is needed.
+
+    Parameters
+    ----------
+    arch : str
+        Architecture key (a `repro.configs.ARCHS` name).
+    table : RooflineTable, optional
+        Parsed table; loaded from the committed artifact when omitted.
+    flops_per_cycle, comm_bandwidth_gbs, comm_latency_s : float
+        Forwarded to `CostModel`.
+
+    Returns
+    -------
+    CostModel
+        Ready for `PlanContext` / `build_serving_graph`.
+    """
+    table = table or load_roofline()
+    return CostModel(flops_per_cycle=flops_per_cycle,
+                     freq_sensitivity=table.kind_betas(arch),
+                     comm_bandwidth_gbs=comm_bandwidth_gbs,
+                     comm_latency_s=comm_latency_s)

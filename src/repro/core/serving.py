@@ -60,12 +60,13 @@ CLOCK_FREQ_GHZ = 1.0
 class ServingModelProfile:
     """Per-token cost profile of one served model family.
 
-    `flops` here are *effective* per-token costs pre-scaled to the
-    simulated cluster's throughput class -- the absolute numbers are
-    synthetic, the dense/MoE/SSM *ratios* (MoE activates a parameter
-    subset per token; SSM decode is constant-state and cheap) and the
-    decode frequency-sensitivity betas (memory-bound decode barely
-    stretches under DVFS, per Calore et al.) carry the physics.
+    The *absolute* flop scale is anchored per family
+    (`DECODE_FLOPS_ANCHORS` pre-scales decode cost to the simulated
+    cluster's throughput class); everything relative is measured from
+    the committed roofline artifact (`profiles_from_roofline`): the
+    prefill:decode flops ratio and the per-phase frequency-sensitivity
+    betas (memory-bound decode barely stretches under DVFS, per Calore
+    et al., while prefill sits much closer to the compute roofline).
     """
 
     name: str                       # family key ("dense" / "moe" / "ssm")
@@ -73,15 +74,129 @@ class ServingModelProfile:
     prefill_flops_per_token: float  # compute-bound prompt pass
     decode_flops_per_token: float   # memory-bound token generation
     decode_beta: float              # freq_sensitivity of DECODE tasks
+    prefill_beta: float = 1.0       # freq_sensitivity of PREFILL tasks
 
 
-# Family profiles keyed by `ServingModelProfile.name`; `arch` names the
-# representative config in `repro.configs.ARCHS`.
-MODEL_PROFILES: dict[str, ServingModelProfile] = {
+# Decode-side absolute anchors (effective flops/token pre-scaled to the
+# simulated cluster). Anchoring *decode* keeps steady-state J/token
+# comparable across roofline regenerations; prefill cost then follows the
+# measured per-arch prefill:decode ratio.
+DECODE_FLOPS_ANCHORS: dict[str, float] = {
+    "dense": 1.0e7, "moe": 6.0e6, "ssm": 3.5e6,
+}
+
+# Representative `repro.configs.ARCHS` member per served family.
+FAMILY_ARCHS: dict[str, str] = {
+    "dense": "qwen2.5-3b", "moe": "mixtral-8x7b", "ssm": "mamba2-370m",
+}
+
+# Maps each `ModelConfig.family` onto the anchor class whose cluster
+# throughput scale it borrows (used by `profile_for_arch` for zoo cells).
+_FAMILY_CLASS: dict[str, str] = {
+    "dense": "dense", "moe": "moe", "ssm": "ssm",
+    "hybrid": "ssm", "recurrent": "ssm",
+    "vlm": "dense", "audio": "dense", "encdec": "dense",
+}
+
+# Pre-roofline hand-set profiles: the fallback when the committed
+# `results/roofline.json` is unavailable (e.g. a partial vendored copy of
+# `repro.core`). A fresh checkout always loads the measured profiles.
+_HAND_SET_PROFILES: dict[str, ServingModelProfile] = {
     "dense": ServingModelProfile("dense", "qwen2.5-3b", 1.0e7, 1.0e7, 0.25),
     "moe": ServingModelProfile("moe", "mixtral-8x7b", 6.0e6, 6.0e6, 0.30),
     "ssm": ServingModelProfile("ssm", "mamba2-370m", 8.0e6, 3.5e6, 0.55),
 }
+
+# `profile_for_arch` clamps the measured prefill:decode flops ratio to
+# this range so one outlier phase (e.g. an encoder-heavy prefill) cannot
+# produce degenerate wave durations.
+_RATIO_CLAMP = (0.05, 20.0)
+
+
+def _measured_profile(name: str, arch: str, anchor: float,
+                      table) -> ServingModelProfile:
+    ratio = (table.flops_per_token(arch, "prefill")
+             / table.flops_per_token(arch, "decode"))
+    ratio = min(max(ratio, _RATIO_CLAMP[0]), _RATIO_CLAMP[1])
+    return ServingModelProfile(
+        name=name, arch=arch,
+        prefill_flops_per_token=anchor * ratio,
+        decode_flops_per_token=anchor,
+        decode_beta=table.beta(arch, "decode"),
+        prefill_beta=table.beta(arch, "prefill"),
+    )
+
+
+def profiles_from_roofline(table=None) -> dict[str, ServingModelProfile]:
+    """Family serving profiles derived from the measured roofline table.
+
+    Decode flops/token stay at the family's `DECODE_FLOPS_ANCHORS` value
+    (the absolute scale is a cluster-throughput calibration, not a
+    measurement); the prefill:decode ratio and both phase betas come
+    from the representative arch's committed roofline rows
+    (docs/ROOFLINE.md).
+
+    Parameters
+    ----------
+    table : repro.core.roofline_model.RooflineTable, optional
+        Parsed table; the committed `results/roofline.json` when
+        omitted.
+
+    Returns
+    -------
+    dict[str, ServingModelProfile]
+        Keyed like `MODEL_PROFILES` ("dense" / "moe" / "ssm").
+    """
+    if table is None:
+        from .roofline_model import load_roofline
+        table = load_roofline()
+    return {name: _measured_profile(name, arch,
+                                    DECODE_FLOPS_ANCHORS[name], table)
+            for name, arch in FAMILY_ARCHS.items()}
+
+
+def profile_for_arch(arch: str, table=None) -> ServingModelProfile:
+    """A per-architecture serving profile from its measured roofline rows.
+
+    Used by the model-zoo serving scenarios: the arch borrows the
+    decode-flops anchor of its family's throughput class
+    (`_FAMILY_CLASS`) and takes its prefill:decode ratio and phase betas
+    from its own committed roofline rows, so every zoo config becomes a
+    distinct, attributable serving cell.
+
+    Parameters
+    ----------
+    arch : str
+        Architecture key (a `repro.configs.ARCHS` name).
+    table : repro.core.roofline_model.RooflineTable, optional
+        Parsed table; the committed `results/roofline.json` when
+        omitted.
+
+    Returns
+    -------
+    ServingModelProfile
+        Profile named after the arch.
+    """
+    if table is None:
+        from .roofline_model import load_roofline
+        table = load_roofline()
+    family = table.get(arch, "decode")["family"]
+    klass = _FAMILY_CLASS.get(family, "dense")
+    return _measured_profile(arch, arch, DECODE_FLOPS_ANCHORS[klass], table)
+
+
+def _default_profiles() -> dict[str, ServingModelProfile]:
+    try:
+        return profiles_from_roofline()
+    except (OSError, ValueError, KeyError):
+        return dict(_HAND_SET_PROFILES)
+
+
+# Family profiles keyed by `ServingModelProfile.name`; `arch` names the
+# representative config in `repro.configs.ARCHS`. Roofline-derived on a
+# fresh checkout (see `profiles_from_roofline`); hand-set only when the
+# committed artifact is unavailable.
+MODEL_PROFILES: dict[str, ServingModelProfile] = _default_profiles()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,10 +380,9 @@ def serving_cost_model(profile: ServingModelProfile, *,
     Parameters
     ----------
     profile : ServingModelProfile
-        Supplies the decode beta; prefill stretches ~linearly under
-        frequency scaling (beta 1.0), `CLOCK` is pinned at beta 0.0 so
-        the wave cadence is gear-invariant (required by
-        `build_serving_graph`).
+        Supplies the measured prefill and decode betas; `CLOCK` is
+        pinned at beta 0.0 so the wave cadence is gear-invariant
+        (required by `build_serving_graph`).
     flops_per_cycle, comm_bandwidth_gbs, comm_latency_s : float
         Forwarded to `CostModel`; comm prices the clock-tick fan-out and
         is negligible against realistic wave periods.
@@ -279,7 +393,7 @@ def serving_cost_model(profile: ServingModelProfile, *,
         Ready for `build_serving_graph` / `PlanContext`.
     """
     return CostModel(flops_per_cycle=flops_per_cycle,
-                     freq_sensitivity={"PREFILL": 1.0,
+                     freq_sensitivity={"PREFILL": profile.prefill_beta,
                                        "DECODE": profile.decode_beta,
                                        "CLOCK": 0.0},
                      comm_bandwidth_gbs=comm_bandwidth_gbs,

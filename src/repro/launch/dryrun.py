@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS_EXTRA", "") + \
-    " --xla_force_host_platform_device_count=512"
-# ^ MUST run before any other import (jax locks device count on first init).
-
 """Multi-pod dry-run: lower + compile every (architecture x input-shape)
 cell on the production meshes, print memory/cost analysis, and persist the
 roofline terms.
@@ -16,7 +11,13 @@ Usage:
 Success here proves the distribution config is coherent: sharding
 mismatches, compile-time OOM, or unsupported collectives all surface as
 hard failures. The compiled artifact's cost analysis feeds EXPERIMENTS.md
-S-Roofline (launch/roofline.py)."""
+S-Roofline (launch/roofline.py) and the model-zoo roofline generator
+(launch/zoo.py, docs/ROOFLINE.md)."""
+
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS_EXTRA", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import (jax locks device count on first init).
 
 import argparse       # noqa: E402
 import json           # noqa: E402
@@ -102,7 +103,24 @@ def roofline_terms(flops_dev: float, bytes_dev: float,
                    coll_dev: float) -> dict[str, float]:
     """Three-term roofline from *per-device* quantities (the SPMD module is
     the per-device program; multiplying by chips and dividing by chips*peak
-    cancels)."""
+    cancels).
+
+    Parameters
+    ----------
+    flops_dev : float
+        Dot flops per device (MXU term).
+    bytes_dev : float
+        HBM bytes per device.
+    coll_dev : float
+        ICI collective bytes per device.
+
+    Returns
+    -------
+    dict[str, float]
+        ``compute_s`` / ``memory_s`` / ``collective_s`` at the TPU-v5e
+        constants, plus ``bottleneck`` (argmax key) and
+        ``step_s_lower_bound`` (the max term).
+    """
     terms = {
         "compute_s": flops_dev / PEAK_FLOPS,
         "memory_s": bytes_dev / HBM_BW,
@@ -114,10 +132,46 @@ def roofline_terms(flops_dev: float, bytes_dev: float,
     return terms
 
 
-def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+def run_cell(arch: str, shape_name, mesh, *, verbose: bool = True,
              hlo_out: str | None = None, cfg=None, rules=None,
              opt_cfg=None) -> dict:
-    shape = SHAPES[shape_name]
+    """Lower + compile one (arch x shape x mesh) cell and report its costs.
+
+    The dry-run workhorse: builds the cell (`specs.make_cell`), jits and
+    compiles it under the mesh's sharding rules, and collects XLA's raw
+    cost/memory analysis, the per-family collective bytes from the HLO
+    text, and the model-flops accounting. Nothing executes -- success
+    proves the distribution config is coherent at this scale.
+
+    Parameters
+    ----------
+    arch : str
+        Architecture key (a `repro.configs.ARCHS` name).
+    shape_name : str or repro.configs.ShapeSpec
+        A `repro.configs.SHAPES` key, or a `ShapeSpec` directly (e.g.
+        the zoo generator's reduced phase shapes).
+    mesh : jax.sharding.Mesh
+        Compile mesh (`mesh.make_production_mesh` or any custom mesh).
+    verbose : bool
+        Print the per-cell summary block.
+    hlo_out : str, optional
+        Write the compiled module text here (feeds
+        `roofline.corrected_terms` / `hlo_analysis.analyze_file`).
+    cfg, rules, opt_cfg : optional
+        Overrides forwarded to `specs.make_cell` (default: the arch's
+        registered config and sharding rules).
+
+    Returns
+    -------
+    dict
+        One dry-run record: identity, lower/compile timings, per-device
+        flop/byte/collective counts, `model_flops_global`, and
+        `useful_flop_ratio` (also a `results/dryrun.json` row).
+    """
+    if isinstance(shape_name, str):
+        shape = SHAPES[shape_name]
+    else:
+        shape, shape_name = shape_name, shape_name.name
     cell = make_cell(arch, shape, mesh, cfg=cfg, rules=rules, opt_cfg=opt_cfg)
     t0 = time.time()
     with use_sharding(mesh, cell.rules):
@@ -131,6 +185,8 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # some jax builds wrap in a list
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
     except Exception:
@@ -231,6 +287,8 @@ def run_fact_cell(name: str, n: int, tile: int, mesh, *,
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # some jax builds wrap in a list
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
     except Exception:
@@ -274,6 +332,7 @@ def run_fact_cell(name: str, n: int, tile: int, mesh, *,
 
 
 def main() -> None:
+    """CLI driver (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

@@ -15,7 +15,12 @@ aware analyzer, and emits per-cell:
 
 Usage:
     python -m repro.launch.roofline --json results/dryrun.json \
-        --hlo-dir results/hlo --out results/roofline.json [--markdown]
+        --hlo-dir results/hlo --out results/roofline_cells.json [--markdown]
+
+(The committed model-zoo artifact `results/roofline.json` has its own
+``roofline/v2`` schema and generator -- `python -m repro.launch.zoo`; see
+docs/ROOFLINE.md. This module is the ad-hoc per-cell report for dry-run
+sweeps on the production meshes.)
 """
 
 from __future__ import annotations
@@ -36,6 +41,29 @@ MESH_DIR = {"16x16": "single_pod", "2x16x16": "multi_pod"}
 
 
 def corrected_terms(rec: dict, hlo_dir: str) -> dict | None:
+    """Trip-count-corrected roofline terms for one dry-run record.
+
+    Reruns `hlo_analysis.analyze_file` on the cell's persisted HLO (the
+    correction XLA's single-visit ``cost_analysis()`` lacks for scanned
+    models) and converts the per-device counts into the three roofline
+    seconds terms at the TPU-v5e constants.
+
+    Parameters
+    ----------
+    rec : dict
+        One `results/dryrun.json` record (needs ``arch``, ``shape``,
+        ``mesh``, ``chips``, optionally ``model_flops_global``).
+    hlo_dir : str
+        Directory holding ``<arch>_<shape>_<mesh_name>.hlo`` modules.
+
+    Returns
+    -------
+    dict or None
+        Terms + ``bottleneck`` + ``roofline_frac`` (the compute-bound
+        fraction that `core.roofline_model.beta_from_terms` floors into
+        a beta), or None when the record's mesh is unknown or its HLO
+        file is missing.
+    """
     mesh_name = MESH_DIR.get(rec["mesh"])
     if mesh_name is None:
         return None
@@ -70,6 +98,8 @@ def corrected_terms(rec: dict, hlo_dir: str) -> dict | None:
 
 
 def build(json_path: str, hlo_dir: str) -> list[dict]:
+    """Dry-run records with a ``corrected`` terms block attached where the
+    cell's HLO module is available."""
     with open(json_path) as f:
         records = json.load(f)
     out = []
@@ -83,12 +113,14 @@ def build(json_path: str, hlo_dir: str) -> list[dict]:
 
 
 def fmt_s(x: float) -> str:
+    """Seconds formatted for the report table (ms below 1 s)."""
     if x >= 1.0:
         return f"{x:7.2f}s"
     return f"{x * 1e3:6.1f}ms"
 
 
 def markdown_table(rows: list[dict], mesh: str = "16x16") -> str:
+    """Markdown roofline table of one mesh's corrected cells."""
     lines = [
         "| arch | shape | compute | memory | collective | bound | bottleneck"
         " | useful | roofline |",
@@ -108,10 +140,11 @@ def markdown_table(rows: list[dict], mesh: str = "16x16") -> str:
 
 
 def main() -> None:
+    """CLI: build the corrected per-cell report (see module docstring)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="results/dryrun.json")
     ap.add_argument("--hlo-dir", default="results/hlo")
-    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--out", default="results/roofline_cells.json")
     ap.add_argument("--markdown", action="store_true")
     args = ap.parse_args()
 

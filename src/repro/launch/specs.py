@@ -156,6 +156,34 @@ def make_cell(arch: str, shape: ShapeSpec, mesh: Mesh, *,
               cfg: ModelConfig | None = None,
               rules: Rules | None = None,
               n_microbatches: int | None = None) -> Cell:
+    """Assemble the lowering inputs of one (arch x shape x mesh) cell.
+
+    Builds the step function for the shape's kind (train step with
+    gradient accumulation, prefill, or single-token decode), the
+    abstract argument tree, and the in/out shardings from the arch's
+    sharding rules adapted to the mesh and batch.
+
+    Parameters
+    ----------
+    arch : str
+        Architecture key (a `repro.configs.ARCHS` name).
+    shape : repro.configs.ShapeSpec
+        Input shape (kind selects the step function).
+    mesh : jax.sharding.Mesh
+        Target mesh.
+    opt_cfg, cfg, rules : optional
+        Override the default optimizer config, model config, or
+        sharding rules.
+    n_microbatches : int, optional
+        Gradient-accumulation factor (train only; defaults to
+        `default_microbatches`).
+
+    Returns
+    -------
+    Cell
+        Everything `jax.jit(...).lower(...)` needs (fn, args,
+        shardings, donations, rules).
+    """
     cfg = cfg or get_config(arch)
     api = get_model(cfg)
     if rules is None:

@@ -41,6 +41,7 @@ from repro.train.train_step import init_train_state, make_train_step
 
 
 def main(argv=None) -> dict:
+    """CLI: run the (smoke-scale) training loop; returns final metrics."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true",

@@ -1,0 +1,320 @@
+"""Model-zoo roofline generator: the reproducible pipeline behind the
+committed `results/roofline.json` artifact (docs/ROOFLINE.md).
+
+For every config in `repro.configs.ARCHS` x three phases (train /
+prefill / decode), this module:
+
+  1. builds the roofline-representative `make_zoo` reduction (real
+     widths, one layer-pattern period -- per-layer arithmetic intensity
+     matches the production model),
+  2. lowers + compiles the cell on a fixed 2x4 ("data", "model") host
+     mesh (8 fake CPU devices, `JAX_PLATFORMS=cpu`),
+  3. runs the trip-count-aware HLO analyzer (`launch/hlo_analysis`) on
+     the compiled module and converts per-device dot flops / HBM bytes /
+     collective bytes into the three roofline seconds terms, and
+  4. derives the phase's frequency-sensitivity beta
+     (`core.roofline_model.beta_from_terms`).
+
+Everything is static compiler analysis -- nothing executes -- so the
+output is deterministic for a pinned jax version and runs in a few
+minutes on CPU. CI regenerates the artifact on every push and fails on
+drift (`--check`); the nightly workflow uploads the fresh output.
+
+Usage:
+    python -m repro.launch.zoo --out results/roofline.json
+    python -m repro.launch.zoo --check              # drift gate (CI)
+    python -m repro.launch.zoo --arch gemma2-2b --out /tmp/one.json
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import ShapeSpec, get_config, list_archs, make_zoo
+from repro.core.roofline_model import BETA_FLOOR, PHASES, beta_from_terms
+from repro.launch import hlo_analysis
+# Importing dryrun forces >= 512 fake host devices before jax's first init
+# (its module header runs pre-import); the zoo mesh slices the first 8.
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+SCHEMA = "roofline/v2"
+DCN_BW = 25e9                      # cross-pod bytes/s (matches roofline.py)
+ZOO_MESH_SHAPE = (2, 2 * 2)        # 2x4 ("data", "model"), 8 devices
+ZOO_AXES = ("data", "model")
+CHIPS_PER_POD = 256
+
+#: Per-phase input shapes: large enough that per-layer arithmetic
+#: intensity is meaningful (1024-token sequences), small enough that
+#: every cell compiles in ~a second on CPU.
+ZOO_SHAPES: dict[str, ShapeSpec] = {
+    "train": ShapeSpec("zoo_train", 1024, 8, "train"),
+    "prefill": ShapeSpec("zoo_prefill", 1024, 8, "prefill"),
+    "decode": ShapeSpec("zoo_decode", 1024, 8, "decode"),
+}
+
+
+def _sig(x: float, digits: int = 6) -> float:
+    """Round to `digits` significant digits (stable JSON output)."""
+    if x == 0.0:
+        return 0.0
+    return float(f"{x:.{digits}g}")
+
+
+def _zoo_mesh():
+    """The fixed 2x4 ("data", "model") mesh on the first 8 host devices."""
+    import jax
+
+    n = int(np.prod(ZOO_MESH_SHAPE))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"zoo mesh needs {n} devices, found {len(devs)}; import "
+            "repro.launch.zoo before jax's first init (its dryrun import "
+            "forces the fake host device count)")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(ZOO_MESH_SHAPE), ZOO_AXES)
+
+
+def zoo_row(arch: str, phase: str, mesh=None) -> dict:
+    """Compile one (arch, phase) zoo cell and measure its roofline row.
+
+    Lowers + compiles the `make_zoo` reduction of `arch` for the phase's
+    `ZOO_SHAPES` input on the 2x4 host mesh, runs the trip-count-aware
+    HLO analyzer on the compiled module, converts the per-device counts
+    into roofline seconds at the TPU-v5e constants, and derives the
+    phase beta. Pure static analysis: nothing executes.
+
+    Parameters
+    ----------
+    arch : str
+        Architecture key (a `repro.configs.ARCHS` name).
+    phase : str
+        One of `core.roofline_model.PHASES` ("train" / "prefill" /
+        "decode").
+    mesh : jax.sharding.Mesh, optional
+        Compile mesh; defaults to the fixed 2x4 zoo mesh.
+
+    Returns
+    -------
+    dict
+        One `results/roofline.json` row (see docs/ROOFLINE.md for the
+        schema): identity, per-device counts, the three `*_s` terms,
+        `bottleneck`, `arithmetic_intensity`, `beta`,
+        `flops_per_token`, and compile timings.
+    """
+    import jax
+
+    from repro.launch.specs import make_cell
+    from repro.sharding.rules import use_sharding
+
+    mesh = mesh if mesh is not None else _zoo_mesh()
+    shape = ZOO_SHAPES[phase]
+    cfg = make_zoo(get_config(arch))
+    n_devices = mesh.devices.size
+
+    t0 = time.time()
+    cell = make_cell(arch, shape, mesh, cfg=cfg)
+    with use_sharding(mesh, cell.rules):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        compiled = jitted.lower(*cell.args).compile()
+    compile_s = time.time() - t0
+    cost = hlo_analysis.analyze(compiled.as_text(), n_devices=n_devices,
+                                chips_per_pod=CHIPS_PER_POD)
+
+    compute_s = cost.dot_flops / PEAK_FLOPS
+    memory_s = cost.hbm_bytes / HBM_BW
+    collective_s = cost.ici_bytes / ICI_BW + cost.dcn_bytes / DCN_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=lambda k: terms[k])
+
+    tokens = (shape.global_batch if shape.kind == "decode"
+              else shape.global_batch * shape.seq_len)
+    n_active = cfg.active_param_count()
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+    total_dot = cost.dot_flops * n_devices
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "phase": phase,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "tokens": tokens,
+        "dot_flops_per_device": _sig(cost.dot_flops),
+        "hbm_bytes_per_device": _sig(cost.hbm_bytes),
+        "ici_bytes_per_device": _sig(cost.ici_bytes),
+        "dcn_bytes_per_device": _sig(cost.dcn_bytes),
+        "compute_s": _sig(compute_s),
+        "memory_s": _sig(memory_s),
+        "collective_s": _sig(collective_s),
+        "step_s_lower_bound": _sig(max(terms.values())),
+        "bottleneck": bottleneck,
+        "arithmetic_intensity": _sig(cost.dot_flops / cost.hbm_bytes
+                                     if cost.hbm_bytes else 0.0),
+        "beta": _sig(beta_from_terms(compute_s, memory_s, collective_s)),
+        "flops_per_token": _sig(total_dot / tokens if tokens else 0.0),
+        "model_flops_global": _sig(model_flops),
+        "useful_flop_ratio": _sig(model_flops / total_dot
+                                  if total_dot else 0.0),
+        "n_while": cost.n_while,
+        "compile_s": round(compile_s, 2),
+    }
+
+
+def generate(archs: tuple[str, ...] | None = None,
+             phases: tuple[str, ...] = PHASES,
+             verbose: bool = True) -> dict:
+    """Generate the full roofline document for the model zoo.
+
+    Parameters
+    ----------
+    archs : tuple[str, ...], optional
+        Architectures to measure; defaults to every `ARCHS` entry.
+    phases : tuple[str, ...]
+        Phases per architecture (default: train / prefill / decode).
+    verbose : bool
+        Print one progress line per cell.
+
+    Returns
+    -------
+    dict
+        The ``roofline/v2`` document: generator metadata (mesh, device
+        count, hardware constants, beta floor) plus one row per
+        (arch, phase) under ``"rows"``.
+    """
+    import jax
+
+    mesh = _zoo_mesh()
+    rows = []
+    for arch in (archs or tuple(list_archs())):
+        for phase in phases:
+            row = zoo_row(arch, phase, mesh)
+            rows.append(row)
+            if verbose:
+                print(f"[zoo] {arch:22s} {phase:8s} compile={row['compile_s']:6.1f}s "
+                      f"bound={row['bottleneck']:13s} beta={row['beta']:.3f}")
+    return {
+        "schema": SCHEMA,
+        "generator": "python -m repro.launch.zoo --out results/roofline.json",
+        "jax_version": jax.__version__,
+        "mesh": "x".join(str(s) for s in ZOO_MESH_SHAPE),
+        "n_devices": int(np.prod(ZOO_MESH_SHAPE)),
+        "chips_per_pod": CHIPS_PER_POD,
+        "hardware": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                     "ici_bw": ICI_BW, "dcn_bw": DCN_BW},
+        "beta_floor": BETA_FLOOR,
+        "rows": rows,
+    }
+
+
+#: Numeric row fields compared by `check` under --rtol (float drift from
+#: compiler-version or host differences); `beta` is compared absolutely
+#: and identity/bottleneck fields exactly.
+_CHECK_REL_FIELDS = ("dot_flops_per_device", "hbm_bytes_per_device",
+                     "ici_bytes_per_device", "compute_s", "memory_s",
+                     "collective_s", "step_s_lower_bound",
+                     "arithmetic_intensity", "flops_per_token")
+
+
+def check(path: str, archs: tuple[str, ...] | None = None,
+          rtol: float = 0.05, beta_atol: float = 0.05) -> list[str]:
+    """Regenerate the zoo rows and diff them against a committed artifact.
+
+    Parameters
+    ----------
+    path : str
+        The committed `results/roofline.json`.
+    archs : tuple[str, ...], optional
+        Restrict the regeneration (e.g. one arch for a quick gate).
+    rtol : float
+        Allowed relative drift on the numeric fields
+        (`_CHECK_REL_FIELDS`); identity fields and `bottleneck` must
+        match exactly, `beta` within `beta_atol`.
+    beta_atol : float
+        Allowed absolute drift on the derived beta.
+
+    Returns
+    -------
+    list[str]
+        Human-readable drift descriptions; empty when the committed
+        artifact is up to date.
+    """
+    with open(path) as f:
+        committed = json.load(f)
+    if not isinstance(committed, dict) or "rows" not in committed:
+        return [f"{path} is not a {SCHEMA} document"]
+    want = {(r["arch"], r["phase"]): r for r in committed["rows"]}
+    if archs is None:
+        archs = tuple(dict.fromkeys(r["arch"] for r in committed["rows"]))
+    fresh = generate(archs=archs)
+    drift: list[str] = []
+    for row in fresh["rows"]:
+        key = (row["arch"], row["phase"])
+        old = want.get(key)
+        if old is None:
+            drift.append(f"{key}: missing from committed artifact")
+            continue
+        if old["bottleneck"] != row["bottleneck"]:
+            drift.append(f"{key}: bottleneck {old['bottleneck']} -> "
+                         f"{row['bottleneck']}")
+        if abs(old["beta"] - row["beta"]) > beta_atol:
+            drift.append(f"{key}: beta {old['beta']} -> {row['beta']}")
+        for field in _CHECK_REL_FIELDS:
+            o, n = float(old[field]), float(row[field])
+            denom = max(abs(o), abs(n), 1e-30)
+            if abs(o - n) / denom > rtol:
+                drift.append(f"{key}: {field} {o:g} -> {n:g}")
+    missing = set(want) - {(r["arch"], r["phase"]) for r in fresh["rows"]}
+    if archs is None or set(archs) >= {a for a, _ in want}:
+        for key in sorted(missing):
+            drift.append(f"{key}: committed but no longer generated")
+    return drift
+
+
+def main() -> None:
+    """CLI: generate (`--out`), or gate drift against a committed file
+    (`--check`)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append",
+                    help="restrict to these archs (repeatable)")
+    ap.add_argument("--out", default=None,
+                    help="write the roofline/v2 JSON here")
+    ap.add_argument("--check", nargs="?", const="results/roofline.json",
+                    default=None, metavar="JSON",
+                    help="regenerate and fail on drift vs this artifact "
+                         "(default results/roofline.json)")
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="--check relative tolerance on numeric fields")
+    args = ap.parse_args()
+
+    archs = tuple(args.arch) if args.arch else None
+    if args.check is not None:
+        drift = check(args.check, archs=archs, rtol=args.rtol)
+        if drift:
+            print(f"[zoo] {len(drift)} drift(s) vs {args.check}:")
+            for line in drift:
+                print("  ", line)
+            print("[zoo] regenerate with: python -m repro.launch.zoo "
+                  f"--out {args.check}")
+            raise SystemExit(1)
+        print(f"[zoo] {args.check} is up to date")
+        return
+
+    doc = generate(archs=archs)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"[zoo] wrote {len(doc['rows'])} rows -> {args.out}")
+    else:
+        print(json.dumps(doc, indent=1))
+
+
+if __name__ == "__main__":
+    main()

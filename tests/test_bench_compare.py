@@ -176,6 +176,21 @@ def test_serving_new_only_metrics_are_additions(tmp_path, capsys):
     assert "serving.diurnal.tx.j_per_token" in capsys.readouterr().out
 
 
+def test_string_metrics_pass_through_ungated(tmp_path, capsys):
+    """String-valued metrics (`lm_energy.roofline_source` attributes
+    whether the run consumed measured:results/roofline.json or the
+    synthetic fixture) must never gate -- not even when the value changes
+    (a fixture->measured flip is the intended PR 9 transition)."""
+    old = {**BASE, "lm_energy": {
+        "roofline_source": "synthetic:benchmarks/data/roofline_fixture.json",
+        "train.tx.saved_pct": 12.0}}
+    new = {**BASE, "lm_energy": {
+        "roofline_source": "measured:results/roofline.json",
+        "train.tx.saved_pct": 12.5}}
+    assert _run(tmp_path, old, new) == 0
+    assert "REGRESSIONS" not in capsys.readouterr().out
+
+
 def test_search_disagreement_fails(tmp_path):
     """A batched candidate diverging from the fast engine is a
     correctness failure, not a perf regression."""

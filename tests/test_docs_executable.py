@@ -26,11 +26,12 @@ from repro.core import registered_strategies
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 README = ROOT / "README.md"
 ARCH = ROOT / "docs" / "ARCHITECTURE.md"
+ROOFLINE = ROOT / "docs" / "ROOFLINE.md"
 ROADMAP = ROOT / "ROADMAP.md"
 
 
 def test_docs_exist():
-    for path in (README, ARCH, ROADMAP):
+    for path in (README, ARCH, ROOFLINE, ROADMAP):
         assert path.is_file(), f"{path.name} is missing"
         assert len(path.read_text()) > 500, f"{path.name} is a stub"
 
@@ -46,6 +47,23 @@ def test_cross_links():
     assert "docs/ARCHITECTURE.md" in roadmap, \
         "ROADMAP must link to the architecture doc instead of restating it"
     assert "README.md" in roadmap
+
+
+def test_roofline_doc_cross_links():
+    """The roofline contract page is reachable from both prose homes and
+    links back to them; it documents the artifact + regeneration path."""
+    readme = README.read_text()
+    arch = ARCH.read_text()
+    roofline = ROOFLINE.read_text()
+    assert "docs/ROOFLINE.md" in readme
+    assert "ROOFLINE.md" in arch
+    assert "ARCHITECTURE.md" in roofline
+    assert "README" in roofline
+    for anchor in ("results/roofline.json", "roofline/v2",
+                   "repro.launch.zoo", "beta_from_terms"):
+        assert anchor in roofline, f"ROOFLINE.md lost {anchor!r}"
+    # the generator command users copy-paste appears verbatim
+    assert "python -m repro.launch.zoo" in readme
 
 
 def test_registry_table_in_sync():

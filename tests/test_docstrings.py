@@ -1,7 +1,8 @@
-"""Docstring-coverage gate for the public `repro.core` API.
+"""Docstring-coverage gate for the public `repro.core` + `repro.launch` API.
 
 A lightweight stand-in for `interrogate --fail-under` (which is not a
-pinned dev dependency): walks every module of `repro.core` and asserts
+pinned dev dependency): walks every module of `repro.core` and
+`repro.launch` and asserts
 
   * 100% docstring coverage over the public surface -- every public
     module, class, function, method, and property defined in the package
@@ -9,8 +10,8 @@ pinned dev dependency): walks every module of `repro.core` and asserts
   * NumPy-style sections (`Parameters` / `Returns`) on the named core
     entry points a new user meets first (the README / ARCHITECTURE
     surface): the simulator engines, the two-gear splits, the TDS and
-    residual-graph analyses, the planning context views, and the replay
-    driver.
+    residual-graph analyses, the planning context views, the replay
+    driver, and the roofline pipeline (docs/ROOFLINE.md).
 
 Being a test (not a linter config), coverage cannot regress without
 failing CI, and the required-sections list documents which APIs are held
@@ -18,16 +19,31 @@ to the fuller standard.
 """
 
 import inspect
+import os
 
 import pytest
 
 import repro.core as core
 from repro.core import (critical_path, dag, dvfs, energy_aware_step,
-                        energy_model, fleet, optimize, replan, scheduler,
-                        serving, strategies, tds)
+                        energy_model, fleet, optimize, replan,
+                        roofline_model, scheduler, serving, strategies, tds)
+
+# repro.launch.dryrun sets XLA_FLAGS (fake host device count) at import,
+# before jax's backend initializes; restore the env so the rest of the
+# in-process suite keeps seeing the default single device.
+_saved_xla_flags = os.environ.get("XLA_FLAGS")
+from repro.launch import dryrun, hlo_analysis, specs, zoo  # noqa: E402
+from repro.launch import roofline as launch_roofline       # noqa: E402
+from repro.launch import train as launch_train             # noqa: E402
+if _saved_xla_flags is None:
+    os.environ.pop("XLA_FLAGS", None)
+else:
+    os.environ["XLA_FLAGS"] = _saved_xla_flags
 
 MODULES = (core, critical_path, dag, dvfs, energy_aware_step, energy_model,
-           fleet, optimize, replan, scheduler, serving, strategies, tds)
+           fleet, optimize, replan, roofline_model, scheduler, serving,
+           strategies, tds,
+           dryrun, hlo_analysis, launch_roofline, specs, zoo, launch_train)
 
 # Entry points that must carry full NumPy-style docstrings
 # (module attribute path -> callable). Keep in sync with README.md's API
@@ -70,6 +86,21 @@ NUMPY_STYLE_APIS = {
     "serving.request_latencies": serving.request_latencies,
     "serving.p99_latency_s": serving.p99_latency_s,
     "serving.slo_violation_rate": serving.slo_violation_rate,
+    "serving.profiles_from_roofline": serving.profiles_from_roofline,
+    "serving.profile_for_arch": serving.profile_for_arch,
+    "roofline_model.beta_from_terms": roofline_model.beta_from_terms,
+    "roofline_model.roofline_cost_model": roofline_model.roofline_cost_model,
+    "roofline_model.RooflineTable.load": roofline_model.RooflineTable.load,
+    "roofline_model.RooflineTable.kind_betas":
+        roofline_model.RooflineTable.kind_betas,
+    "hlo_analysis.analyze": hlo_analysis.analyze,
+    "dryrun.run_cell": dryrun.run_cell,
+    "dryrun.roofline_terms": dryrun.roofline_terms,
+    "roofline.corrected_terms": launch_roofline.corrected_terms,
+    "specs.make_cell": specs.make_cell,
+    "zoo.generate": zoo.generate,
+    "zoo.zoo_row": zoo.zoo_row,
+    "zoo.check": zoo.check,
 }
 
 

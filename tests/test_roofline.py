@@ -1,0 +1,298 @@
+"""Roofline pipeline gates: the committed artifact's schema, the golden
+pin of one config's rows, the beta derivation, the roofline-derived
+serving profiles, and the three-engine differential under
+roofline-informed betas (docs/ROOFLINE.md).
+
+The load-bearing pins:
+
+  * schema validity      -- `results/roofline.json` is a ``roofline/v2``
+                            document with all 11 configs x 3 phases and
+                            internally consistent rows (bottleneck is the
+                            argmax term, beta = floored compute fraction,
+                            terms match the hardware constants);
+  * golden stability     -- the gemma2-2b rows match
+                            `tests/data/roofline_golden.json` bit-for-bit
+                            (modulo compile timing): the generator is
+                            deterministic for a pinned jax version;
+  * measured profiles    -- `MODEL_PROFILES` on a fresh checkout is
+                            roofline-derived (decode anchored, measured
+                            ratio + betas), NOT the hand-set fallback;
+  * engine lockstep      -- roofline-informed betas flow to all three
+                            engines purely through `CostModel`
+                            (the PR 5 corollary: plans carry `(gear,
+                            seconds)` segments, so no engine changes).
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import list_archs
+from repro.core import (BETA_FLOOR, DECODE_FLOPS_ANCHORS, FAMILY_ARCHS,
+                        MODEL_PROFILES, PlanContext, StrategyConfig,
+                        beta_from_terms, build_serving_graph, get_strategy,
+                        load_roofline, make_server_proc, make_trace,
+                        profile_for_arch,
+                        profiles_from_roofline, registered_strategies,
+                        roofline_cost_model, serving_cost_model,
+                        serving_machine, simulate, simulate_fleet,
+                        simulate_reference)
+from repro.core.roofline_model import PHASES, RooflineTable
+from repro.core.serving import _HAND_SET_PROFILES
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+ARTIFACT = os.path.join(REPO, "results", "roofline.json")
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "roofline_golden.json")
+
+ROW_FIELDS = {
+    "arch", "family", "phase", "seq_len", "global_batch", "tokens",
+    "dot_flops_per_device", "hbm_bytes_per_device", "ici_bytes_per_device",
+    "dcn_bytes_per_device", "compute_s", "memory_s", "collective_s",
+    "step_s_lower_bound", "bottleneck", "arithmetic_intensity", "beta",
+    "flops_per_token", "model_flops_global", "useful_flop_ratio", "n_while",
+    "compile_s",
+}
+
+# generator-dependent timing, excluded from golden comparison
+TIMING_FIELDS = ("compile_s",)
+
+
+# ----------------------------------------------------------- schema gate
+def test_artifact_exists_and_loads():
+    """The committed artifact parses as a roofline/v2 document."""
+    table = load_roofline()
+    assert table.meta["schema"].startswith("roofline/")
+    assert table.meta["n_devices"] == 8
+    assert table.meta["beta_floor"] == BETA_FLOOR
+    hw = table.meta["hardware"]
+    assert set(hw) == {"peak_flops", "hbm_bw", "ici_bw", "dcn_bw"}
+
+
+def test_artifact_covers_the_full_zoo():
+    """One row per (registered arch x phase) -- 11 x 3."""
+    table = load_roofline()
+    assert set(table.archs()) == set(list_archs())
+    for arch in list_archs():
+        for phase in PHASES:
+            assert table.get(arch, phase)["phase"] == phase
+
+
+def test_rows_are_internally_consistent():
+    table = load_roofline()
+    hw = table.meta["hardware"]
+    for r in table.rows:
+        assert set(r) == ROW_FIELDS, r["arch"]
+        terms = {k: r[k] for k in ("compute_s", "memory_s", "collective_s")}
+        assert r["bottleneck"] == max(terms, key=lambda k: terms[k])
+        assert r["step_s_lower_bound"] == pytest.approx(max(terms.values()))
+        # beta is the floored compute fraction of the binding term
+        assert r["beta"] == pytest.approx(
+            beta_from_terms(**terms), rel=1e-4)
+        assert BETA_FLOOR <= r["beta"] <= 1.0
+        # terms come from the per-device counts at the header constants
+        assert r["compute_s"] == pytest.approx(
+            r["dot_flops_per_device"] / hw["peak_flops"], rel=1e-4)
+        assert r["memory_s"] == pytest.approx(
+            r["hbm_bytes_per_device"] / hw["hbm_bw"], rel=1e-4)
+        assert r["tokens"] == (r["global_batch"] if r["phase"] == "decode"
+                               else r["global_batch"] * r["seq_len"])
+        assert r["flops_per_token"] > 0
+        # train always scans layers (remat loop); inference may inline
+        assert r["n_while"] >= (1 if r["phase"] == "train" else 0)
+
+
+def test_decode_rows_are_never_compute_bound():
+    """The Calore-style contrast the cost model relies on: single-token
+    decode sits far off the compute roofline on every architecture."""
+    table = load_roofline()
+    for arch in table.archs():
+        assert table.get(arch, "decode")["bottleneck"] != "compute_s", arch
+        assert table.beta(arch, "decode") <= 0.1, arch
+
+
+def test_some_prefill_rows_are_meaningfully_compute_sensitive():
+    """Real widths make large dense prefill clock-sensitive -- the zoo
+    reduction must not collapse everything to the floor like make_smoke."""
+    table = load_roofline()
+    betas = [table.beta(a, "prefill") for a in table.archs()]
+    assert max(betas) > 0.3
+    assert sum(b > 0.2 for b in betas) >= 4
+
+
+# ----------------------------------------------------------- golden pin
+def test_golden_pin_gemma2():
+    """The committed gemma2-2b rows match the golden copy bit-for-bit
+    (timing fields excluded): same jax pin -> same artifact."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    table = load_roofline()
+    for grow in golden["rows"]:
+        row = table.get(grow["arch"], grow["phase"])
+        for k, v in grow.items():
+            if k in TIMING_FIELDS:
+                continue
+            assert row[k] == v, f"{grow['phase']}.{k}: {row[k]} != {v}"
+
+
+# ------------------------------------------------------- beta derivation
+def test_beta_from_terms_worked_example():
+    """The docs/ROOFLINE.md worked example, verbatim."""
+    # memory-bound: compute 2 ms, memory 8 ms, collectives 1 ms
+    assert beta_from_terms(0.002, 0.008, 0.001) == pytest.approx(0.25)
+    # compute-bound step stretches linearly
+    assert beta_from_terms(0.008, 0.002, 0.001) == 1.0
+    # floor: a fully memory-bound step keeps residual clock sensitivity
+    assert beta_from_terms(0.0001, 0.1, 0.0) == BETA_FLOOR
+    assert beta_from_terms(0.0, 0.0, 0.0) == 1.0      # degenerate: no data
+
+
+def test_beta_floor_is_configurable():
+    assert beta_from_terms(0.0001, 0.1, 0.0, floor=0.2) == 0.2
+    assert beta_from_terms(0.09, 0.1, 0.0, floor=0.2) == pytest.approx(0.9)
+
+
+# ------------------------------------------------- roofline-fed profiles
+def test_model_profiles_are_measured_not_hand_set():
+    """Fresh checkout: no synthetic fallback. Decode flops stay anchored;
+    betas and the prefill:decode ratio come from the table."""
+    table = load_roofline()
+    for name, prof in MODEL_PROFILES.items():
+        hand = _HAND_SET_PROFILES[name]
+        assert prof.arch == FAMILY_ARCHS[name]
+        assert prof.decode_flops_per_token == DECODE_FLOPS_ANCHORS[name]
+        assert prof.decode_beta == table.beta(prof.arch, "decode")
+        assert prof.prefill_beta == table.beta(prof.arch, "prefill")
+        assert prof.prefill_beta != hand.prefill_beta or \
+            prof.decode_beta != hand.decode_beta
+        ratio = (table.flops_per_token(prof.arch, "prefill")
+                 / table.flops_per_token(prof.arch, "decode"))
+        assert prof.prefill_flops_per_token == pytest.approx(
+            prof.decode_flops_per_token * ratio)
+    assert MODEL_PROFILES == profiles_from_roofline(table)
+
+
+def test_profile_for_arch_every_zoo_member():
+    table = load_roofline()
+    for arch in table.archs():
+        prof = profile_for_arch(arch, table)
+        assert prof.name == prof.arch == arch
+        assert prof.decode_flops_per_token in DECODE_FLOPS_ANCHORS.values()
+        assert prof.decode_beta == table.beta(arch, "decode")
+        assert prof.prefill_beta == table.beta(arch, "prefill")
+
+
+def test_roofline_cost_model_kind_betas():
+    table = load_roofline()
+    cm = roofline_cost_model("gemma2-2b", table=table)
+    assert cm.beta("TRAIN") == table.beta("gemma2-2b", "train")
+    assert cm.beta("PREFILL") == table.beta("gemma2-2b", "prefill")
+    assert cm.beta("DECODE") == table.beta("gemma2-2b", "decode")
+    assert cm.beta("CLOCK") == 0.0
+
+
+def test_table_unknown_cell_raises():
+    table = load_roofline()
+    with pytest.raises(KeyError, match="no roofline row"):
+        table.get("not-a-model", "train")
+
+
+def test_legacy_schema_rejected(tmp_path):
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text(json.dumps([{"arch": "x", "mesh": "16x16"}]))
+    with pytest.raises(ValueError, match="roofline/v2"):
+        RooflineTable.load(str(legacy))
+
+
+# ------------------------------------------- three-engine differential
+@pytest.mark.parametrize("arch", ["gemma2-2b", "nemotron-4-340b",
+                                  "mamba2-370m"])
+def test_three_engines_agree_under_roofline_betas(arch):
+    """Roofline-informed betas enter planning purely through `CostModel`
+    -- every strategy's plan must agree bit-identically across
+    simulate / simulate_reference / simulate_fleet."""
+    profile = profile_for_arch(arch)
+    cost = serving_cost_model(profile)
+    assert cost.beta("PREFILL") == profile.prefill_beta
+    assert cost.beta("DECODE") == profile.decode_beta
+    trace = make_trace("diurnal", rate_rps=6.0, duration_s=6.0, seed=1)
+    sg = build_serving_graph(trace, n_servers=2, step_period_s=0.25,
+                             cost=cost, profile=profile)
+    machine = serving_machine(make_server_proc(), 2)
+    names = registered_strategies()
+    cfg = StrategyConfig(plan_search_rounds=1, plan_search_lanes=16,
+                         replan_every=8, slo_latency_s=sg.horizon_s + 2.0)
+    ctx = PlanContext(sg.graph, machine, cost, cfg)
+    plans = [get_strategy(n).plan(ctx) for n in names]
+    refs = []
+    for name, plan in zip(names, plans):
+        ref = simulate_reference(sg.graph, machine, cost, plan)
+        fast = simulate(sg.graph, machine, cost, plan)
+        np.testing.assert_array_equal(fast.start, ref.start, err_msg=name)
+        np.testing.assert_array_equal(fast.finish, ref.finish, err_msg=name)
+        assert fast.total_energy_j() == pytest.approx(
+            ref.total_energy_j(), rel=1e-9), name
+        refs.append(ref)
+    fleet = simulate_fleet(sg.graph, machine, cost, plans, cores_per_node=1)
+    for i, (name, ref) in enumerate(zip(names, refs)):
+        np.testing.assert_array_equal(fleet.start[i], ref.start,
+                                      err_msg=name)
+        np.testing.assert_array_equal(fleet.finish[i], ref.finish,
+                                      err_msg=name)
+
+
+def test_lower_beta_never_raises_strategy_energy():
+    """Sanity direction: with the measured (lower) decode beta, downclocked
+    decode finishes no later and costs no more energy than under the old
+    hand-set beta -- on the same plan."""
+    import dataclasses
+    measured = MODEL_PROFILES["dense"]
+    hand = _HAND_SET_PROFILES["dense"]
+    # same flops (isolate the beta effect)
+    hand = dataclasses.replace(
+        hand, prefill_flops_per_token=measured.prefill_flops_per_token,
+        decode_flops_per_token=measured.decode_flops_per_token)
+    trace = make_trace("diurnal", rate_rps=6.0, duration_s=6.0, seed=1)
+    machine = serving_machine(make_server_proc(), 2)
+    results = {}
+    for label, prof in (("measured", measured), ("hand", hand)):
+        cost = serving_cost_model(prof)
+        sg = build_serving_graph(trace, n_servers=2, step_period_s=0.25,
+                                 cost=cost, profile=prof)
+        ctx = PlanContext(sg.graph, machine, cost, StrategyConfig())
+        plan = get_strategy("algorithmic").plan(ctx)
+        results[label] = simulate(sg.graph, machine, cost, plan)
+    assert results["measured"].total_energy_j() <= \
+        results["hand"].total_energy_j() + 1e-9
+    assert results["measured"].makespan <= results["hand"].makespan + 1e-9
+
+
+# ------------------------------------------------------- regeneration
+@pytest.mark.slow
+def test_zoo_regenerates_one_arch_consistently(tmp_path):
+    """`python -m repro.launch.zoo --arch gemma2-2b` in a fresh process
+    reproduces the committed rows (the CI drift gate, one arch)."""
+    out = tmp_path / "one.json"
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.zoo", "--arch", "gemma2-2b",
+         "--out", str(out)], check=True, env=env, cwd=REPO, timeout=600)
+    fresh = {r["phase"]: r for r in json.load(out.open())["rows"]}
+    table = load_roofline()
+    for phase in PHASES:
+        committed = table.get("gemma2-2b", phase)
+        for k, v in committed.items():
+            if k in TIMING_FIELDS:
+                continue
+            got = fresh[phase][k]
+            if isinstance(v, float):
+                assert math.isclose(got, v, rel_tol=0.05, abs_tol=1e-12), \
+                    f"{phase}.{k}: {got} vs {v}"
+            else:
+                assert got == v, f"{phase}.{k}: {got} vs {v}"
