@@ -17,13 +17,17 @@ from repro.core.dag import build_dag
 from repro.core.energy_model import (MachineModel, make_big_little,
                                      make_processor, make_tpu_mixed,
                                      scale_processor)
-from repro.core.scheduler import CostModel
-from repro.core.strategies import evaluate_strategies, registered_strategies
+from repro.core.scheduler import CostModel, simulate
+from repro.core.strategies import (PlanContext, evaluate_strategies,
+                                   get_strategy, registered_strategies)
 
 FACT = "cholesky"
 N_TILES = 16
 TILE = 512
 GRID = (4, 4)              # 16 ranks; ratios below partition them
+# migration sweep: inter-rank bandwidths (GB/s) from a congested fabric to
+# a fat one; the 5.0 middle point is the CostModel default
+LINK_SPEEDS = (1.25, 5.0, 20.0)
 
 
 def machines() -> dict[str, MachineModel]:
@@ -66,6 +70,39 @@ def run(n_tiles: int = N_TILES, tile: int = TILE, grid=GRID):
     return rows
 
 
+def migration_sweep(n_tiles: int = 8, tile: int = 256, grid=(2, 2)):
+    """tx_migrate vs the frozen-mapping tx across big:LITTLE ratios and
+    link speeds: how much energy moving slack-heavy update tasks off the
+    LITTLE ranks recovers, and at what simulated slowdown.
+
+    The DAG is smaller than the main section's (each cell re-plans and
+    fleet-scores migration candidates); savings are vs `tx` on the SAME
+    machine and link, so the number isolates the mapping change itself.
+    """
+    graph = build_dag(FACT, n_tiles, tile, grid)
+    rows = []
+    for ratio in ("bl_3_1", "bl_1_1", "bl_1_3"):
+        machine = machines()[ratio]
+        for bw in LINK_SPEEDS:
+            cost = CostModel(comm_bandwidth_gbs=bw)
+            ctx = PlanContext(graph, machine, cost)
+            plan_tx = get_strategy("tx").plan(ctx)
+            plan_mig = get_strategy("tx_migrate").plan(ctx)
+            s_tx = simulate(graph, machine, cost, plan_tx)
+            s_mig = simulate(graph, machine, cost, plan_mig)
+            moved = 0 if plan_mig.task_owners is None else sum(
+                1 for t, o in zip(graph.tasks, plan_mig.task_owners)
+                if t.owner != o)
+            rows.append({
+                "machine": ratio, "bandwidth_gbs": bw, "n_moved": moved,
+                "saved_vs_tx_pct": 100.0 * (1.0 - s_mig.total_energy_j()
+                                            / s_tx.total_energy_j()),
+                "slowdown_vs_tx_pct": 100.0 * (s_mig.makespan
+                                               / s_tx.makespan - 1.0),
+            })
+    return rows
+
+
 def bench() -> tuple[list[str], dict]:
     rows = run()
     out = ["machine,strategy,makespan_s,energy_j,slowdown_pct,"
@@ -89,6 +126,20 @@ def bench() -> tuple[list[str], dict]:
                 round(r["base_energy_ratio"], 4)
             metrics[f"{r['machine']}.base_makespan_vs_homog"] = \
                 round(r["base_makespan_ratio"], 4)
+    # migration sweep: trajectory-only metrics ("migrate" in the key keeps
+    # them out of the bench_compare gate -- the win depends on ratio and
+    # link speed, so it is recorded, not gated)
+    out.append("")
+    out.append("machine,bandwidth_gbs,n_moved,migrate_saved_vs_tx_pct,"
+               "migrate_slowdown_vs_tx_pct")
+    for r in migration_sweep():
+        out.append(f"{r['machine']},{r['bandwidth_gbs']:g},{r['n_moved']},"
+                   f"{r['saved_vs_tx_pct']:.2f},"
+                   f"{r['slowdown_vs_tx_pct']:.2f}")
+        cell = f"{r['machine']}.bw{r['bandwidth_gbs']:g}"
+        metrics[f"{cell}.migrate_saved_vs_tx_pct"] = \
+            round(r["saved_vs_tx_pct"], 3)
+        metrics[f"{cell}.migrate_n_moved"] = r["n_moved"]
     return out, metrics
 
 

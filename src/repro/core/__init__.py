@@ -9,6 +9,12 @@ Public API:
     MachineModel, as_machine                -- per-rank processor assignment
     make_big_little, make_tpu_mixed         -- canned asymmetric machines
     scale_processor                         -- derated/overclocked siblings
+    LinkModel, comm_low_power_w             -- per-rank-pair link bandwidth /
+                                               transfer energy (trivial default
+                                               reproduces uniform free comm)
+    plan_comm_energy_j                      -- wire energy of a mapping
+    migration_mappings, TxMigrateStrategy   -- task migration off LITTLE
+                                               ranks (the tx_migrate strategy)
     two_gear_split, two_gear_split_batch    -- Ishihara-Yasuura frequency split
     register_strategy, Strategy             -- pluggable strategy registry
     PlanContext, registered_strategies      -- shared planning inputs + listing
@@ -49,18 +55,20 @@ from .dag import (DAG_BUILDERS, PANEL_KINDS, TaskGraph, Task,
                   build_lu_dag, build_qr_dag, factorization_flops)
 from .dvfs import (duration_at, plan_energy_j, two_gear_split,
                    two_gear_split_batch, two_gear_split_batch_by_table)
-from .energy_model import (GEAR_TABLES, Gear, MachineModel, ProcessorModel,
-                           as_machine, make_big_little, make_processor,
+from .energy_model import (GEAR_TABLES, Gear, LinkModel, MachineModel,
+                           ProcessorModel, as_machine, comm_low_power_w,
+                           make_big_little, make_processor,
                            make_tpu_like, make_tpu_mixed, max_slack_ratio,
                            scale_processor, strategy_gap_terms,
                            verify_worked_example)
 from .fleet import FleetSchedule, simulate_fleet
 from .scheduler import (CostModel, RankSegment, Schedule, StrategyPlan,
-                        machine_nodal_const_power_w, simulate,
-                        simulate_reference)
+                        machine_nodal_const_power_w, plan_comm_energy_j,
+                        simulate, simulate_reference)
 from .strategies import (STRATEGIES, PlanContext, ResidualPlanContext,
                          Strategy, StrategyConfig, StrategyResult,
-                         evaluate_strategies, get_strategy, make_plan,
+                         TxMigrateStrategy, evaluate_strategies, get_strategy,
+                         make_plan, migration_mappings, migration_plans,
                          register_strategy, registered_strategies)
 from .roofline_model import (BETA_FLOOR, RooflineTable, beta_from_terms,
                              load_roofline, roofline_cost_model)
@@ -95,15 +103,17 @@ __all__ = [
     "factorization_flops",
     "duration_at", "plan_energy_j", "two_gear_split", "two_gear_split_batch",
     "two_gear_split_batch_by_table",
-    "GEAR_TABLES", "Gear", "MachineModel", "ProcessorModel", "as_machine",
+    "GEAR_TABLES", "Gear", "LinkModel", "MachineModel", "ProcessorModel",
+    "as_machine", "comm_low_power_w",
     "make_big_little", "make_processor", "make_tpu_like", "make_tpu_mixed",
     "max_slack_ratio", "scale_processor", "strategy_gap_terms",
     "verify_worked_example",
     "CostModel", "FleetSchedule", "RankSegment", "Schedule", "StrategyPlan",
-    "machine_nodal_const_power_w", "simulate", "simulate_fleet",
-    "simulate_reference",
+    "machine_nodal_const_power_w", "plan_comm_energy_j", "simulate",
+    "simulate_fleet", "simulate_reference",
     "STRATEGIES", "PlanContext", "Strategy", "StrategyConfig",
-    "StrategyResult", "evaluate_strategies", "get_strategy", "make_plan",
+    "StrategyResult", "TxMigrateStrategy", "evaluate_strategies",
+    "get_strategy", "make_plan", "migration_mappings", "migration_plans",
     "register_strategy", "registered_strategies",
     "BETA_FLOOR", "RooflineTable", "beta_from_terms", "load_roofline",
     "roofline_cost_model",

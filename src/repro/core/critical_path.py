@@ -41,6 +41,22 @@ import numpy as np
 from .dag import TaskGraph
 
 
+def _edge_delays(graph: TaskGraph, src: np.ndarray, dst: np.ndarray,
+                 cross: np.ndarray, comm_time) -> np.ndarray:
+    """Per-edge transfer delays for either comm-pricing form.
+
+    A scalar `comm_time` (the legacy uniform model) is broadcast over
+    cross-rank edges exactly as before -- bit-identical. An (R, R) matrix
+    (`CostModel.comm_cost` under a non-trivial `LinkModel`) is gathered
+    per edge by owner pair; its zero diagonal makes the cross mask
+    redundant.
+    """
+    if np.ndim(comm_time) == 0:
+        return np.where(cross, comm_time, 0.0)
+    owner = np.asarray([t.owner for t in graph.tasks], dtype=np.int64)
+    return np.asarray(comm_time)[owner[src], owner[dst]]
+
+
 @dataclasses.dataclass
 class CpResult:
     """Earliest/latest times and float of every task over the bare DAG."""
@@ -64,8 +80,10 @@ def cp_analysis(graph: TaskGraph, durations: np.ndarray,
         The task DAG (only its data edges are used -- no rank contention).
     durations : np.ndarray
         Per-task durations, indexed by task id.
-    comm_time : float
-        Transfer delay charged on every cross-rank dependency edge.
+    comm_time : float or np.ndarray
+        Transfer delay charged on cross-rank dependency edges: a uniform
+        scalar, or the (R, R) per-rank-pair matrix from
+        `CostModel.comm_cost`.
 
     Returns
     -------
@@ -77,7 +95,7 @@ def cp_analysis(graph: TaskGraph, durations: np.ndarray,
     n = len(graph.tasks)
     durations = np.asarray(durations, dtype=float)
     src, dst, cross, bounds = graph.dep_edges_by_level()
-    delay = np.where(cross, comm_time, 0.0)
+    delay = _edge_delays(graph, src, dst, cross, comm_time)
     n_levels = len(bounds) - 1
 
     # forward pass: earliest starts, one scatter-max per DAG level
@@ -114,8 +132,9 @@ def schedule_slack(start: np.ndarray, finish: np.ndarray,
         Per-task times of a concrete schedule, indexed by task id.
     graph : TaskGraph
         The scheduled task graph (data edges + per-rank program order).
-    comm_time : float
-        Transfer delay charged on cross-rank dependency edges.
+    comm_time : float or np.ndarray
+        Transfer delay on cross-rank dependency edges: a uniform scalar
+        or the (R, R) per-rank-pair matrix from `CostModel.comm_cost`.
 
     Returns
     -------
@@ -131,7 +150,7 @@ def schedule_slack(start: np.ndarray, finish: np.ndarray,
     # DAG successors: producer must deliver by successor's start
     src, dst, cross = graph.dep_edge_arrays()
     if len(src):
-        avail = start[dst] - np.where(cross, comm_time, 0.0)
+        avail = start[dst] - _edge_delays(graph, src, dst, cross, comm_time)
         np.minimum.at(slack, src, avail - finish[src])
     # same-rank program order: finishing later would push the next local task
     prev, nxt = graph.rank_order_pairs()
@@ -211,8 +230,9 @@ def residual_schedule_times(graph: TaskGraph, durations: np.ndarray,
         The full task graph (the residual subgraph is selected by mask).
     durations : np.ndarray
         Per-task top-gear durations; only pending entries are read.
-    comm_time : float
-        Transfer delay charged on cross-rank dependency edges.
+    comm_time : float or np.ndarray
+        Transfer delay on cross-rank dependency edges: a uniform scalar
+        or the (R, R) per-rank-pair matrix from `CostModel.comm_cost`.
     frozen : np.ndarray, optional
         Boolean mask of already-executed tasks (default: none). Must be
         dependency-closed and a per-rank program-order prefix
@@ -250,6 +270,8 @@ def residual_schedule_times(graph: TaskGraph, durations: np.ndarray,
     # forward pass in tid order (tids are topological and per-rank program
     # order is tid order), same max() formula as the simulator engines --
     # bit-identical to the baseline schedule when nothing is frozen
+    cm = None if np.ndim(comm_time) == 0 \
+        else np.asarray(comm_time).tolist()
     rank_free = [0.0] * graph.n_ranks
     for t in graph.tasks:
         if frozen[t.tid]:
@@ -258,8 +280,9 @@ def residual_schedule_times(graph: TaskGraph, durations: np.ndarray,
             continue
         ready = rank_free[t.owner]
         for d in t.deps:
-            arr = finish[d] + (comm_time if graph.tasks[d].owner != t.owner
-                               else 0.0)
+            o = graph.tasks[d].owner
+            arr = finish[d] + ((comm_time if o != t.owner else 0.0)
+                               if cm is None else cm[o][t.owner])
             if arr > ready:
                 ready = arr
         start[t.tid] = ready
@@ -280,8 +303,9 @@ def residual_schedule_slack(start: np.ndarray, finish: np.ndarray,
         Hybrid per-task times (see `residual_schedule_times`).
     graph : TaskGraph
         The full task graph.
-    comm_time : float
-        Transfer delay charged on cross-rank dependency edges.
+    comm_time : float or np.ndarray
+        Transfer delay on cross-rank dependency edges (scalar or matrix,
+        as for `schedule_slack`).
     pending : np.ndarray, optional
         Boolean mask of not-yet-started tasks (default: all). Frozen
         tasks' history cannot be re-planned, so their entries are zeroed.

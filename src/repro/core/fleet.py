@@ -49,7 +49,8 @@ import numpy as np
 from .dag import TaskGraph
 from .energy_model import MachineModel, ProcessorModel, as_machine
 from .scheduler import (CostModel, Schedule, StrategyPlan,
-                        machine_nodal_const_power_w, simulate)
+                        _effective_owners, machine_nodal_const_power_w,
+                        plan_comm_energy_j, simulate)
 
 __all__ = ["FleetSchedule", "simulate_fleet"]
 
@@ -75,6 +76,9 @@ class FleetSchedule:
     core_energy_j: np.ndarray    # (B,) integrated core power per lane
     nodal_const_w: np.ndarray    # (B,) constant nodal power per lane
     cores_per_node: int = 16
+    # (B,) wire energy per lane, or None under a trivial LinkModel (the
+    # legacy zero-comm-energy path, kept bit-identical by skipping the add)
+    comm_energy_j: np.ndarray | None = None
 
     @property
     def n_lanes(self) -> int:
@@ -89,13 +93,17 @@ class FleetSchedule:
         return np.zeros(self.finish.shape[0])
 
     def total_energy_j(self) -> np.ndarray:
-        """(B,) core energy + switch energy + nodal constant * makespan.
+        """(B,) core energy + switch energy + nodal constant * makespan,
+        plus per-lane link transfer energy under a non-trivial `LinkModel`.
 
         Lane-for-lane this is `Schedule.total_energy_j()` to 1e-9 relative
         (the documented cross-engine energy tolerance).
         """
-        return (self.core_energy_j + self.switch_energy_j
-                + self.nodal_const_w * self.makespan)
+        total = (self.core_energy_j + self.switch_energy_j
+                 + self.nodal_const_w * self.makespan)
+        if self.comm_energy_j is not None:
+            total = total + self.comm_energy_j
+        return total
 
     def lane(self, i: int) -> Schedule:
         """Materialize lane `i` as a full `Schedule` (debugging escape hatch).
@@ -399,7 +407,43 @@ def simulate_fleet(graph: TaskGraph,
     if src.size and not (src < dst).all():
         raise ValueError("simulate_fleet requires topologically sorted "
                          "task ids (dep tids below consumer tids)")
-    comm = cost.comm_time(graph)
+
+    # -- migration mappings: one wave structure per distinct task->rank map.
+    # The common case (no plan overrides its owners) stays a single pass;
+    # mixed-mapping batches are partitioned by mapping, each group runs one
+    # pass, and the lane rows are stitched back in the original order.
+    keys = [None if (o := _effective_owners(graph, p)) is None else tuple(o)
+            for p in plans]
+    if len(set(keys)) > 1:
+        groups: dict[object, list[int]] = {}
+        for i, k in enumerate(keys):
+            groups.setdefault(k, []).append(i)
+        start2 = np.zeros((b, n))
+        finish2 = np.zeros((b, n))
+        sw_cnt2 = np.zeros(b, dtype=np.int64)
+        sw_e2 = np.zeros(b)
+        core_e2 = np.zeros(b)
+        nodal2 = np.zeros(b)
+        comm_e2 = np.zeros(b)
+        for lanes in groups.values():
+            sub = simulate_fleet(graph, [lane_machines[i] for i in lanes],
+                                 cost, [plans[i] for i in lanes],
+                                 cores_per_node)
+            idx = np.asarray(lanes, dtype=np.int64)
+            start2[idx] = sub.start
+            finish2[idx] = sub.finish
+            sw_cnt2[idx] = sub.switch_count
+            sw_e2[idx] = sub.switch_energy_j
+            core_e2[idx] = sub.core_energy_j
+            nodal2[idx] = sub.nodal_const_w
+            if sub.comm_energy_j is not None:
+                comm_e2[idx] = sub.comm_energy_j
+        return FleetSchedule(graph, lane_machines, cost, plans, start2,
+                             finish2, sw_cnt2, sw_e2, core_e2, nodal2,
+                             cores_per_node,
+                             None if cost.link.is_trivial else comm_e2)
+    owners_ovr = None if keys[0] is None else list(keys[0])
+    comm_val = cost.comm_cost(graph)
 
     # -- compact processor codes + padded power/switch lookup tables ------
     proc_code: dict[int, int] = {}
@@ -435,9 +479,13 @@ def simulate_fleet(graph: TaskGraph,
     max_slots = counts2d.max(axis=1).tolist() if n else []
 
     tasks = graph.tasks
-    owner = [t.owner for t in tasks]
-    dep_info = [[(d, comm if tasks[d].owner != t.owner else 0.0)
-                 for d in t.deps] for t in tasks]
+    owner = [t.owner for t in tasks] if owners_ovr is None else owners_ovr
+    if isinstance(comm_val, np.ndarray):
+        dep_info = [[(d, float(comm_val[owner[d], owner[t.tid]]))
+                     for d in t.deps] for t in tasks]
+    else:
+        dep_info = [[(d, comm_val if owner[d] != owner[t.tid] else 0.0)
+                     for d in t.deps] for t in tasks]
 
     # -- lane state + accumulators ----------------------------------------
     # fin2d's extra row is the all-zero pad target for dependency gathers
@@ -456,7 +504,12 @@ def simulate_fleet(graph: TaskGraph,
 
     nodal = np.array([machine_nodal_const_power_w(m, n_ranks, cores_per_node)
                       for m in lane_machines])
+    if cost.link.is_trivial:
+        comm_e = None         # legacy zero-comm-energy path, bit-identical
+    else:
+        comm_e = np.full(b, plan_comm_energy_j(graph, cost, owners_ovr))
     return FleetSchedule(graph, lane_machines, cost, plans,
                          np.ascontiguousarray(start2d.T),
                          np.ascontiguousarray(fin2d[:n].T),
-                         sw_cnt, sw_e, core_e, nodal, cores_per_node)
+                         sw_cnt, sw_e, core_e, nodal, cores_per_node,
+                         comm_e)

@@ -48,7 +48,8 @@ import numpy as np
 from .dvfs import duration_at, two_gear_split_arrays
 from .fleet import (_fleet_lane_pass, _proc_tables, _wave_structure,
                     simulate_fleet)
-from .scheduler import StrategyPlan, machine_nodal_const_power_w
+from .scheduler import (StrategyPlan, machine_nodal_const_power_w,
+                        plan_comm_energy_j)
 from .strategies import (PlanContext, get_strategy, register_strategy,
                          registered_strategies)
 
@@ -122,11 +123,20 @@ class CandidateEvaluator:
         self._ovh_any = [False] * n
         self._nodal = machine_nodal_const_power_w(ctx.machine, n_ranks)
 
-        comm = ctx.cost.comm_time(graph)
+        comm_val = ctx.cost.comm_cost(graph)
         tasks = graph.tasks
         self._owner = [t.owner for t in tasks]
-        self._dep_info = [[(d, comm if tasks[d].owner != t.owner else 0.0)
-                           for d in t.deps] for t in tasks]
+        if np.ndim(comm_val):
+            cm = np.asarray(comm_val)
+            self._dep_info = [[(d, float(cm[tasks[d].owner, t.owner]))
+                               for d in t.deps] for t in tasks]
+        else:
+            comm = float(comm_val)
+            self._dep_info = [[(d, comm if tasks[d].owner != t.owner else 0.0)
+                               for d in t.deps] for t in tasks]
+        # wire energy of the (frozen) mapping: a per-lane constant, 0.0
+        # under a trivial LinkModel so the legacy energies stay bit-exact
+        self._comm_e = plan_comm_energy_j(graph, ctx.cost)
         # dependency/rank-chain wave grouping: graph-only, so built once
         self._waves = _wave_structure(n, n_ranks, self._owner,
                                       self._dep_info)
@@ -258,7 +268,8 @@ class CandidateEvaluator:
                 self._start2d[:, :m], self._fin2d[:, :m], rank_free,
                 rank_gear, core_e, sw_e, sw_cnt, waves=self._waves)
             makespan[at:at + m] = mk
-            energy[at:at + m] = core_e + sw_e + self._nodal * mk
+            energy[at:at + m] = core_e + sw_e + self._nodal * mk \
+                + self._comm_e
         return energy, makespan
 
 

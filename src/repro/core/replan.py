@@ -50,6 +50,16 @@ With `replan_every` >= the iteration count the loop degenerates to a
 single wave whose plan IS `tx_online`'s, bit for bit (same seeded noise
 draw, same policy, same realize-on-true-work rescale).
 
+With `StrategyConfig.replan_migrate` on a heterogeneous machine, each
+wave additionally considers re-MAPPING the pending tasks (the
+`migration_mappings` heuristic restricted to not-yet-started work):
+candidate mappings are re-planned under their new owners, realized on the
+true durations, and scored as full composite plans -- committed past plus
+candidate future -- in one batched fleet pass against the
+`tx_migrate_slowdown_cap` makespan bound. Already-committed tasks never
+move. The default (`replan_migrate=False`) path is byte-identical to the
+pre-migration driver.
+
 The composite plan is expressed entirely in the `StrategyPlan` vocabulary
 both engines already implement -- per-task gear segments, per-rank idle
 gears, hidden switches -- so no engine change was needed and the lockstep
@@ -73,10 +83,11 @@ import dataclasses
 import numpy as np
 
 from .dag import TaskGraph
+from .fleet import simulate_fleet
 from .scheduler import StrategyPlan, simulate
 from .strategies import (PlanContext, draw_duration_noise,
-                         realize_on_true_work, register_strategy,
-                         tx_policy_segments)
+                         migration_mappings, realize_on_true_work,
+                         register_strategy, tx_policy_segments)
 
 REPLAN_ANCHORS = ("model", "observed")
 
@@ -92,6 +103,9 @@ class WaveRecord:
     residual_slack_s: float       # total slack the planner saw for pending
     max_drift_s: float            # max |observed - reconciled model| finish
     #                               over the executed prefix (0.0 on wave 0)
+    n_migrated: int = 0           # pending tasks re-mapped this wave
+    #                               (only with cfg.replan_migrate on a
+    #                               heterogeneous machine)
 
 
 @dataclasses.dataclass
@@ -177,12 +191,16 @@ def replan_tx(ctx: PlanContext, every: int | None = None,
     graph = ctx.graph
     n = ctx.n_tasks
     idle, rank_idle = ctx._idle_gears(-1)
+    migrate = bool(cfg.replan_migrate) and not ctx.is_homogeneous
+    owner0 = [t.owner for t in graph.tasks]
 
-    def compose(segs: list[list]) -> StrategyPlan:
+    def compose(segs: list[list],
+                owners: "list[int] | None" = None) -> StrategyPlan:
         return StrategyPlan("tx_replan", segs, idle_gear=idle,
                             per_task_overhead=np.zeros(n),
                             hide_switch_in_wait=True,
-                            rank_idle_gears=rank_idle)
+                            rank_idle_gears=rank_idle,
+                            task_owners=owners)
 
     wave_id = iteration_waves(graph, every)
     if not n:
@@ -195,6 +213,16 @@ def replan_tx(ctx: PlanContext, every: int | None = None,
     d_known = d_true * (1.0 + eps)
     iters = np.asarray([t.k for t in graph.tasks], dtype=np.int64)
 
+    # migrating state: the mapping committed so far (frozen tasks never
+    # move) and the relative estimate error, zeroed as tasks freeze so
+    # re-deriving d_known under a NEW mapping keeps the reconciled past
+    eps_cur = eps.copy()
+    owners_cur = list(owner0)
+    mapped_ctx = ctx
+
+    def owners_arg() -> "list[int] | None":
+        return None if owners_cur == owner0 else list(owners_cur)
+
     n_waves = int(wave_id.max()) + 1
     segments: list[list] = [[] for _ in range(n)]
     frozen = np.zeros(n, dtype=bool)
@@ -203,12 +231,17 @@ def replan_tx(ctx: PlanContext, every: int | None = None,
     for w in range(n_waves):
         in_wave = wave_id == w
         pending = ~frozen
-        est = ctx.with_durations(d_known)
+        if migrate:
+            # durations/estimates referenced to the CURRENT mapping
+            d_true = mapped_ctx.durations
+            d_known = d_true * (1.0 + eps_cur)
+        est = mapped_ctx.with_durations(d_known)
         if not frozen.any():
             # wave 0 has no past to anchor on: the view IS the estimate
             # context, so the first wave's decisions match tx_online's
             view = est
             drift = 0.0
+            pin = None
         else:
             model_finish = np.asarray(est.baseline.finish, dtype=float)
             drift = float(np.abs(observed[frozen]
@@ -217,6 +250,51 @@ def replan_tx(ctx: PlanContext, every: int | None = None,
             view = est.restricted_to(pending, pin)
         segs_est = tx_policy_segments(view)
         segs_true = realize_on_true_work(segs_est, d_true, d_known)
+        n_migrated = 0
+        if migrate:
+            # feedback channel 2: candidate re-mappings of the pending
+            # tasks, scored as full composite plans (committed past +
+            # candidate future) in one batched fleet pass on the true
+            # machine; keep-current sits in lane 0 and wins ties
+            mappings = [m for m in migration_mappings(view, movable=pending)
+                        if m != owners_cur]
+            if mappings:
+                plans = [compose([segments[i] if frozen[i] else segs_true[i]
+                                  for i in range(n)], owners=owners_arg())]
+                realized = [segs_true]
+                for m in mappings:
+                    mctx = ctx.with_owners(m)
+                    dt = mctx.durations
+                    dk = dt * (1.0 + eps_cur)
+                    mest = mctx.with_durations(dk)
+                    if pin is None:
+                        mview = mest
+                    else:
+                        mpin = observed if anchor == "observed" else \
+                            np.asarray(mest.baseline.finish, dtype=float)
+                        mview = mest.restricted_to(pending, mpin)
+                    st = realize_on_true_work(tx_policy_segments(mview),
+                                              dt, dk)
+                    realized.append(st)
+                    plans.append(compose(
+                        [segments[i] if frozen[i] else st[i]
+                         for i in range(n)], owners=list(m)))
+                fleet = simulate_fleet(graph, ctx.proc, ctx.cost, plans)
+                energies, makespans = fleet.total_energy_j(), fleet.makespan
+                cap = ctx.makespan_cap(cfg.tx_migrate_slowdown_cap)
+                best = 0
+                for i in range(1, len(plans)):
+                    if makespans[i] <= cap + 1e-12 and \
+                            energies[i] < energies[best]:
+                        best = i
+                if best:
+                    m = mappings[best - 1]
+                    n_migrated = sum(1 for a, b in zip(m, owners_cur)
+                                     if a != b)
+                    owners_cur = list(m)
+                    mapped_ctx = ctx.with_owners(owners_cur)
+                    segs_true = realized[best]
+                    d_true = mapped_ctx.durations
         for tid in np.flatnonzero(in_wave):
             segments[tid] = segs_true[tid]
         waves.append(WaveRecord(
@@ -226,7 +304,8 @@ def replan_tx(ctx: PlanContext, every: int | None = None,
             n_committed=int(in_wave.sum()),
             n_observed=int(frozen.sum()),
             residual_slack_s=float(view.tds.slack_s[pending].sum()),
-            max_drift_s=drift))
+            max_drift_s=drift,
+            n_migrated=n_migrated))
         frozen |= in_wave
         if w + 1 < n_waves:
             # replay: realize the committed prefix on the TRUE durations.
@@ -235,14 +314,15 @@ def replan_tx(ctx: PlanContext, every: int | None = None,
             # same-rank predecessors, so their realized times are exactly
             # what the final composite schedule will produce.
             partial = compose([segments[i] if frozen[i] else []
-                               for i in range(n)])
+                               for i in range(n)], owners=owners_arg())
             sched = simulate(graph, ctx.proc, ctx.cost, partial)
             observed = np.asarray(sched.finish, dtype=float)
             # feedback channel 1: each observed finish reveals the frozen
             # task's true top-gear duration (d(f) is linear in work, and
             # the executed gears are known), so the belief snaps to truth
             d_known = np.where(frozen, d_true, d_known)
-    return ReplanOutcome(compose(segments), waves)
+            eps_cur = np.where(frozen, 0.0, eps_cur)
+    return ReplanOutcome(compose(segments, owners=owners_arg()), waves)
 
 
 @register_strategy

@@ -61,7 +61,8 @@ import numpy as np
 
 from .dag import KIND_EFFICIENCY, TaskGraph
 from .dvfs import Segment
-from .energy_model import Gear, MachineModel, ProcessorModel, as_machine
+from .energy_model import (Gear, LinkModel, MachineModel, ProcessorModel,
+                           as_machine)
 
 
 @dataclasses.dataclass
@@ -75,6 +76,9 @@ class CostModel:
     freq_sensitivity: dict[str, float] = dataclasses.field(default_factory=dict)
     comm_bandwidth_gbs: float = 5.0         # 40 Gb/s InfiniBand
     comm_latency_s: float = 5e-6
+    # per-rank-pair link overrides; the trivial default keeps the legacy
+    # scalar comm path (bit-identical, see LinkModel)
+    link: LinkModel = dataclasses.field(default_factory=LinkModel)
 
     def beta(self, kind: str) -> float:
         """Frequency sensitivity of a task kind (1.0 = compute-bound)."""
@@ -112,6 +116,35 @@ class CostModel:
         return graph.tile_bytes / (self.comm_bandwidth_gbs * 1e9) \
             + self.comm_latency_s
 
+    def comm_cost(self, graph: TaskGraph) -> "float | np.ndarray":
+        """Per-edge transfer pricing: the legacy scalar or a link matrix.
+
+        With the trivial default `link`, returns the scalar
+        `comm_time(graph)` -- the engines and analyses then take their
+        original uniform-comm code paths, bit-identical to the pre-link
+        implementation. A non-trivial `LinkModel` yields the (R, R)
+        per-rank-pair transfer-time matrix (zero diagonal) instead; every
+        consumer (`simulate`, `simulate_reference`, `simulate_fleet`,
+        `cp_analysis`, `schedule_slack`, `analyze_tds`, the residual
+        analyses, and `CandidateEvaluator`) accepts both forms.
+        """
+        if self.link.is_trivial:
+            return self.comm_time(graph)
+        return self.link.time_matrix(graph.n_ranks, graph.tile_bytes,
+                                     self.comm_bandwidth_gbs,
+                                     self.comm_latency_s)
+
+    def comm_energy_matrix(self, graph: TaskGraph) -> "np.ndarray | None":
+        """(R, R) wire energy per transferred tile, or None when trivial.
+
+        None (the trivial-link default) means every transfer is free --
+        the engines then skip comm-energy accounting entirely, keeping
+        totals bit-identical to the pre-link implementation.
+        """
+        if self.link.is_trivial:
+            return None
+        return self.link.energy_matrix(graph.n_ranks, graph.tile_bytes)
+
 
 @dataclasses.dataclass
 class RankSegment:
@@ -140,6 +173,7 @@ class Schedule:
     switch_count: int
     switch_energy_j: float
     cores_per_node: int = 16
+    comm_energy_j: float = 0.0     # wire energy of cross-rank transfers
 
     @classmethod
     def from_rank_segments(cls, graph: TaskGraph,
@@ -147,7 +181,8 @@ class Schedule:
                            start: np.ndarray, finish: np.ndarray,
                            rank_segments: list[list[RankSegment]],
                            switch_count: int, switch_energy_j: float,
-                           cores_per_node: int = 16) -> "Schedule":
+                           cores_per_node: int = 16,
+                           comm_energy_j: float = 0.0) -> "Schedule":
         """Build from the classic list-of-RankSegment representation."""
         cols: list[SegColumns] = [
             (np.asarray([s.t0 for s in segs]),
@@ -157,7 +192,7 @@ class Schedule:
             for segs in rank_segments
         ]
         return cls(graph, proc, start, finish, cols, switch_count,
-                   switch_energy_j, cores_per_node)
+                   switch_energy_j, cores_per_node, comm_energy_j)
 
     @functools.cached_property
     def machine(self) -> MachineModel:
@@ -233,9 +268,12 @@ class Schedule:
         return e
 
     def total_energy_j(self) -> float:
-        """Core energy + gear-switch energy + nodal constant * makespan."""
+        """Core energy + gear-switch energy + nodal constant * makespan,
+        plus the link transfer energy (exactly 0.0 under a trivial
+        `LinkModel`, so the legacy total is preserved bitwise)."""
         return (self.core_energy_j() + self.switch_energy_j
-                + self.nodal_const_power_w() * self.makespan)
+                + self.nodal_const_power_w() * self.makespan
+                + self.comm_energy_j)
 
     def power_trace(self, times: np.ndarray,
                     nodes: Sequence[int] | None = None) -> np.ndarray:
@@ -325,6 +363,15 @@ class StrategyPlan:
     cannot name "each rank's lowest gear" when ladders differ. Leaving
     `rank_idle_gears` as None (the homogeneous case) keeps the plan
     byte-for-byte what the legacy single-processor planner emitted.
+
+    `task_owners` is the migration axis: a per-task rank override that
+    re-maps tasks away from `graph.tasks[tid].owner` (the frozen
+    block-cyclic layout). All three engines honor it in lockstep --
+    per-rank program order becomes tid order within each *effective*
+    rank, cross-rank comm is priced between effective owners, and every
+    segment gear must come from the effective owner's ladder. None (the
+    default) keeps the graph's own mapping and is byte-for-byte the
+    pre-migration plan.
     """
 
     name: str
@@ -334,12 +381,65 @@ class StrategyPlan:
     hide_switch_in_wait: bool                 # pre-armed switches (offline plan)
     min_halt_window_s: float = 0.0            # don't downshift for tiny gaps
     rank_idle_gears: Sequence[Gear] | None = None   # per-rank idle override
+    task_owners: Sequence[int] | None = None  # migration: per-task rank
 
     def idle_gear_for(self, rank: int) -> Gear:
         """The gear rank `rank` waits at (per-rank override or global)."""
         if self.rank_idle_gears is not None:
             return self.rank_idle_gears[rank]
         return self.idle_gear
+
+
+def _effective_owners(graph: TaskGraph,
+                      plan: StrategyPlan) -> list[int] | None:
+    """The plan's validated per-task rank mapping, or None for the graph's
+    own (no-migration) layout. Shared by all three engines."""
+    if plan.task_owners is None:
+        return None
+    owners = [int(o) for o in np.asarray(plan.task_owners).tolist()]
+    if len(owners) != len(graph.tasks):
+        raise ValueError(f"task_owners has {len(owners)} entries for "
+                         f"{len(graph.tasks)} tasks")
+    n_ranks = graph.n_ranks
+    for o in owners:
+        if not 0 <= o < n_ranks:
+            raise ValueError(f"task_owners rank {o} outside [0, {n_ranks})")
+    return owners
+
+
+def _owner_program_order(graph: TaskGraph,
+                         owners: Sequence[int]) -> list[list[int]]:
+    """Per-rank program order under a migration mapping: tid order within
+    each effective rank (tids are emitted in SPMD loop order, so this is
+    exactly how `TaskGraph.tasks_by_rank` orders the frozen layout)."""
+    per = [[] for _ in range(graph.n_ranks)]
+    for t in graph.tasks:
+        per[owners[t.tid]].append(t.tid)
+    return per
+
+
+def plan_comm_energy_j(graph: TaskGraph, cost: CostModel,
+                       owners: Sequence[int] | None = None) -> float:
+    """Total wire energy of one execution of `graph` under `cost.link`.
+
+    Sums the link's per-transfer energy over every dependency edge whose
+    endpoints live on different (effective) ranks; `owners` supplies a
+    migration mapping (default: the graph's own layout). Exactly 0.0
+    with the trivial default `LinkModel` -- the engines add this into
+    `Schedule.total_energy_j` without perturbing the legacy total.
+    """
+    em = cost.comm_energy_matrix(graph)
+    if em is None:
+        return 0.0
+    src, dst, _ = graph.dep_edge_arrays()
+    if not len(src):
+        return 0.0
+    if owners is None:
+        own = np.asarray([t.owner for t in graph.tasks], dtype=np.int64)
+    else:
+        own = np.asarray(owners, dtype=np.int64)
+    # the matrix diagonal is zero, so owner-local edges charge nothing
+    return float(em[own[src], own[dst]].sum())
 
 
 def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
@@ -374,11 +474,17 @@ def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
     """
     n = len(graph.tasks)
     n_ranks = graph.n_ranks
-    comm = cost.comm_time(graph)
+    comm_val = cost.comm_cost(graph)
+    if isinstance(comm_val, np.ndarray):
+        comm, cm = 0.0, comm_val.tolist()    # per-pair path (nested lists:
+    else:                                    # scalar access is the hot loop)
+        comm, cm = comm_val, None            # legacy uniform path, verbatim
     machine = as_machine(proc)
     procs = machine.rank_procs(n_ranks)
 
-    per_rank = graph.tasks_by_rank()
+    owners_ovr = _effective_owners(graph, plan)
+    per_rank = graph.tasks_by_rank() if owners_ovr is None \
+        else _owner_program_order(graph, owners_ovr)
     ptr = [0] * n_ranks
     rank_free = [0.0] * n_ranks
     rank_gear = [0] * n_ranks                  # gear indices; 0 = top gear
@@ -407,7 +513,7 @@ def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
     # flat per-task state in plain Python lists: scalar access is the hot
     # path and list indexing is markedly faster than ndarray item access
     tasks = graph.tasks
-    owner = [t.owner for t in tasks]
+    owner = [t.owner for t in tasks] if owners_ovr is None else owners_ovr
     deps = [t.deps for t in tasks]
     succ = graph.successors()
     n_wait = [len(d) for d in deps]        # remaining-dependency counters
@@ -503,7 +609,8 @@ def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
             if not n_wait[h] and not queued[h]:
                 ready = t_exec               # == rank_free[r]
                 for d in deps[h]:
-                    arr = fin[d] + (comm if owner[d] != r else 0.0)
+                    arr = fin[d] + ((comm if owner[d] != r else 0.0)
+                                    if cm is None else cm[owner[d]][r])
                     if arr > ready:
                         ready = arr
                 queued[h] = True
@@ -514,7 +621,8 @@ def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
                 if per_rank[rs][ptr[rs]] == s:
                     ready = rank_free[rs]
                     for d in deps[s]:
-                        arr = fin[d] + (comm if owner[d] != rs else 0.0)
+                        arr = fin[d] + ((comm if owner[d] != rs else 0.0)
+                                        if cm is None else cm[owner[d]][rs])
                         if arr > ready:
                             ready = arr
                     queued[s] = True
@@ -545,7 +653,9 @@ def simulate(graph: TaskGraph, proc: ProcessorModel | MachineModel,
         for r in range(n_ranks)
     ]
     return Schedule(graph, proc, start_a, finish_a, cols,
-                    switch_count, switch_energy)
+                    switch_count, switch_energy,
+                    comm_energy_j=plan_comm_energy_j(graph, cost,
+                                                     owners_ovr))
 
 
 def simulate_reference(graph: TaskGraph, proc: ProcessorModel | MachineModel,
@@ -571,14 +681,22 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel | MachineModel,
         and switch counts; switch-energy sums agree to 1e-9).
     """
     n = len(graph.tasks)
-    comm = cost.comm_time(graph)
+    comm_val = cost.comm_cost(graph)
+    if isinstance(comm_val, np.ndarray):
+        comm, cm = 0.0, comm_val.tolist()    # per-pair link path
+    else:
+        comm, cm = comm_val, None            # legacy uniform path, verbatim
     machine = as_machine(proc)
     procs = machine.rank_procs(graph.n_ranks)
     start = np.zeros(n)
     finish = np.zeros(n)
     done = np.zeros(n, dtype=bool)
 
-    per_rank = graph.tasks_by_rank()
+    owners_ovr = _effective_owners(graph, plan)
+    per_rank = graph.tasks_by_rank() if owners_ovr is None \
+        else _owner_program_order(graph, owners_ovr)
+    own = [t.owner for t in graph.tasks] if owners_ovr is None \
+        else owners_ovr
     ptr = [0] * graph.n_ranks
     rank_free = [0.0] * graph.n_ranks
     rank_gear: list[Gear] = [p.gears[0] for p in procs]
@@ -601,7 +719,8 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel | MachineModel,
                 if not done[d]:
                     feasible = False
                     break
-                arr = finish[d] + (comm if graph.tasks[d].owner != r else 0.0)
+                arr = finish[d] + ((comm if own[d] != r else 0.0)
+                                   if cm is None else cm[own[d]][r])
                 ready = max(ready, arr)
             if feasible and ready < best_start:
                 best_rank, best_start = r, ready
@@ -679,5 +798,6 @@ def simulate_reference(graph: TaskGraph, proc: ProcessorModel | MachineModel,
                 switch_energy += procs[r].switch_energy_j(rank_gear[r], gear)
             segments[r].append(RankSegment(rank_free[r], makespan, gear, False))
 
-    return Schedule.from_rank_segments(graph, proc, start, finish, segments,
-                                       switch_count, switch_energy)
+    return Schedule.from_rank_segments(
+        graph, proc, start, finish, segments, switch_count, switch_energy,
+        comm_energy_j=plan_comm_energy_j(graph, cost, owners_ovr))

@@ -44,6 +44,14 @@ Built-in strategies:
                       conservative on panel-bound slack so a cost-model
                       error can never push the next panel start (the
                       up-switch is pre-armed instead).
+ * tx_migrate      -- TX plus task *migration* on heterogeneous machines
+                      (Costero et al.): candidate re-mappings move the
+                      heaviest update-class tasks off LITTLE ranks onto
+                      the least-loaded big ranks, each candidate is
+                      re-planned with the TX policy under its new owners,
+                      and one batched fleet pass (link transfer times and
+                      energies included) picks the cheapest mapping within
+                      `tx_migrate_slowdown_cap`; never worse than `tx`.
 
 All strategies other than `original` halt (lowest gear) during waits --
 communication slack handling is shared, as in the paper's experiments.
@@ -87,7 +95,7 @@ from .dvfs import (duration_at, two_gear_split_batch,
 from .energy_model import Gear, MachineModel, ProcessorModel, as_machine
 from .fleet import simulate_fleet
 from .scheduler import CostModel, Schedule, StrategyPlan, simulate
-from .tds import (GEAR_CLASS_NAMES, WAIT_PANEL, TdsResult,
+from .tds import (GEAR_CLASS_NAMES, GEAR_CLASS_UPDATE, WAIT_PANEL, TdsResult,
                   analyze_residual_tds, analyze_tds, task_gear_classes)
 
 # The four strategies the paper evaluates (fixed, used by the paper-table
@@ -156,6 +164,18 @@ class StrategyConfig:
     plan_search_rounds: int = 4
     plan_search_lanes: int = 192
     plan_search_seed: int = 0
+    # tx_migrate: makespan bound (fraction over baseline) a migrated
+    # mapping must honor, and the cap on how many update-class tasks the
+    # greedy mover may pull off LITTLE ranks (candidate mappings are
+    # doubling prefixes 1, 2, 4, ... of the move list, so the cap bounds
+    # the batched scoring pass, not a per-move loop).
+    tx_migrate_slowdown_cap: float = 0.005
+    tx_migrate_max_moves: int = 32
+    # tx_replan: also re-map (not just re-gear) pending tasks at each
+    # wave, scoring candidate migrations against the wave's makespan cap.
+    # Off by default: the False path is bit-identical to the pre-migration
+    # replan driver.
+    replan_migrate: bool = False
     # serving SLO (core/serving.py): absolute makespan deadline in
     # seconds. For a serving trace this is the latency cap -- the trace
     # horizon plus the per-request SLO -- and it tightens the relative
@@ -287,6 +307,28 @@ class PlanContext:
         ctx.__dict__["durations"] = np.asarray(durations, dtype=float)
         return ctx
 
+    def with_owners(self, owners: "Sequence[int]") -> "PlanContext":
+        """A sibling context whose tasks are remapped to `owners`.
+
+        The migration-planning primitive (`TxMigrateStrategy`, migrating
+        `tx_replan`): the returned context owns a *fresh* graph whose
+        tasks carry the new owners (dependencies unchanged), so its
+        baseline schedule, durations (each task timed at its NEW owner's
+        top gear), slack, and TDS analysis all see the candidate mapping
+        exactly as the engines would realize it. The original graph and
+        its caches are untouched. An engine-consumable plan built from
+        the returned context must still carry `task_owners=owners`,
+        because the engines execute the ORIGINAL graph plus the override.
+        """
+        owners = [int(o) for o in owners]
+        if len(owners) != self.n_tasks:
+            raise ValueError(f"owners has {len(owners)} entries for "
+                             f"{self.n_tasks} tasks")
+        tasks = [dataclasses.replace(t, owner=o, deps=list(t.deps))
+                 for t, o in zip(self.graph.tasks, owners)]
+        graph = dataclasses.replace(self.graph, tasks=tasks)
+        return PlanContext(graph, self.proc, self.cost, self.cfg)
+
     def restricted_to(self, tasks: "np.ndarray | Sequence[int]",
                       observed_finishes: np.ndarray) -> "ResidualPlanContext":
         """A residual view: plan only `tasks`, anchored on observed times.
@@ -358,14 +400,14 @@ class PlanContext:
         """Realized local slack on the baseline schedule."""
         base = self.baseline
         return schedule_slack(base.start, base.finish, self.graph,
-                              self.cost.comm_time(self.graph))
+                              self.cost.comm_cost(self.graph))
 
     @functools.cached_property
     def tds(self) -> TdsResult:
         """Task Dependency Set analysis over the baseline schedule."""
         base = self.baseline
         return analyze_tds(self.graph, base.start, base.finish,
-                           self.cost.comm_time(self.graph),
+                           self.cost.comm_cost(self.graph),
                            slack=self.slack)
 
     def makespan_cap(self, slowdown_frac: float) -> float:
@@ -481,7 +523,7 @@ class ResidualPlanContext(PlanContext):
         frozen tasks, top-gear predictions (at this context's durations)
         for pending ones."""
         return residual_schedule_times(
-            self.graph, self.durations, self.cost.comm_time(self.graph),
+            self.graph, self.durations, self.cost.comm_cost(self.graph),
             frozen=~self.pending, observed_finish=self.observed_finish)
 
     @functools.cached_property
@@ -489,7 +531,7 @@ class ResidualPlanContext(PlanContext):
         """Residual local slack (0.0 for frozen tasks)."""
         start, finish = self.hybrid_times
         return residual_schedule_slack(start, finish, self.graph,
-                                       self.cost.comm_time(self.graph),
+                                       self.cost.comm_cost(self.graph),
                                        pending=self.pending)
 
     @functools.cached_property
@@ -497,7 +539,7 @@ class ResidualPlanContext(PlanContext):
         """Residual TDS analysis (neutral entries for frozen tasks)."""
         start, finish = self.hybrid_times
         return analyze_residual_tds(self.graph, start, finish,
-                                    self.cost.comm_time(self.graph),
+                                    self.cost.comm_cost(self.graph),
                                     pending=self.pending, slack=self.slack)
 
 
@@ -908,6 +950,150 @@ class TxOnlineStrategy:
                             per_task_overhead=np.zeros(ctx.n_tasks),
                             hide_switch_in_wait=True,
                             rank_idle_gears=rank_idle)
+
+
+# -- migration machinery (tx_migrate; reused by the migrating tx_replan) ----
+
+def migration_mappings(ctx: PlanContext,
+                       movable: "np.ndarray | None" = None,
+                       max_moves: int | None = None) -> list[list[int]]:
+    """Candidate task->rank remappings: update work moved off LITTLE ranks.
+
+    The Costero-style migration heuristic. Big ranks are those whose
+    processor reaches the machine's highest top frequency; movable tasks
+    are frequency-sensitive (`beta > 0`, so gear-invariant pacing tasks
+    such as serving CLOCK ticks never move) update-class tasks owned by
+    slower ranks. The mover sorts movable tasks by descending top-gear
+    duration and greedily assigns each to the currently least-loaded big
+    rank (loads seeded with the work already mapped there; a moved task
+    contributes its duration rescaled to the big rank's frequency). The
+    returned candidates are doubling prefixes of that move list -- moving
+    the 1, 2, 4, ... heaviest tasks -- so a single batched fleet pass can
+    score every migration depth and pick the cheapest feasible one.
+
+    Parameters
+    ----------
+    ctx : PlanContext
+        Shared planning inputs on the TRUE machine.
+    movable : np.ndarray, optional
+        Boolean mask further restricting which tasks may move (the
+        migrating re-planner passes its pending mask; frozen tasks stay
+        put). Default: every task is eligible.
+    max_moves : int, optional
+        Cap on the move-list length (default
+        `ctx.cfg.tx_migrate_max_moves`).
+
+    Returns
+    -------
+    list of list of int
+        Full-length owner vectors, one per candidate mapping, ordered by
+        increasing migration depth. Empty on homogeneous machines or when
+        nothing is eligible to move.
+    """
+    if max_moves is None:
+        max_moves = ctx.cfg.tx_migrate_max_moves
+    procs = ctx.rank_procs
+    f = np.asarray([p.f_max for p in procs])
+    f_big = float(f.max())
+    little = f < f_big
+    if not little.any() or max_moves < 1:
+        return []
+    owner0 = [t.owner for t in ctx.graph.tasks]
+    d, betas, classes = ctx.durations, ctx.betas, ctx.gear_classes
+    movable_ids = [t.tid for t in ctx.graph.tasks
+                   if little[t.owner]
+                   and classes[t.tid] == GEAR_CLASS_UPDATE
+                   and betas[t.tid] > 0.0
+                   and (movable is None or movable[t.tid])]
+    if not movable_ids:
+        return []
+    movable_ids.sort(key=lambda tid: (-d[tid], tid))
+    # greedy least-loaded assignment over the big ranks
+    load = {r: 0.0 for r in np.flatnonzero(~little)}
+    for t in ctx.graph.tasks:
+        if t.owner in load:
+            load[t.owner] += float(d[t.tid])
+    moves: list[tuple[int, int]] = []
+    for tid in movable_ids[:max_moves]:
+        r = min(load, key=lambda k: (load[k], k))
+        b = float(betas[tid])
+        d_big = float(d[tid]) * (b * f[owner0[tid]] / f_big + (1.0 - b))
+        load[r] += d_big
+        moves.append((tid, int(r)))
+    mappings: list[list[int]] = []
+    k = 1
+    while True:
+        owners = list(owner0)
+        for tid, r in moves[:k]:
+            owners[tid] = r
+        mappings.append(owners)
+        if k >= len(moves):
+            return mappings
+        k = min(2 * k, len(moves))
+
+
+def migration_plans(ctx: PlanContext, name: str,
+                    mappings: "Sequence[Sequence[int]]") -> list[StrategyPlan]:
+    """TX plans realizing each candidate mapping, ready for fleet scoring.
+
+    Each mapping is planned through `tx_policy_segments` on a
+    `with_owners` sibling context -- so slack/TDS, gear ladders, and
+    durations are all referenced to the candidate's new owners -- and the
+    emitted plan carries `task_owners` so the engines execute that
+    mapping on the original graph.
+    """
+    plans = []
+    idle, rank_idle = ctx._idle_gears(-1)
+    for owners in mappings:
+        sub = ctx.with_owners(owners)
+        plans.append(StrategyPlan(
+            name, tx_policy_segments(sub), idle_gear=idle,
+            per_task_overhead=np.zeros(ctx.n_tasks),
+            hide_switch_in_wait=True, rank_idle_gears=rank_idle,
+            task_owners=list(owners)))
+    return plans
+
+
+@register_strategy
+class TxMigrateStrategy:
+    """TX plus task migration on heterogeneous machines (Costero et al.).
+
+    Re-gearing alone leaves energy on the table when the mapping itself is
+    wrong: a LITTLE rank stuck with heavy trailing updates binds the
+    schedule no matter what gears it runs. This strategy keeps the frozen
+    `tx` plan as its baseline candidate and additionally scores TX plans
+    for each `migration_mappings` candidate -- the 1, 2, 4, ... heaviest
+    movable update tasks pulled onto the least-loaded big ranks -- in ONE
+    batched fleet pass on the true machine (cross-rank transfer times and
+    link energies priced by the `CostModel`'s `LinkModel`). The cheapest
+    candidate within `tx_migrate_slowdown_cap` of the baseline makespan
+    wins; the frozen plan wins ties, so tx_migrate never loses to `tx`.
+    On a homogeneous machine there is nothing to migrate and the plan is
+    the frozen `tx` plan (renamed), bit-identically.
+    """
+
+    name = "tx_migrate"
+
+    def plan(self, ctx: PlanContext) -> StrategyPlan:
+        """Score frozen-mapping tx against candidate migrations, keep the
+        cheapest feasible."""
+        frozen = dataclasses.replace(get_strategy("tx").plan(ctx),
+                                     name=self.name)
+        if ctx.is_homogeneous:
+            return frozen
+        mappings = migration_mappings(ctx)
+        if not mappings:
+            return frozen
+        cands = [frozen] + migration_plans(ctx, self.name, mappings)
+        fleet = simulate_fleet(ctx.graph, ctx.proc, ctx.cost, cands)
+        energies, makespans = fleet.total_energy_j(), fleet.makespan
+        cap = ctx.makespan_cap(ctx.cfg.tx_migrate_slowdown_cap)
+        best = 0
+        for i in range(1, len(cands)):
+            # strict <: the frozen-mapping plan (lane 0) wins ties
+            if makespans[i] <= cap + 1e-12 and energies[i] < energies[best]:
+                best = i
+        return cands[best]
 
 
 def make_plan(name: str, graph: TaskGraph,

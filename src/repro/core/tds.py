@@ -57,7 +57,7 @@ import dataclasses
 
 import numpy as np
 
-from .critical_path import schedule_slack
+from .critical_path import _edge_delays, schedule_slack
 from .dag import PANEL_KINDS, TaskGraph
 
 # Wait / slack classes (int8 codes in the result arrays).
@@ -114,7 +114,7 @@ class TdsResult:
     """
 
     graph: TaskGraph
-    comm_time: float
+    comm_time: float | np.ndarray
     rank_ready: np.ndarray        # finish of the previous same-rank task (0 for rank heads)
     wait_s: np.ndarray            # start - rank_ready, clipped at 0
     wait_class: np.ndarray        # int8, WAIT_* code of the wait
@@ -164,8 +164,10 @@ def analyze_tds(graph: TaskGraph, start: np.ndarray, finish: np.ndarray,
         Per-task times of a baseline (usually top-gear) schedule;
         classification semantics assume ranks execute their tasks in
         program order, as both simulator engines do.
-    comm_time : float
-        Transfer delay charged on cross-rank dependency edges.
+    comm_time : float or np.ndarray
+        Transfer delay on cross-rank dependency edges: a uniform scalar,
+        or an (n_ranks, n_ranks) matrix from a nonuniform `LinkModel`
+        (`CostModel.comm_cost`; zero diagonal, local edges free).
     slack : np.ndarray, optional
         Lets a caller that already ran `schedule_slack` on this schedule
         (PlanContext) share it instead of recomputing.
@@ -182,7 +184,7 @@ def analyze_tds(graph: TaskGraph, start: np.ndarray, finish: np.ndarray,
     owner = np.asarray([t.owner for t in graph.tasks], dtype=np.int64)
     panel = _is_panel(graph)
     src, dst, cross = graph.dep_edge_arrays()
-    delay = np.where(cross, comm_time, 0.0)
+    delay = _edge_delays(graph, src, dst, cross, comm_time)
 
     # ---- waits: idle gap before each task ------------------------------
     rank_ready = np.zeros(n)
@@ -213,7 +215,10 @@ def analyze_tds(graph: TaskGraph, start: np.ndarray, finish: np.ndarray,
         # how long the producer kept computing after this rank went idle,
         # vs the wire time of the binding edge
         busy_after_idle = finish[b] - rank_ready[w]
-        edge_delay = np.where(owner[b] != owner[w], comm_time, 0.0)
+        if np.ndim(comm_time) == 0:
+            edge_delay = np.where(owner[b] != owner[w], comm_time, 0.0)
+        else:
+            edge_delay = np.asarray(comm_time)[owner[b], owner[w]]
         cls = np.where(busy_after_idle > edge_delay,
                        WAIT_IMBALANCE, WAIT_COMM).astype(np.int8)
         cls[panel_binds_wait[w]] = WAIT_PANEL
@@ -269,8 +274,9 @@ def analyze_residual_tds(graph: TaskGraph, start: np.ndarray,
     start, finish : np.ndarray
         Hybrid per-task times (see `residual_schedule_times`; frozen
         tasks' `start` entries are never read).
-    comm_time : float
-        Transfer delay charged on cross-rank dependency edges.
+    comm_time : float or np.ndarray
+        Transfer delay on cross-rank dependency edges (scalar or matrix,
+        as for `analyze_tds`).
     pending : np.ndarray, optional
         Boolean mask of not-yet-started tasks (default: all, in which
         case this is exactly `analyze_tds`).

@@ -191,6 +191,30 @@ def test_string_metrics_pass_through_ungated(tmp_path, capsys):
     assert "REGRESSIONS" not in capsys.readouterr().out
 
 
+def test_migrate_metrics_never_gate(tmp_path, capsys):
+    """Migration metrics are trajectory-only: any key containing
+    `migrate` -- the auto-emitted `*.tx_migrate.saved_pct` rows and the
+    sweep's `*.migrate_saved_vs_tx_pct` cells alike -- is reported as
+    drift but never fails the gate, even on a collapse that would trip
+    the generic saved-style rule."""
+    old = {**BASE, "heterogeneous": {
+        "bl_1_1.tx_migrate.saved_pct": 20.0,
+        "bl_1_1.bw5.migrate_saved_vs_tx_pct": 9.0,
+        "bl_1_1.bw5.migrate_n_moved": 8}}
+    new = {**BASE, "heterogeneous": {
+        "bl_1_1.tx_migrate.saved_pct": 2.0,
+        "bl_1_1.bw5.migrate_saved_vs_tx_pct": 0.0,
+        "bl_1_1.bw5.migrate_n_moved": 0}}
+    assert _run(tmp_path, old, new) == 0
+    out = capsys.readouterr().out
+    assert "REGRESSIONS" not in out
+    assert "drift (informational): " \
+           "heterogeneous.bl_1_1.tx_migrate.saved_pct" in out
+    # a NON-migrate saved metric regressing alongside still fails
+    new["energy_savings"] = {"cholesky.tx.saved_pct": 1.0}
+    assert _run(tmp_path, old, new) == 1
+
+
 def test_search_disagreement_fails(tmp_path):
     """A batched candidate diverging from the fast engine is a
     correctness failure, not a perf regression."""

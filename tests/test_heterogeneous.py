@@ -221,7 +221,8 @@ def test_rank_segments_resolve_per_rank_gear_tables():
 # ----------------------------------------------- heterogeneity-aware policy
 def test_plans_confined_to_owner_ladder():
     """Every strategy's segments and idle gears come from the owning
-    rank's own gear table."""
+    rank's own gear table -- the EFFECTIVE owner's when the plan carries
+    a `task_owners` migration override."""
     graph = build_dag("cholesky", 6, 256, (2, 2))
     machine = MachineModel("bl", (BIG, LITTLE, make_tpu_like(), BIG))
     procs = machine.rank_procs(graph.n_ranks)
@@ -231,7 +232,9 @@ def test_plans_confined_to_owner_ladder():
         for r, p in enumerate(procs):
             assert plan.idle_gear_for(r) in p.gears, (strategy, r)
         for t in graph.tasks:
-            table = procs[t.owner].gears
+            own = t.owner if plan.task_owners is None \
+                else plan.task_owners[t.tid]
+            table = procs[own].gears
             for gear, _ in plan.task_segments[t.tid]:
                 assert gear in table, (strategy, t.tid)
 

@@ -1,19 +1,33 @@
-"""Plan-feasibility property test (PR 7): over randomized factorization
-DAGs on homogeneous and big.LITTLE machines, EVERY registered strategy
-must emit plans whose gears -- task segments and per-rank idle gears
-alike -- come from the owning rank's own gear ladder (an asymmetric
-machine makes a foreign gear a real hazard: the engines would silently
-index another processor's power table), and the capped strategies
-(`plan_search`, `single_freq_opt`) must honor their slowdown caps on
-every draw, not just on the tuned benchmark cells.
+"""Plan-feasibility property test (PR 7, extended by PR 10): over
+randomized factorization DAGs on homogeneous and big.LITTLE machines,
+EVERY registered strategy must emit plans whose gears -- task segments and
+per-rank idle gears alike -- come from the owning rank's own gear ladder
+(an asymmetric machine makes a foreign gear a real hazard: the engines
+would silently index another processor's power table), and the capped
+strategies (`plan_search`, `single_freq_opt`, `tx_migrate`) must honor
+their slowdown caps on every draw, not just on the tuned benchmark cells.
+
+PR 10 migration properties: every `tx_migrate` / migrating `tx_replan`
+mapping stays within the machine's ranks and preserves dependency
+feasibility on the simulated timeline; a zero-cost `LinkModel` (uniform
+default bandwidth, zero transfer energy) reproduces today's plans
+bit-identically (the LinkModel no-op proof, mirroring
+`MachineModel.homogeneous`); and the tx_migrate outcome on a fixed
+big.LITTLE cell is pinned by tests/data/migrate_golden.json alongside
+strategy_golden.json.
 """
+
+import json
+import os
 
 import numpy as np
 import pytest
 
-from repro.core import (CostModel, PlanContext, StrategyConfig, build_dag,
-                        make_big_little, make_processor,
-                        registered_strategies, get_strategy, simulate)
+from repro.core import (CostModel, LinkModel, PlanContext, StrategyConfig,
+                        build_dag, make_big_little, make_processor,
+                        registered_strategies, get_strategy, simulate,
+                        simulate_reference)
+from repro.core.replan import replan_tx
 
 COST = CostModel()
 MACHINES = {
@@ -26,23 +40,52 @@ CFG = dict(cp_detect_overhead=0.0, monitor_overhead=0.0,
            tx_online_rel_err=0.0, plan_search_rounds=2,
            plan_search_lanes=64)
 CAPPED = {"plan_search": "plan_search_slowdown_cap",
-          "single_freq_opt": "single_freq_slowdown_cap"}
+          "single_freq_opt": "single_freq_slowdown_cap",
+          "tx_migrate": "tx_migrate_slowdown_cap"}
+
+MIGRATE_GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                              "migrate_golden.json")
 
 
-def _random_ctx(seed, machine):
+def _random_ctx(seed, machine, cost=COST, **over):
     rng = np.random.default_rng(seed)
     fact = rng.choice(["cholesky", "lu", "qr"])
     n_tiles = int(rng.integers(3, 9))
     tile = int(rng.choice([128, 256, 512]))
     grid = (int(rng.integers(1, 3)), int(rng.integers(1, 3)))
     return PlanContext(build_dag(fact, n_tiles, tile, grid),
-                       MACHINES[machine], COST, StrategyConfig(**CFG))
+                       MACHINES[machine], cost,
+                       StrategyConfig(**{**CFG, **over}))
 
 
 def _rank_ladders(ctx):
     """Per-rank set of (index, freq) pairs identifying that rank's gears."""
     return [{(g.index, g.freq_ghz) for g in p.gears}
             for p in ctx.rank_procs]
+
+
+def _effective_owner(ctx, plan, tid):
+    if plan.task_owners is None:
+        return ctx.graph.tasks[tid].owner
+    return plan.task_owners[tid]
+
+
+def _assert_dependency_feasible(ctx, plan, sched):
+    """Every dependency edge is honored on the simulated timeline: a task
+    starts no earlier than each producer's finish plus the cross-rank
+    transfer delay under the plan's EFFECTIVE mapping."""
+    comm = ctx.cost.comm_cost(ctx.graph)
+    cm = None if np.ndim(comm) == 0 else np.asarray(comm)
+    for t in ctx.graph.tasks:
+        own_t = _effective_owner(ctx, plan, t.tid)
+        for d in t.deps:
+            own_d = _effective_owner(ctx, plan, d)
+            if cm is None:
+                delay = comm if own_d != own_t else 0.0
+            else:
+                delay = float(cm[own_d, own_t])
+            assert sched.start[t.tid] >= sched.finish[d] + delay - 1e-12, \
+                (plan.name, t.tid, d)
 
 
 @pytest.mark.parametrize("machine", sorted(MACHINES))
@@ -53,9 +96,15 @@ def test_all_strategies_feasible_on_random_dags(seed, machine):
     n_ranks = ctx.graph.n_ranks
     for name in registered_strategies():
         plan = get_strategy(name).plan(ctx)
-        # every emitted segment gear belongs to the owner rank's ladder
+        # a migration override (if any) stays within the machine's ranks
+        # and covers every task exactly once
+        if plan.task_owners is not None:
+            assert len(plan.task_owners) == ctx.n_tasks, name
+            assert all(0 <= o < n_ranks for o in plan.task_owners), name
+        # every emitted segment gear belongs to the EFFECTIVE owner rank's
+        # ladder (the graph owner's unless the plan migrates the task)
         for tid, segs in enumerate(plan.task_segments):
-            ok = ladders[ctx.graph.tasks[tid].owner]
+            ok = ladders[_effective_owner(ctx, plan, tid)]
             for g, dt in segs:
                 assert (g.index, g.freq_ghz) in ok, (name, tid)
                 assert dt >= 0.0
@@ -70,3 +119,138 @@ def test_all_strategies_feasible_on_random_dags(seed, machine):
             sched = simulate(ctx.graph, ctx.proc, COST, plan)
             assert (sched.makespan
                     <= ctx.baseline.makespan * (1.0 + cap) + 1e-9), name
+
+
+# -------------------------------------------------- migration properties
+@pytest.mark.parametrize("seed", range(6))
+def test_migrating_replan_mappings_feasible(seed):
+    """The migrating wave driver's composite plan keeps a valid mapping,
+    honors every dependency edge on the simulated timeline, and never
+    exceeds the tx_migrate makespan cap by more than its non-migrating
+    twin does (migration candidates are only ever ACCEPTED under the
+    cap; the fallback is the frozen mapping)."""
+    ctx = _random_ctx(seed, "big_little")
+    cfg_m = StrategyConfig(**{**CFG, "replan_migrate": True})
+    ctx_m = PlanContext(ctx.graph, ctx.proc, ctx.cost, cfg_m)
+    out = replan_tx(ctx_m)
+    plan = out.plan
+    n_ranks = ctx.graph.n_ranks
+    if plan.task_owners is not None:
+        assert len(plan.task_owners) == ctx.n_tasks
+        assert all(0 <= o < n_ranks for o in plan.task_owners)
+    else:
+        assert all(w.n_migrated == 0 for w in out.waves)
+    sched = simulate(ctx.graph, ctx.proc, ctx.cost, plan)
+    _assert_dependency_feasible(ctx_m, plan, sched)
+    # exact three-engine agreement on the migrated composite
+    ref = simulate_reference(ctx.graph, ctx.proc, ctx.cost, plan)
+    assert np.array_equal(sched.start, ref.start)
+    assert np.array_equal(sched.finish, ref.finish)
+    # accepted migrations were gated on the cap; the fallback is the
+    # frozen-mapping driver, so the composite can never be slower than
+    # the worse of (cap, non-migrating tx_replan)
+    base = replan_tx(ctx).plan
+    s_base = simulate(ctx.graph, ctx.proc, ctx.cost, base)
+    cap = ctx.makespan_cap(cfg_m.tx_migrate_slowdown_cap)
+    assert sched.makespan <= max(cap, s_base.makespan) + 1e-9
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_tx_migrate_dependency_feasible(seed):
+    """tx_migrate's winning mapping honors every dependency edge."""
+    ctx = _random_ctx(seed, "big_little")
+    plan = get_strategy("tx_migrate").plan(ctx)
+    sched = simulate(ctx.graph, ctx.proc, ctx.cost, plan)
+    _assert_dependency_feasible(ctx, plan, sched)
+
+
+def test_tx_migrate_never_worse_than_tx():
+    """Ties break toward the frozen mapping, so tx_migrate's energy is
+    never above tx's on the same context."""
+    for seed in range(6):
+        ctx = _random_ctx(seed, "big_little")
+        e_tx = simulate(ctx.graph, ctx.proc, ctx.cost,
+                        get_strategy("tx").plan(ctx)).total_energy_j()
+        e_mig = simulate(ctx.graph, ctx.proc, ctx.cost,
+                         get_strategy("tx_migrate").plan(ctx)
+                         ).total_energy_j()
+        assert e_mig <= e_tx + 1e-9, seed
+
+
+# -------------------------------------------------- LinkModel no-op proof
+def _zero_cost_link():
+    """A non-trivial LinkModel that is numerically the legacy scalar: the
+    uniform default bandwidth on every pair, zero transfer energy."""
+    return LinkModel(name="zero_cost",
+                     pair_bandwidth_gbs=((COST.comm_bandwidth_gbs,),),
+                     pair_energy_per_byte_j=((0.0,),))
+
+
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+def test_zero_cost_link_is_bit_identical(machine):
+    """A LinkModel whose matrix equals the uniform scalar and whose
+    transfer energy is zero reproduces every strategy's schedule
+    bit-identically: same starts/finishes/switches, same total energy
+    (comm energy exactly 0.0)."""
+    cost_link = CostModel(link=_zero_cost_link())
+    assert not cost_link.link.is_trivial
+    for seed in (0, 3):
+        ctx = _random_ctx(seed, machine)
+        ctx_link = _random_ctx(seed, machine, cost=cost_link)
+        for name in registered_strategies():
+            a = simulate(ctx.graph, ctx.proc, COST,
+                         get_strategy(name).plan(ctx))
+            b = simulate(ctx_link.graph, ctx_link.proc, cost_link,
+                         get_strategy(name).plan(ctx_link))
+            assert np.array_equal(a.start, b.start), name
+            assert np.array_equal(a.finish, b.finish), name
+            assert a.switch_count == b.switch_count, name
+            assert b.comm_energy_j == 0.0, name
+            assert a.total_energy_j() == b.total_energy_j(), name
+
+
+# -------------------------------------------------- golden pin
+def _migrate_golden_ctx():
+    return PlanContext(build_dag("cholesky", 8, 256, (2, 2)),
+                       MACHINES["big_little"], COST,
+                       StrategyConfig(**CFG))
+
+
+def test_tx_migrate_matches_golden():
+    """tx_migrate on the fixed big.LITTLE cell is pinned: the winning
+    mapping, the number of migrated tasks, and the simulated outcome must
+    reproduce tests/data/migrate_golden.json (regenerate with
+    `python -m tests.test_plan_feasibility` after an intentional change)."""
+    with open(MIGRATE_GOLDEN) as f:
+        exp = json.load(f)
+    ctx = _migrate_golden_ctx()
+    plan = get_strategy("tx_migrate").plan(ctx)
+    sched = simulate(ctx.graph, ctx.proc, ctx.cost, plan)
+    owners = [t.owner for t in ctx.graph.tasks] \
+        if plan.task_owners is None else list(plan.task_owners)
+    moved = sum(1 for t, o in zip(ctx.graph.tasks, owners) if t.owner != o)
+    assert owners == exp["task_owners"]
+    assert moved == exp["n_moved"]
+    assert sched.switch_count == exp["switches"]
+    assert sched.makespan == pytest.approx(exp["makespan"], rel=1e-9)
+    assert sched.total_energy_j() == pytest.approx(exp["energy"], rel=1e-9)
+
+
+def _record_golden():
+    ctx = _migrate_golden_ctx()
+    plan = get_strategy("tx_migrate").plan(ctx)
+    sched = simulate(ctx.graph, ctx.proc, ctx.cost, plan)
+    owners = [t.owner for t in ctx.graph.tasks] \
+        if plan.task_owners is None else list(plan.task_owners)
+    moved = sum(1 for t, o in zip(ctx.graph.tasks, owners) if t.owner != o)
+    with open(MIGRATE_GOLDEN, "w") as f:
+        json.dump({"task_owners": owners, "n_moved": moved,
+                   "switches": sched.switch_count,
+                   "makespan": sched.makespan,
+                   "energy": sched.total_energy_j()}, f, indent=1)
+    print(f"recorded {MIGRATE_GOLDEN}: {moved} moved, "
+          f"makespan {sched.makespan}, energy {sched.total_energy_j()}")
+
+
+if __name__ == "__main__":
+    _record_golden()

@@ -46,8 +46,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import (CostModel, GEAR_TABLES, MachineModel, StrategyPlan,
-                        build_dag, make_processor, make_plan,
+import dataclasses
+
+from repro.core import (CostModel, GEAR_TABLES, LinkModel, MachineModel,
+                        StrategyPlan, build_dag, make_processor, make_plan,
                         registered_strategies, scale_processor, simulate,
                         simulate_fleet, simulate_reference)
 from repro.core.dag import Task, TaskGraph
@@ -268,6 +270,130 @@ def test_heterogeneous_segment_columns_bit_identical():
                 np.testing.assert_array_equal(x, y)
 
 
+# ------------------------------------------------------ nonuniform links
+def _random_link(rng) -> LinkModel:
+    """A random per-rank-pair LinkModel: asymmetric bandwidth and transfer
+    energy pattern tables (tiled over ranks), random shared latency."""
+    p = int(rng.integers(1, 4))
+    bw = rng.uniform(0.5, 20.0, (p, p))
+    en = rng.uniform(0.0, 5e-9, (p, p))
+    return LinkModel(name="random_link",
+                     pair_bandwidth_gbs=tuple(map(tuple, bw.tolist())),
+                     pair_energy_per_byte_j=tuple(map(tuple, en.tolist())),
+                     latency_s=float(rng.uniform(0.0, 2e-5)))
+
+
+def _random_owner_override(rng, graph):
+    """A random full task->rank remapping (exercises `task_owners`)."""
+    return [int(o) for o in rng.integers(0, graph.n_ranks,
+                                         len(graph.tasks))]
+
+
+# 4 seeds x every registered strategy on randomized nonuniform-link
+# machines: the comm matrix prices every cross-rank edge per rank pair,
+# so any engine disagreeing on a single edge gather goes red here.
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_nonuniform_link_strategies_differential(seed, strategy):
+    rng = np.random.default_rng(8000 + seed)
+    name, n_tiles, tile, grid, _ = _random_graph_params(rng)
+    graph = build_dag(name, n_tiles, tile, grid)
+    machine = _random_machine(rng, graph.n_ranks)
+    cost = CostModel(link=_random_link(rng))
+    plan = make_plan(strategy, graph, machine, cost)
+    fast = simulate(graph, machine, cost, plan)
+    ref = simulate_reference(graph, machine, cost, plan)
+    assert_schedules_match(fast, ref,
+                           f"link {name} T={n_tiles} {grid} {strategy}")
+    assert fast.comm_energy_j == ref.comm_energy_j
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_nonuniform_link_random_plans_differential(seed):
+    """Adversarial plans -- including random `task_owners` migration
+    overrides -- under random per-pair link matrices."""
+    rng = np.random.default_rng(8500 + seed)
+    name, n_tiles, tile, grid, _ = _random_graph_params(rng)
+    graph = build_dag(name, n_tiles, tile, grid)
+    machine = _random_machine(rng, graph.n_ranks)
+    cost = CostModel(link=_random_link(rng))
+    plan = _random_hetero_plan(rng, graph, machine, cost)
+    if rng.integers(2):
+        # remap randomly; segments keep gears of the ORIGINAL owners'
+        # ladders, which is engine-legal only when ladders coincide, so
+        # restrict the override to homogeneous random machines
+        machine = MachineModel("homog",
+                               (make_processor(PROCS[rng.integers(
+                                   len(PROCS))]),))
+        plan = _random_plan(rng, graph, machine.procs[0], cost)
+        plan = dataclasses.replace(
+            plan, task_owners=_random_owner_override(rng, graph))
+    fast = simulate(graph, machine, cost, plan)
+    ref = simulate_reference(graph, machine, cost, plan)
+    assert_schedules_match(fast, ref, f"link random plan seed={seed}")
+    assert fast.comm_energy_j == ref.comm_energy_j
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_nonuniform_link_synthetic_dags_differential(seed):
+    rng = np.random.default_rng(8800 + seed)
+    n_ranks = int(rng.choice([1, 2, 4, 8]))
+    graph = _random_dag(rng, n_tasks=int(rng.integers(20, 150)),
+                        n_ranks=n_ranks)
+    proc = make_processor(PROCS[rng.integers(len(PROCS))])
+    cost = CostModel(link=_random_link(rng))
+    plan = _random_plan(rng, graph, proc, cost)
+    if rng.integers(2):
+        plan = dataclasses.replace(
+            plan, task_owners=_random_owner_override(rng, graph))
+    fast = simulate(graph, proc, cost, plan)
+    ref = simulate_reference(graph, proc, cost, plan)
+    assert_schedules_match(fast, ref, f"link synthetic seed={seed}")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fleet_nonuniform_link_lanes_differential(seed):
+    """Fleet lanes under a random link matrix, mixing frozen-mapping plans
+    with `task_owners`-overridden lanes (different mappings per lane force
+    the fleet engine down its mapping-partition path); every lane must
+    match its own oracle run, wire energy included."""
+    rng = np.random.default_rng(9000 + seed)
+    name, n_tiles, tile, grid, proc_name = _random_graph_params(rng)
+    graph = build_dag(name, n_tiles, tile, grid)
+    proc = make_processor(proc_name)
+    cost = CostModel(link=_random_link(rng))
+    plans = [make_plan(s, graph, proc, cost)
+             for s in ("original", "race_to_halt", "tx")]
+    for _ in range(3):
+        plans.append(_random_plan(rng, graph, proc, cost))
+        plans.append(dataclasses.replace(
+            _random_plan(rng, graph, proc, cost),
+            task_owners=_random_owner_override(rng, graph)))
+    fleet = simulate_fleet(graph, proc, cost, plans)
+    assert fleet.comm_energy_j is not None
+    for i, plan in enumerate(plans):
+        ref = simulate_reference(graph, proc, cost, plan)
+        assert_fleet_lane_matches(fleet, i, ref,
+                                  f"link fleet seed={seed} lane={i}")
+        assert float(fleet.comm_energy_j[i]) == ref.comm_energy_j
+
+
+def test_task_owners_validation():
+    """Malformed migration overrides are rejected up front."""
+    graph = build_dag("cholesky", 3, 128, (1, 2))
+    proc = make_processor("arc_opteron_6128")
+    cost = CostModel()
+    plan = make_plan("original", graph, proc, cost)
+    with pytest.raises(ValueError, match="task_owners"):
+        simulate(graph, proc, cost,
+                 dataclasses.replace(plan, task_owners=[0]))
+    bad = [0] * len(graph.tasks)
+    bad[0] = graph.n_ranks
+    with pytest.raises(ValueError, match="task_owners"):
+        simulate(graph, proc, cost,
+                 dataclasses.replace(plan, task_owners=bad))
+
+
 # ------------------------------------------------------ edge cases
 def test_empty_graph():
     graph = TaskGraph("empty", 1, 128, (1, 1), [])
@@ -427,7 +553,7 @@ def test_registry_covers_legacy_and_tx():
     pins the minimum population they must cover."""
     for name in ("original", "race_to_halt", "cp_aware", "algorithmic", "tx",
                  "task_type_gears", "single_freq_opt", "tx_online",
-                 "tx_replan", "plan_search"):
+                 "tx_migrate", "tx_replan", "plan_search"):
         assert name in ALL_STRATEGIES
 
 
